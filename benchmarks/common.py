@@ -1,0 +1,86 @@
+"""Shared benchmark helpers: graph/stream setup, method registry, timing,
+CSV emission (`name,us_per_call,derived`)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    MTECPeriod,
+    RTECEngine,
+    RTECFull,
+    RTECSample,
+    RTECUER,
+    make_model,
+)
+from repro.graph import make_graph, make_stream
+from repro.graph.generators import random_features
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(line)
+    print(line, flush=True)
+
+
+def setup(
+    kind: str = "powerlaw",
+    n: int = 2000,
+    avg_degree: float = 8.0,
+    d: int = 16,
+    num_batches: int = 5,
+    batch_edges: int = 20,
+    delete_frac: float = 0.3,
+    seed: int = 0,
+):
+    g = make_graph(kind, n, avg_degree=avg_degree, seed=seed, weighted=True)
+    x, _ = random_features(n, d, seed=seed)
+    wl = make_stream(g, num_batches=num_batches, batch_edges=batch_edges,
+                     delete_frac=delete_frac, seed=seed + 1)
+    return g, x, wl
+
+
+def make_engine(method: str, model, params, base, x):
+    x = jnp.asarray(x)
+    if method == "inc":
+        return RTECEngine(model, params, base, x)
+    if method == "full":
+        return RTECFull(model, params, base, x)
+    if method == "uer":
+        return RTECUER(model, params, base, x)
+    if method.startswith("ns"):
+        return RTECSample(model, params, base, x, fanout=int(method[2:]))
+    if method == "period":
+        return MTECPeriod(model, params, base, x, period=5)
+    raise ValueError(method)
+
+
+def run_stream(engine, wl) -> Tuple[float, Dict[str, float]]:
+    """Apply all batches; returns (mean wall s/batch, aggregate counters)."""
+    agg = {"inc_edges": 0, "full_edges": 0, "vertices": 0,
+           "plan_s": 0.0, "exec_s": 0.0, "graph_s": 0.0}
+    times = []
+    for b in wl.batches:
+        t0 = time.perf_counter()
+        st = engine.apply_batch(b)
+        times.append(time.perf_counter() - t0)
+        agg["inc_edges"] += st.inc_edges
+        agg["full_edges"] += st.full_edges
+        agg["vertices"] += st.out_vertices
+        agg["plan_s"] += st.plan_time_s
+        agg["exec_s"] += st.exec_time_s
+        agg["graph_s"] += st.graph_time_s
+    # min over post-warmup batches: pow-2 capacity buckets retrace on growth,
+    # and a 3-batch mean would charge that compile time to the engine
+    t = np.min(times[1:]) if len(times) > 1 else times[0]
+    return float(t), agg
+
+
+def gnn_params(model, dims, seed=0):
+    return model.init_layers(jax.random.PRNGKey(seed), dims)

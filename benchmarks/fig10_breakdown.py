@@ -1,0 +1,29 @@
+"""Paper Fig. 10: large-graph (out-of-memory / offloaded) runtime and its
+breakdown: Upd+ASD (graph update + affected-subgraph detection), CGC
+(computation-graph construction = planning), Comp (device compute)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, gnn_params, make_engine, run_stream, setup
+from repro.core import make_model
+from repro.serve.offload import OffloadedRTECEngine
+
+
+def run(quick: bool = True):
+    n = 10000 if quick else 60000
+    g, x, wl = setup("powerlaw", n=n, avg_degree=10.0, num_batches=3, batch_edges=20)
+    for mname in ("gcn", "gat"):
+        model = make_model(mname)
+        params = gnn_params(model, [16, 16, 16])
+
+        eng = OffloadedRTECEngine(model, params, wl.base, x)
+        t, agg = run_stream(eng, wl)
+        total = agg["graph_s"] + agg["plan_s"] + agg["exec_s"]
+        emit(f"fig10/{mname}/offloaded_inc", t * 1e6,
+             f"UpdASD={agg['graph_s']/total:.0%}|CGC={agg['plan_s']/total:.0%}|Comp={agg['exec_s']/total:.0%}")
+        emit(f"fig10/{mname}/offload_rows_up", 0, str(eng.transfers.rows_up))
+
+        full = make_engine("full", model, params, wl.base, x)
+        tf, _ = run_stream(full, wl)
+        emit(f"fig10/{mname}/full", tf * 1e6, f"inc_speedup={tf/t:.1f}x")

@@ -1,0 +1,30 @@
+"""Paper Fig. 7: per-batch response time + throughput (edge updates/s)
+across six GNN models × methods, in-memory processing."""
+from __future__ import annotations
+
+from benchmarks.common import emit, gnn_params, make_engine, run_stream, setup
+from repro.core import make_model
+
+MODELS = ["gcn", "sage", "gin", "monet", "agnn", "gat"]
+METHODS = ["full", "ns10", "ns5", "uer", "inc"]
+
+
+def run(quick: bool = True):
+    n = 2000 if quick else 8000
+    g, x, wl = setup("powerlaw", n=n, avg_degree=8.0, num_batches=4, batch_edges=16)
+    upd_per_batch = wl.batches[0].num_updates
+    for mname in MODELS:
+        model = make_model(mname)
+        params = gnn_params(model, [16, 16, 16])
+        times = {}
+        for method in METHODS:
+            eng = make_engine(method, model, params, wl.base, x)
+            t, agg = run_stream(eng, wl)
+            times[method] = t
+            thpt = upd_per_batch / t
+            emit(f"fig7/{mname}/{method}", t * 1e6, f"{thpt:.0f}_upd_per_s")
+        for method in ("full", "uer", "ns10"):
+            emit(
+                f"fig7/{mname}/inc_speedup_vs_{method}", times["inc"] * 1e6,
+                f"{times[method] / times['inc']:.2f}x",
+            )

@@ -1,0 +1,43 @@
+"""§Roofline report: reads experiments/dryrun/<mode>/*.json (produced by
+`repro.launch.dryrun`) and emits the per-(arch × shape × mesh) roofline
+table plus dominant-term and useful-fraction summaries."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells(mode: str = "opt"):
+    out = []
+    d = DRYRUN_DIR / mode
+    if not d.exists():
+        return out
+    for f in sorted(d.glob("*.json")):
+        out.append(json.loads(f.read_text()))
+    return out
+
+
+def run(quick: bool = True, mode: str = "opt"):
+    cells = load_cells(mode)
+    if not cells:
+        emit(f"roofline/{mode}/missing", 0, "run repro.launch.dryrun first")
+        return
+    for c in cells:
+        tag = f"{c['arch']}/{c['shape']}/{c['mesh']}"
+        if "skipped" in c:
+            emit(f"roofline/{tag}", 0, "skipped:" + c["skipped"][:40])
+            continue
+        r = c["roofline"]
+        uf = c.get("model_flops", {}).get("useful_fraction")
+        ufs = f"{uf:.2f}" if uf is not None else "na"
+        emit(
+            f"roofline/{tag}",
+            r["bound_s"] * 1e6,
+            f"dom={r['dominant']}|c={r['compute_s']:.2e}|m={r['memory_s']:.2e}"
+            f"|n={r['collective_s']:.2e}|useful={ufs}"
+            f"|mem_gb={c['memory_analysis']['peak_est_gb']}",
+        )

@@ -1,0 +1,61 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig2,table4,...]
+
+Each module reproduces one paper artifact (DESIGN.md §8).  `--full` uses the
+larger graph sizes; default (quick) finishes on one CPU in minutes.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    fig2_edge_volume,
+    fig7_response_time,
+    fig8_access_volume,
+    fig10_breakdown,
+    fig12_sensitivity,
+    roofline,
+    table4_accuracy,
+    table5_degree,
+    table6_memory,
+)
+from benchmarks.common import emit
+
+MODULES = {
+    "fig2": fig2_edge_volume,
+    "table4": table4_accuracy,
+    "fig7": fig7_response_time,
+    "fig8": fig8_access_volume,
+    "fig10": fig10_breakdown,
+    "table5": table5_degree,
+    "table6": table6_memory,
+    "fig12": fig12_sensitivity,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument("--only", type=str, default="")
+    args = ap.parse_args()
+    names = [s for s in args.only.split(",") if s] or list(MODULES)
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.time()
+        try:
+            MODULES[name].run(quick=not args.full)
+            emit(f"{name}/_module_wall_s", (time.time() - t0) * 1e6, "ok")
+        except Exception as e:  # noqa
+            traceback.print_exc()
+            emit(f"{name}/_module_wall_s", (time.time() - t0) * 1e6, f"FAILED:{e}")
+            sys.exit(1) if False else None
+
+
+if __name__ == '__main__':
+    main()

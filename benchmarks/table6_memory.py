@@ -1,0 +1,25 @@
+"""Paper Table VI: state memory — Full (features only) vs Inc-Naive
+(h + a + nct) vs Inc with the recomputation-based storage optimization
+(a + nct only, h rebuilt on demand)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, gnn_params, setup
+from repro.core import RTECEngine, make_model
+
+
+def run(quick: bool = True):
+    n = 5000 if quick else 50000
+    g, x, wl = setup("powerlaw", n=n, avg_degree=8.0, num_batches=1, batch_edges=5)
+    model = make_model("gcn")
+    params = gnn_params(model, [16, 16, 16])
+    feats_only = x.nbytes
+
+    naive = RTECEngine(model, params, wl.base, jnp.asarray(x), store_h=True)
+    opt = RTECEngine(model, params, wl.base, jnp.asarray(x), store_h=False)
+    nb, ob = naive.state_bytes(), opt.state_bytes()
+    emit("table6/full_features_only_mb", 0, f"{feats_only/1e6:.2f}MB")
+    emit("table6/inc_naive_mb", 0, f"{nb/1e6:.2f}MB={nb/feats_only:.2f}x_feat")
+    emit("table6/inc_recompute_mb", 0, f"{ob/1e6:.2f}MB={ob/feats_only:.2f}x_feat")
+    emit("table6/recompute_saving", 0, f"{1-ob/nb:.1%}")

@@ -1,0 +1,33 @@
+"""Train a ~40M-param llama-family model for 200 steps with the
+full production substrate (AdamW+WSD, checkpointing, fault-tolerant runner).
+
+    PYTHONPATH=src python examples/lm_pretrain_smoke.py [--steps 300]
+"""
+import argparse
+import dataclasses
+
+from repro.configs import get_arch
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import TrainConfig, Trainer
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+args = ap.parse_args()
+
+# ~40M params (CPU-friendly): 8 layers, d=512, llama3-style;
+# scale d_model/num_layers up for the ~100M+ regime on real hardware
+cfg = dataclasses.replace(
+    get_arch("llama3.2-1b"),
+    num_layers=8, d_model=512, num_heads=8, num_kv_heads=4, head_dim=64,
+    d_ff=1536, vocab_size=32000, remat=False,
+    param_dtype="float32", compute_dtype="float32",
+)
+print(f"params ≈ {cfg.param_count()/1e6:.0f}M")
+t = Trainer(
+    cfg,
+    TrainConfig(steps=args.steps, batch=4, seq_len=128, log_every=20,
+                checkpoint_dir="/tmp/repro_lm_ckpt", checkpoint_every=100),
+    OptConfig(peak_lr=1e-3, warmup_steps=20, stable_steps=args.steps, decay_steps=20),
+)
+out = t.train()
+print(out)

@@ -1,0 +1,37 @@
+"""Quickstart: incremental RTEC on a streaming graph in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RTECEngine, RTECFull, full_forward, make_model
+from repro.graph import make_graph, make_stream
+from repro.graph.generators import random_features
+
+# 1. a streaming graph: power-law base + insert/delete batches
+graph = make_graph("powerlaw", n=2000, avg_degree=8, seed=0)
+x, _ = random_features(2000, d=32, seed=0)
+stream = make_stream(graph, num_batches=10, batch_edges=20, delete_frac=0.3)
+
+# 2. a GNN from the Table-II zoo, decoupled for incremental processing
+model = make_model("gat", heads=2)  # constrained model — hardest case
+params = model.init_layers(jax.random.PRNGKey(0), [32, 32, 32])
+
+# 3. the incremental engine vs naive full-neighbor recomputation
+inc = RTECEngine(model, params, stream.base, jnp.asarray(x))
+full = RTECFull(model, params, stream.base, jnp.asarray(x))
+
+for i, batch in enumerate(stream.batches):
+    s_inc = inc.apply_batch(batch)
+    s_full = full.apply_batch(batch)
+    print(
+        f"batch {i}: inc {s_inc.edges_processed:5d} edges in {s_inc.exec_time_s*1e3:6.1f}ms | "
+        f"full {s_full.edges_processed:6d} edges in {s_full.exec_time_s*1e3:6.1f}ms"
+    )
+
+# 4. equivalence: incremental == full-neighbor recomputation (Theorem 1)
+err = float(jnp.abs(inc.embeddings - full.embeddings).max())
+print(f"max |inc - full| = {err:.2e}  (Theorem-1 equivalence)")
+assert err < 1e-3

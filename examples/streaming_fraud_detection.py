@@ -1,0 +1,50 @@
+"""End-to-end serving scenario: real-time fraud scoring on a transaction
+stream (the paper's motivating application).
+
+A GraphSAGE encoder is trained on the historical transaction graph; at
+serving time, transaction batches arrive as edge insertions and the
+incremental engine refreshes account embeddings, which a scoring head
+converts to fraud probabilities.  ODEC answers point queries ("score these
+accounts NOW") from the query cone without committing state.
+
+    PYTHONPATH=src python examples/streaming_fraud_detection.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RTECEngine, full_forward, make_model, odec_query
+from repro.graph import make_graph, make_stream
+from repro.graph.generators import random_features
+
+N = 3000
+graph = make_graph("powerlaw", n=N, avg_degree=10, seed=1)
+x, _ = random_features(N, d=16, seed=1)
+stream = make_stream(graph, num_batches=8, batch_edges=25, delete_frac=0.1, seed=2)
+
+model = make_model("sage")
+params = model.init_layers(jax.random.PRNGKey(1), [16, 32, 16])
+w_score = jax.random.normal(jax.random.PRNGKey(2), (16, 1)) * 0.3
+
+engine = RTECEngine(model, params, stream.base, jnp.asarray(x))
+score = jax.jit(lambda h: jax.nn.sigmoid(h @ w_score)[:, 0])
+
+for i, batch in enumerate(stream.batches):
+    # point query BEFORE commit: score the accounts touched by this batch
+    accounts = batch.updated_vertices()[:8]
+    t0 = time.perf_counter()
+    emb_q, stats = odec_query(engine, batch, accounts)
+    q_ms = (time.perf_counter() - t0) * 1e3
+    risk = score(emb_q)
+    flagged = accounts[np.asarray(risk) > 0.5]
+    # asynchronous state commit
+    st = engine.apply_batch(batch)
+    print(
+        f"batch {i}: ODEC answered {len(accounts)} queries in {q_ms:5.1f}ms "
+        f"({stats.edges_processed} edges) | commit touched "
+        f"{st.out_vertices} vertices | flagged={list(flagged)[:4]}"
+    )
+
+print("final embedding norm:", float(jnp.linalg.norm(engine.embeddings)))

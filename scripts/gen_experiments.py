@@ -1,0 +1,184 @@
+"""Generate EXPERIMENTS.md from the dry-run JSONs + curated §Perf log.
+
+    PYTHONPATH=src python scripts/gen_experiments.py
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+DRY = ROOT / "experiments" / "dryrun"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "qwen2.5-3b", "granite-3-2b", "llama3.2-1b", "minicpm-2b", "xlstm-1.3b",
+    "seamless-m4t-large-v2", "pixtral-12b", "hymba-1.5b", "qwen3-moe-30b-a3b",
+    "moonshot-v1-16b-a3b", "gnn_rtec_inc", "gnn_rtec_inc_compact", "gnn_full_layer",
+]
+
+
+def load(mode):
+    cells = {}
+    d = DRY / mode
+    if not d.exists():
+        return cells
+    for f in sorted(d.glob("*.json")):
+        c = json.loads(f.read_text())
+        key = (c["arch"], c.get("shape", ""), c["mesh"])
+        cells[key] = c
+    return cells
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-4:
+        return f"{x*1e6:.1f}µs"
+    if x < 0.1:
+        return f"{x*1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def dryrun_table(cells):
+    lines = [
+        "| arch | shape | mesh | lower | compile | bytes/device (args+temp) | collectives |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER + [""]:
+            for mesh in ("16x16", "2x16x16"):
+                c = cells.get((a, s, mesh)) or (
+                    cells.get((a, next((k[1] for k in cells if k[0] == a), ""), mesh))
+                    if s == "" and a.startswith("gnn") else None
+                )
+                if c is None:
+                    continue
+                if "skipped" in c:
+                    lines.append(f"| {a} | {s} | {mesh} | — | — | skipped: {c['skipped'][:48]} | — |")
+                    continue
+                m = c["memory_analysis"]
+                gb = (m.get("argument_bytes_per_device", 0) + m.get("temp_bytes_per_device", 0)) / 1e9
+                counts = c["hlo_per_device"].get("collective_counts", {})
+                cc = " ".join(f"{k}:{v}" for k, v in sorted(counts.items()))
+                lines.append(
+                    f"| {a} | {c.get('shape','')} | {mesh} | {c.get('lower_s','—')}s | "
+                    f"{c.get('compile_s','—')}s | {gb:.2f} GB | {cc[:60]} |"
+                )
+            if s == "":
+                break
+    return "\n".join(lines)
+
+
+def roofline_table(cells, mode):
+    lines = [
+        "| arch | shape | mesh | compute | memory | collective | dominant | MODEL/HLO flops |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER + [""]:
+            for mesh in ("16x16",) if mode != "both" else ("16x16", "2x16x16"):
+                key = (a, s, mesh)
+                c = cells.get(key)
+                if c is None and s == "" and a.startswith("gnn"):
+                    c = next((v for k, v in cells.items() if k[0] == a and k[2] == mesh), None)
+                if c is None:
+                    continue
+                if "skipped" in c:
+                    lines.append(f"| {a} | {s} | {mesh} | — | — | — | skipped | — |")
+                    continue
+                r = c["roofline"]
+                uf = c.get("model_flops", {}).get("useful_fraction")
+                ufs = f"{uf:.2f}" if uf is not None else "—"
+                lines.append(
+                    f"| {a} | {c.get('shape','')} | {mesh} | {fmt_s(r['compute_s'])} | "
+                    f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+                    f"**{r['dominant']}** | {ufs} |"
+                )
+            if s == "":
+                break
+    return "\n".join(lines)
+
+
+def main():
+    opt = load("opt")
+    base = load("baseline")
+    perf_log = (ROOT / "scripts" / "perf_log.md").read_text()
+    repro_notes = (ROOT / "scripts" / "repro_notes.md").read_text()
+
+    out = f"""# EXPERIMENTS
+
+All numbers produced in this container (CPU host; TPU v5e is the *target*):
+dry-run = ``.lower().compile()`` against the production meshes with 512
+forced host devices; roofline terms derived from the compiled HLO
+(``src/repro/launch/hlo_analysis.py`` — see DESIGN.md §10 for the traffic
+model).  Hardware constants: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link
+ICI per chip.
+
+Reproduce:
+```
+PYTHONPATH=src python -m repro.launch.dryrun --all --mode opt      # LM cells
+PYTHONPATH=src python -m repro.launch.gnn_dryrun --mode opt        # GNN cells
+PYTHONPATH=src python scripts/gen_experiments.py                   # this file
+PYTHONPATH=src python -m benchmarks.run                            # paper artifacts
+```
+
+{repro_notes}
+
+## Memory-fit note
+
+``memory_analysis`` numbers come from XLA:CPU's buffer assignment of the
+512-way-partitioned program.  Serving/decode cells and the compact GNN cell
+fit v5e HBM (<16 GB/device) outright.  Train/prefill cells report larger
+*temp* figures because the CPU pipeline (a) materializes attention
+score/prob buffers that the TPU deployment streams through VMEM via the
+Pallas flash kernel (we bound them with 2k-query chunking, e.g. minicpm
+prefill 657 GB → 68 GB, but CPU buffer assignment still keeps per-layer
+buffers live that TPU's assigner aliases), and (b) does not alias
+loop-carried remat buffers.  The deployment working set is
+args (params+opt, exact per-device bytes in the table) + layer residuals
+(L·B_local·S·d_model·2B ≈ 0.3–2.7 GB across the train cells) + the flash
+working set — within 16 GB for every cell; the flash-adjusted HBM-traffic
+column in §Roofline reflects the same model.
+
+## §Dry-run — multi-pod lower+compile (mode=opt)
+
+Every (architecture × shape) cell compiles for BOTH the single-pod 16×16
+mesh (256 chips) and the 2×16×16 multi-pod mesh (512 chips; "pod" axis
+shards DP).  ``long_500k`` runs for the sub-quadratic archs (xlstm, hymba)
+and is skipped for pure full-attention archs per the assignment.
+Serving cells shard params TP-only; training cells FSDP(+pod)×TP with
+ZeRO-1 optimizer sharding.  GNN cells: the paper's technique at
+V=67M/E=1B scale (see §Perf).
+
+{dryrun_table(opt)}
+
+## §Roofline — per-device terms, single-pod mesh (mode=opt)
+
+`compute = HLO_FLOPs/(chips×197e12)`, `memory = HBM_bytes/(chips×819e9)`
+(train/prefill memory uses the flash-adjusted bytes — attention matrices
+stream through VMEM on TPU), `collective = wire_bytes/(chips×50e9)` with
+ring-algorithm factors per op.  `MODEL/HLO` = 6·N_active·D ÷ total compiled
+FLOPs (useful-compute fraction; <1 ⇔ remat/attention/capacity overheads).
+
+{roofline_table(opt, "single")}
+
+### Baseline (paper-faithful naive port, no activation-sharding constraints)
+
+The `baseline` mode lowers the same programs WITHOUT the explicit activation
+sharding constraints — XLA propagation alone — and was captured at
+iteration 0 of the code (before grouped-GQA decode and chunked-prefill
+attention landed), i.e. it is the honest "naive JAX port" starting point
+of §Perf.
+
+{roofline_table(base, "single")}
+
+{perf_log}
+"""
+    (ROOT / "EXPERIMENTS.md").write_text(out)
+    print(f"wrote EXPERIMENTS.md ({len(out)} chars) from {len(opt)}+{len(base)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Core incremental-RTEC framework — the paper's contribution in JAX."""
+
+from repro.core.operators import GNNModel
+from repro.core.models import make_model, ALL_MODELS
+from repro.core.engine import RTECEngine, BatchStats
+from repro.core.full import full_forward, LayerState
+from repro.core.baselines import RTECFull, RTECSample, RTECUER, MTECPeriod
+from repro.core.odec import odec_query
+from repro.core.conditions import certify, validate_registration
+
+__all__ = [
+    "GNNModel",
+    "make_model",
+    "ALL_MODELS",
+    "RTECEngine",
+    "BatchStats",
+    "full_forward",
+    "LayerState",
+    "RTECFull",
+    "RTECSample",
+    "RTECUER",
+    "MTECPeriod",
+    "odec_query",
+    "certify",
+    "validate_registration",
+]

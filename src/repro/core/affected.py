@@ -1,0 +1,319 @@
+"""Affected-subgraph construction — paper Alg. 4, host side.
+
+Per layer, classifies work into:
+
+  * **incremental records** — signed per-edge delta contributions
+    (insert → (+, new side), delete → (−, old side), changed source /
+    changed structural context → a (−, old) / (+, new) pair), consumed by
+    the device-side Alg.-1 kernel; and
+  * **full-recompute vertices** — for constrained (destination-dependent)
+    models, vertices whose previous-layer embedding changed and that still
+    have in-edges must be fully recomputed over their complete new
+    in-neighborhood (paper Alg. 4 lines 5–7).  Incremental records targeting
+    these vertices are suppressed to avoid double counting.
+
+All index arrays are padded to power-of-two buckets (``next_bucket``) so the
+device functions re-trace only O(log) times over a stream.  Padded gather
+indices point at a scratch row (index n) and padded scatter rows at the
+capacity slot, so they can never alias live data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.full import next_bucket
+from repro.core.operators import GNNModel
+from repro.graph.csr import CSRGraph
+from repro.graph.streaming import UpdateBatch
+
+
+@dataclasses.dataclass
+class LayerPlan:
+    # --- incremental signed records (padded to e_cap) ---
+    e_src: np.ndarray  # int32 [Ecap], pad → n (scratch)
+    e_dst: np.ndarray  # int32 [Ecap], pad → n
+    e_rowidx: np.ndarray  # int32 [Ecap] index into touch_rows, pad → r_cap
+    e_sign: np.ndarray  # float32 [Ecap]
+    e_use_new: np.ndarray  # bool [Ecap]
+    e_w: np.ndarray  # float32
+    e_t: np.ndarray  # int32
+    e_mask: np.ndarray  # bool
+    # --- rows whose aggregation state is updated incrementally ---
+    touch_rows: np.ndarray  # int32 [Rcap], pad → n
+    touch_mask: np.ndarray  # bool
+    # --- constrained full-recompute path ---
+    f_rows: np.ndarray  # int32 [Fcap], pad → n
+    f_mask: np.ndarray
+    f_src: np.ndarray  # int32 [FEcap], pad → n
+    f_rowidx: np.ndarray  # int32 [FEcap] into f_rows, pad → f_cap
+    f_w: np.ndarray
+    f_t: np.ndarray
+    f_emask: np.ndarray
+    # --- rows whose h^l changes ---
+    out_rows: np.ndarray  # int32 [Ocap], pad → n
+    out_mask: np.ndarray
+    # --- accounting (paper Figs. 2/8/11 metrics) ---
+    n_inc_edges: int = 0
+    n_full_edges: int = 0
+    n_touch_rows: int = 0
+    n_full_rows: int = 0
+    n_out_rows: int = 0
+    n_src_accessed: int = 0
+
+    @property
+    def shape_key(self) -> Tuple[int, ...]:
+        return (
+            self.e_src.shape[0],
+            self.touch_rows.shape[0],
+            self.f_rows.shape[0],
+            self.f_src.shape[0],
+            self.out_rows.shape[0],
+        )
+
+
+@dataclasses.dataclass
+class BatchPlan:
+    layers: List[LayerPlan]
+    deg_old: np.ndarray  # float32 [n+1] (scratch slot appended)
+    deg_new: np.ndarray
+    changed0: np.ndarray  # vertices with feature updates
+
+    def total_inc_edges(self) -> int:
+        return sum(p.n_inc_edges for p in self.layers)
+
+    def total_full_edges(self) -> int:
+        return sum(p.n_full_edges for p in self.layers)
+
+    def total_vertices(self) -> int:
+        return sum(p.n_out_rows for p in self.layers)
+
+
+def _lookup_in_edge_data(g: CSRGraph, src: np.ndarray, dst: np.ndarray):
+    """Vectorized (weight, etype) lookup for existing edges (u, v)."""
+    w = np.empty(src.shape[0], np.float32)
+    t = np.empty(src.shape[0], np.int32)
+    for i, (u, v) in enumerate(zip(src, dst)):
+        nbrs, ws, ts = g.in_edge_data(int(v))
+        j = np.searchsorted(nbrs, u)
+        assert j < nbrs.shape[0] and nbrs[j] == u, f"edge ({u},{v}) missing"
+        w[i] = ws[j]
+        t[i] = ts[j]
+    return w, t
+
+
+def _pad_records(
+    n: int,
+    src: np.ndarray,
+    dst: np.ndarray,
+    sign: np.ndarray,
+    use_new: np.ndarray,
+    w: np.ndarray,
+    t: np.ndarray,
+) -> Tuple[np.ndarray, ...]:
+    e = src.shape[0]
+    e_cap = next_bucket(e)
+    rows, rowinv = np.unique(dst, return_inverse=True) if e else (np.zeros(0, np.int64), np.zeros(0, np.int64))
+    r_cap = next_bucket(rows.shape[0])
+
+    def pad(a, cap, fill, dt):
+        out = np.full(cap, fill, dtype=dt)
+        out[: a.shape[0]] = a
+        return out
+
+    return (
+        pad(src, e_cap, n, np.int32),
+        pad(dst, e_cap, n, np.int32),
+        pad(rowinv, e_cap, r_cap, np.int32),
+        pad(sign, e_cap, 0.0, np.float32),
+        pad(use_new, e_cap, False, bool),
+        pad(w, e_cap, 0.0, np.float32),
+        pad(t, e_cap, 0, np.int32),
+        pad(np.ones(e, bool), e_cap, False, bool),
+        pad(rows, r_cap, n, np.int32),
+        pad(np.ones(rows.shape[0], bool), r_cap, False, bool),
+    )
+
+
+def build_plan(
+    model: GNNModel,
+    g_old: CSRGraph,
+    g_new: CSRGraph,
+    batch: UpdateBatch,
+    num_layers: int,
+    restrict: Optional[List[set]] = None,
+) -> BatchPlan:
+    """Build per-layer incremental plans.
+
+    ``restrict`` (ODEC, paper §V-D): optional per-layer vertex sets; layer
+    l's work is intersected with ``restrict[l]`` (the query-induced K-hop
+    cone), turning RTEC into on-demand embedding computation."""
+    n = g_old.n
+    deg_old = g_old.in_degree().astype(np.float32)
+    deg_new = g_new.in_degree().astype(np.float32)
+    deg_changed = np.nonzero(deg_old != deg_new)[0]
+
+    ins_s = np.asarray(batch.ins_src, np.int64)
+    ins_d = np.asarray(batch.ins_dst, np.int64)
+    ins_w = (
+        np.asarray(batch.ins_weights, np.float32)
+        if batch.ins_weights is not None
+        else np.ones(ins_s.shape[0], np.float32)
+    )
+    ins_t = (
+        np.asarray(batch.ins_etypes, np.int32)
+        if batch.ins_etypes is not None
+        else np.zeros(ins_s.shape[0], np.int32)
+    )
+    del_s = np.asarray(batch.del_src, np.int64)
+    del_d = np.asarray(batch.del_dst, np.int64)
+    if del_s.size:
+        del_w, del_t = _lookup_in_edge_data(g_old, del_s, del_d)
+    else:
+        del_w = np.zeros(0, np.float32)
+        del_t = np.zeros(0, np.int32)
+    inserted_keys = set(zip(ins_s.tolist(), ins_d.tolist()))
+
+    changed0 = (
+        np.asarray(batch.feat_vertices, np.int64)
+        if batch.feat_vertices is not None
+        else np.zeros(0, np.int64)
+    )
+    changed_h = changed0  # vertices whose h^{l-1} changed
+    deg_new_int = g_new.in_degree()
+
+    plans: List[LayerPlan] = []
+    for layer_idx in range(num_layers):
+        allowed = restrict[layer_idx] if restrict is not None else None
+        changed_set = set(changed_h.tolist())
+        # sources whose outgoing contributions changed
+        c_src = set(changed_set)
+        if model.src_struct_dependent:
+            c_src |= set(deg_changed.tolist())
+        # constrained full-recompute destinations
+        if model.dest_dependent:
+            v_full = np.array(
+                sorted(
+                    v
+                    for v in changed_set
+                    if deg_new_int[v] > 0 and (allowed is None or v in allowed)
+                ),
+                np.int64,
+            )
+        else:
+            v_full = np.zeros(0, np.int64)
+        v_full_set = set(v_full.tolist())
+
+        # ---- incremental records ----
+        rs, rd, rsign, rnew, rw, rt = [], [], [], [], [], []
+        n_changed_edges = 0
+
+        def _emit(s, d, sign, usenew, w, t):
+            rs.append(s)
+            rd.append(d)
+            rsign.append(sign)
+            rnew.append(usenew)
+            rw.append(w)
+            rt.append(t)
+
+        def _allowed(d: int) -> bool:
+            return allowed is None or d in allowed
+
+        for i in range(ins_s.shape[0]):
+            if int(ins_d[i]) not in v_full_set and _allowed(int(ins_d[i])):
+                _emit(ins_s[i], ins_d[i], 1.0, True, ins_w[i], ins_t[i])
+        for i in range(del_s.shape[0]):
+            if int(del_d[i]) not in v_full_set and _allowed(int(del_d[i])):
+                _emit(del_s[i], del_d[i], -1.0, False, del_w[i], del_t[i])
+        for u in sorted(c_src):
+            nbrs, ws, ts = g_new.out_edge_data(int(u))
+            for j in range(nbrs.shape[0]):
+                d = int(nbrs[j])
+                if (int(u), d) in inserted_keys or d in v_full_set or not _allowed(d):
+                    continue
+                _emit(u, d, -1.0, False, ws[j], ts[j])
+                _emit(u, d, 1.0, True, ws[j], ts[j])
+                n_changed_edges += 1
+
+        rec = _pad_records(
+            n,
+            np.array(rs, np.int64),
+            np.array(rd, np.int64),
+            np.array(rsign, np.float32),
+            np.array(rnew, bool),
+            np.array(rw, np.float32),
+            np.array(rt, np.int32),
+        )
+        (e_src, e_dst, e_rowidx, e_sign, e_use_new, e_w, e_t, e_mask, touch_rows, touch_mask) = rec
+
+        # ---- constrained full path ----
+        f_srcs, f_ridx, f_ws, f_ts = [], [], [], []
+        for ri, v in enumerate(v_full):
+            nbrs, ws, ts = g_new.in_edge_data(int(v))
+            f_srcs.extend(nbrs.tolist())
+            f_ridx.extend([ri] * nbrs.shape[0])
+            f_ws.extend(ws.tolist())
+            f_ts.extend(ts.tolist())
+        f_cap = next_bucket(v_full.shape[0])
+        fe_cap = next_bucket(len(f_srcs))
+
+        def padv(a, cap, fill, dt):
+            out = np.full(cap, fill, dtype=dt)
+            out[: len(a)] = a
+            return out
+
+        f_rows = padv(v_full, f_cap, n, np.int32)
+        f_mask = padv(np.ones(v_full.shape[0], bool), f_cap, False, bool)
+        f_src = padv(f_srcs, fe_cap, n, np.int32)
+        f_rowidx = padv(f_ridx, fe_cap, f_cap, np.int32)
+        f_w = padv(f_ws, fe_cap, 0.0, np.float32)
+        f_t = padv(f_ts, fe_cap, 0, np.int32)
+        f_emask = padv(np.ones(len(f_srcs), bool), fe_cap, False, bool)
+
+        # ---- output rows ----
+        out_set = set(touch_rows[touch_mask].tolist()) | v_full_set
+        if model.update_uses_h:
+            out_set |= changed_set if allowed is None else (changed_set & allowed)
+        out = np.array(sorted(out_set), np.int64)
+        o_cap = next_bucket(out.shape[0])
+        out_rows = padv(out, o_cap, n, np.int32)
+        out_mask = padv(np.ones(out.shape[0], bool), o_cap, False, bool)
+
+        n_inc = ins_s.shape[0] + del_s.shape[0] + n_changed_edges
+        srcs_accessed = len(set(rs) | set(f_srcs))
+        plans.append(
+            LayerPlan(
+                e_src=e_src,
+                e_dst=e_dst,
+                e_rowidx=e_rowidx,
+                e_sign=e_sign,
+                e_use_new=e_use_new,
+                e_w=e_w,
+                e_t=e_t,
+                e_mask=e_mask,
+                touch_rows=touch_rows,
+                touch_mask=touch_mask,
+                f_rows=f_rows,
+                f_mask=f_mask,
+                f_src=f_src,
+                f_rowidx=f_rowidx,
+                f_w=f_w,
+                f_t=f_t,
+                f_emask=f_emask,
+                out_rows=out_rows,
+                out_mask=out_mask,
+                n_inc_edges=n_inc,
+                n_full_edges=len(f_srcs),
+                n_touch_rows=int(touch_mask.sum()),
+                n_full_rows=int(v_full.shape[0]),
+                n_out_rows=int(out.shape[0]),
+                n_src_accessed=srcs_accessed,
+            )
+        )
+        changed_h = out
+
+    deg_old_x = np.concatenate([deg_old, np.zeros(1, np.float32)])
+    deg_new_x = np.concatenate([deg_new, np.zeros(1, np.float32)])
+    return BatchPlan(layers=plans, deg_old=deg_old_x, deg_new=deg_new_x, changed0=changed0)

@@ -1,0 +1,131 @@
+"""Theorem-1 applicability-condition prober (the paper's LLM+SMT verifier,
+re-realized as a randomized numerical certifier — DESIGN.md §3).
+
+For a candidate decoupled model it certifies, over randomized inputs:
+
+  (C1) nbr_ctx associativity — holds by construction here (signed-sum form),
+       so we instead check that ctx contributions are well-defined/finite;
+  (C2) aggregate associativity — sum, by construction; checked for
+       permutation invariance and splits;
+  (C3) distributivity of ms_cbn over aggregate:
+       ms_cbn(z, x + y) == ms_cbn(z, x) + ms_cbn(z, y);
+  (C4) invertibility: ms_cbn_inv(z, ms_cbn(z, x)) == x;
+  (C5) destination independence of ms_local (unless the model declares
+       ``dest_dependent``, which routes it to constrained processing).
+
+``certify`` is used as a registration gate: the engine refuses models whose
+declared flags contradict the probes (e.g. an undeclared destination
+dependence would silently corrupt reuse — exactly the failure mode the
+paper's SMT check guards against).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.operators import GNNModel
+
+
+@dataclasses.dataclass
+class ConditionReport:
+    distributive: bool
+    invertible: bool
+    aggregate_assoc: bool
+    dest_independent: bool
+    struct_independent: bool
+    max_err: Dict[str, float]
+
+    @property
+    def incrementalizable(self) -> bool:
+        return self.distributive and self.invertible and self.aggregate_assoc
+
+
+def certify(
+    model: GNNModel,
+    d_in: int = 8,
+    d_out: int = 8,
+    trials: int = 8,
+    seed: int = 0,
+    tol: float = 1e-4,
+) -> ConditionReport:
+    key = jax.random.PRNGKey(seed)
+    kp, key = jax.random.split(key)
+    p = model.init_params(kp, d_in, d_out)
+    agg = model.agg_dim(d_in, d_out)
+    ctxd = model.ctx_dim(d_in, d_out)
+    errs = {"distributive": 0.0, "invertible": 0.0, "agg_assoc": 0.0, "dest": 0.0, "struct": 0.0}
+
+    dest_indep = True
+    struct_indep = True
+    for t in range(trials):
+        key, k1, k2, k3, k4, k5 = jax.random.split(key, 6)
+        # positive context (counts / attention sums are positive by nature)
+        z = jax.random.uniform(k1, (4, ctxd), minval=0.5, maxval=5.0)
+        x = jax.random.normal(k2, (4, agg))
+        y = jax.random.normal(k3, (4, agg))
+        # C3 distributivity
+        lhs = model.ms_cbn(p, z, x + y)
+        rhs = model.ms_cbn(p, z, x) + model.ms_cbn(p, z, y)
+        errs["distributive"] = max(errs["distributive"], float(jnp.abs(lhs - rhs).max()))
+        # C4 invertibility
+        back = model.ms_cbn_inv(p, z, model.ms_cbn(p, z, x))
+        errs["invertible"] = max(errs["invertible"], float(jnp.abs(back - x).max()))
+        # C2 aggregate associativity: sum over permuted splits
+        xs = jax.random.normal(k4, (6, agg))
+        s1 = xs.sum(0)
+        perm = jax.random.permutation(k5, 6)
+        s2 = xs[perm[:3]].sum(0) + xs[perm[3:]].sum(0)
+        errs["agg_assoc"] = max(errs["agg_assoc"], float(jnp.abs(s1 - s2).max()))
+        # C5 destination / structural independence of ms_local
+        key, ka, kb, kc = jax.random.split(key, 4)
+        hu = jax.random.normal(ka, (4, d_in))
+        hv1 = jax.random.normal(kb, (4, d_in))
+        hv2 = jax.random.normal(kc, (4, d_in))
+        su = jnp.abs(jax.random.normal(ka, (4,))) * 3
+        sv = jnp.abs(jax.random.normal(kb, (4,))) * 3
+        ew = jnp.ones((4,))
+        et = jnp.zeros((4,), jnp.int32)
+        m1 = model.ms_local(p, hu, hv1, su, sv, ew, et)
+        m2 = model.ms_local(p, hu, hv2, su, sv, ew, et)
+        d_err = float(jnp.abs(m1 - m2).max())
+        errs["dest"] = max(errs["dest"], d_err)
+        if d_err > tol:
+            dest_indep = False
+        m3 = model.ms_local(p, hu, hv1, su + 1.0, sv, ew, et)
+        s_err = float(jnp.abs(m1 - m3).max())
+        errs["struct"] = max(errs["struct"], s_err)
+        if s_err > tol:
+            struct_indep = False
+
+    return ConditionReport(
+        distributive=errs["distributive"] < tol,
+        invertible=errs["invertible"] < tol,
+        aggregate_assoc=errs["agg_assoc"] < tol,
+        dest_independent=dest_indep,
+        struct_independent=struct_indep,
+        max_err=errs,
+    )
+
+
+def validate_registration(model: GNNModel, **kw) -> ConditionReport:
+    """Raise if the model's declared flags contradict the numeric probes."""
+    rep = certify(model, **kw)
+    if not rep.incrementalizable:
+        raise ValueError(
+            f"model {model.name!r} fails Theorem-1 conditions: {rep.max_err}"
+        )
+    if not rep.dest_independent and not model.dest_dependent:
+        raise ValueError(
+            f"model {model.name!r} has destination-dependent ms_local but does "
+            f"not declare dest_dependent — unsafe for incremental reuse"
+        )
+    if not rep.struct_independent and not model.src_struct_dependent:
+        raise ValueError(
+            f"model {model.name!r} reads source structure in ms_local but does "
+            f"not declare src_struct_dependent"
+        )
+    return rep

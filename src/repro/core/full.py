@@ -1,0 +1,150 @@
+"""Full-neighbor RTEC reference (paper Eq. 5–9 / Alg. 2 generalized).
+
+This is (a) the from-scratch oracle against which incremental RTEC is proven
+equivalent, (b) the compute core of the RTEC-Full / RTEC-UER / MTEC-Period
+baselines, and (c) the padded-subset layer used for the constrained-model
+full-recompute path.
+
+All functions are pure and jittable; edge arrays may be padded (mask=False
+rows contribute nothing).  Scatter targets use a scratch row at index ``n``
+so padded indices never alias real vertices.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.operators import GNNModel, Params
+
+
+class LayerState(NamedTuple):
+    """Cached per-layer results (the paper's 'historical results')."""
+
+    a: jax.Array  # [N, agg_dim]  aggregated (context-applied) neighbor state
+    nct: jax.Array  # [N, ctx_dim]  neighborhood context
+    h: jax.Array  # [N, d_out]   layer output embedding
+
+
+def edge_messages(
+    model: GNNModel,
+    p: Params,
+    h_src: jax.Array,
+    h_dst: jax.Array,
+    s_src: jax.Array,
+    s_dst: jax.Array,
+    ew: jax.Array,
+    et: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-edge (ctx_contrib, raw_term) under the decoupled abstraction."""
+    mlc = model.ms_local(p, h_src, h_dst, s_src, s_dst, ew, et)
+    ctx = model.ctx_contrib(p, mlc, et)
+    z = model.f_nn(p, h_src, et)
+    raw = model.edge_term(p, mlc, z, et)
+    return ctx, raw
+
+
+def full_layer(
+    model: GNNModel,
+    p: Params,
+    h: jax.Array,  # [N, d_in] previous-layer embeddings
+    src: jax.Array,  # [E] (padded ok; padded entries must index n)
+    dst: jax.Array,  # [E]
+    ew: jax.Array,
+    et: jax.Array,
+    mask: jax.Array,  # [E] bool
+    deg: jax.Array,  # [N] float in-degrees of the *current* graph
+    n: int,
+) -> LayerState:
+    """One full-neighbor layer over (possibly padded) edge arrays."""
+    hs = h[src]
+    if model.dest_dependent:
+        hd = h[dst]
+    else:  # Theorem-1 unconstrained: ms_local ignores h_v — skip the gather
+        hd = jnp.zeros((src.shape[0], h.shape[1]), h.dtype)
+    ss = deg[src]
+    sd = deg[dst]
+    ctx, raw = edge_messages(model, p, hs, hd, ss, sd, ew, et)
+    m = mask.astype(raw.dtype)
+    ctx = ctx * m[:, None]
+    raw = raw * m[:, None]
+    nct = jax.ops.segment_sum(ctx, dst, num_segments=n + 1)[:n]
+    s = jax.ops.segment_sum(raw, dst, num_segments=n + 1)[:n]
+    a = model.ms_cbn(p, nct, s)
+    h_out = model.update(p, h, a)
+    return LayerState(a=a, nct=nct, h=h_out)
+
+
+@partial(jax.jit, static_argnums=(0, 7))
+def _full_forward_jit(model, params_tuple, x, src, dst, ew, et, n, deg):
+    h = x
+    states = []
+    mask = jnp.ones(src.shape[0], dtype=bool)
+    for p in params_tuple:
+        st = full_layer(model, p, h, src, dst, ew, et, mask, deg, n)
+        states.append(st)
+        h = st.h
+    return states
+
+
+def full_forward(
+    model: GNNModel,
+    params: Sequence[Params],
+    x: jax.Array,
+    graph,
+) -> List[LayerState]:
+    """From-scratch L-layer forward over a CSRGraph snapshot."""
+    src_np, dst_np, w_np, t_np = graph.edges_by_dst()
+    deg = jnp.asarray(graph.in_degree(), jnp.float32)
+    src = jnp.asarray(src_np, jnp.int32)
+    dst = jnp.asarray(dst_np, jnp.int32)
+    ew = jnp.asarray(w_np, jnp.float32)
+    et = jnp.asarray(t_np, jnp.int32)
+    return _full_forward_jit(model, tuple(params), x, src, dst, ew, et, graph.n, deg)
+
+
+def subset_layer(
+    model: GNNModel,
+    p: Params,
+    h_prev: jax.Array,  # [N, d_in]   (mixed cached/new)
+    rows: jax.Array,  # [R]  vertex ids to (re)compute (padded with n)
+    rows_mask: jax.Array,  # [R]
+    e_src: jax.Array,  # [E] sources (padded)
+    e_rowidx: jax.Array,  # [E] index into rows (padded → R scratch row)
+    e_w: jax.Array,
+    e_t: jax.Array,
+    e_mask: jax.Array,
+    deg: jax.Array,  # [N+1] float degrees with scratch slot
+    r_cap: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-neighbor recompute restricted to a padded vertex subset.
+
+    Returns (a_rows [R, agg], nct_rows [R, C], h_rows [R, d_out])."""
+    hs = h_prev[e_src]
+    hd = h_prev[rows][e_rowidx]
+    ss = deg[e_src]
+    sd = deg[rows][e_rowidx]
+    ctx, raw = edge_messages(model, p, hs, hd, ss, sd, e_w, e_t)
+    m = e_mask.astype(raw.dtype)
+    ctx = ctx * m[:, None]
+    raw = raw * m[:, None]
+    nct = jax.ops.segment_sum(ctx, e_rowidx, num_segments=r_cap + 1)[:r_cap]
+    s = jax.ops.segment_sum(raw, e_rowidx, num_segments=r_cap + 1)[:r_cap]
+    a = model.ms_cbn(p, nct, s)
+    h_rows = model.update(p, h_prev[rows], a)
+    return a, nct, h_rows
+
+
+def pad_to(arr: np.ndarray, cap: int, fill) -> np.ndarray:
+    out = np.full((cap,) + arr.shape[1:], fill, dtype=arr.dtype)
+    out[: arr.shape[0]] = arr
+    return out
+
+
+def next_bucket(x: int, minimum: int = 16) -> int:
+    """Power-of-two capacity bucketing to bound recompilation."""
+    c = max(minimum, int(x))
+    return 1 << int(np.ceil(np.log2(c))) if c > 0 else minimum

@@ -1,0 +1,118 @@
+"""Fine-grained operator decoupling for incremental RTEC (paper §IV-A).
+
+A GNN layer is decomposed into (Eq. 5–9):
+
+    mlc_uv = ms_local(h_u, h_v, s_u, s_v, w_uv, t_uv)        # edge-wise
+    nct_v  = Σ_{u∈N(v)} ctx_contrib(mlc_uv)                  # nbr_ctx (assoc.)
+    a_v    = ms_cbn(nct_v, Σ_{u∈N(v)} mlc_uv ⊙ f_nn(h_u))    # distributive
+    h_v    = update(h_v, a_v)                                # vertex-wise
+
+compared with the paper's notation, ``nbr_ctx`` is expressed as a *signed
+sum* of per-edge contributions (``ctx_contrib``) — this is exactly the
+associative+invertible form required by Theorem 1 conditions (1)–(2), and
+covers ``count()`` (contrib = 1), GAT's attention sum (contrib = mlc) and
+per-relation counts/sums.  ``ms_cbn`` must be distributive over the sum
+(condition 3) and invertible in its second argument (condition 4); both are
+numerically certified by :mod:`repro.core.conditions`.
+
+``edge_term`` composes ``mlc ⊙ f_nn(h_u)`` — kept as one hook so models with
+structured messages (multi-head, per-relation blocks) control the layout of
+the aggregation state ``a``.
+
+Structural inputs: ``s_u``/``s_v`` are per-vertex structural scalars (the
+in-degree), needed by GCN-style normalization where the *source* degree
+participates in the local message.  Models that read them must set
+``src_struct_dependent`` so the planner widens the affected-edge set when
+degrees change (paper §III-C: "degree normalization ... changes dynamically").
+
+Models whose ``ms_local`` reads the destination embedding (GAT, A-GNN, G-GCN,
+RGAT) must set ``dest_dependent``; the engine then falls back to
+full-neighborhood recomputation for destination-affected vertices (paper
+§IV-C, "constrained incremental processing").
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+class GNNModel:
+    """Base class. Subclasses define the decoupled operators of Table II."""
+
+    name: str = "base"
+    dest_dependent: bool = False
+    src_struct_dependent: bool = False
+    update_uses_h: bool = False
+    has_ctx: bool = True  # False → nbr_ctx ≡ 1 (Table II rows with nct = 1)
+
+    # ------------------------------------------------------------------ #
+    # shapes
+    # ------------------------------------------------------------------ #
+    def agg_dim(self, d_in: int, d_out: int) -> int:
+        """Dimensionality of the aggregation state a_v for a (d_in→d_out) layer."""
+        return d_in
+
+    def ctx_dim(self, d_in: int, d_out: int) -> int:
+        """Dimensionality of the neighborhood context nct_v."""
+        return 1
+
+    # ------------------------------------------------------------------ #
+    # parameters
+    # ------------------------------------------------------------------ #
+    def init_params(self, key: jax.Array, d_in: int, d_out: int) -> Params:
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------ #
+    # decoupled operators — all operate on batched edge/vertex arrays
+    # ------------------------------------------------------------------ #
+    def ms_local(self, p: Params, h_u, h_v, s_u, s_v, ew, et):
+        """Edge-wise local message. [E, ...]"""
+        raise NotImplementedError
+
+    def ctx_contrib(self, p: Params, mlc, et):
+        """Per-edge contribution to nbr_ctx; summed (signed) by the engine.
+
+        Returns [E, C].  Default: count()."""
+        e = mlc.shape[0]
+        return jnp.ones((e, 1), dtype=jnp.float32)
+
+    def f_nn(self, p: Params, h_u, et):
+        """Source-feature transform. [E, ...]"""
+        return h_u
+
+    def edge_term(self, p: Params, mlc, z, et):
+        """mlc ⊙ f_nn(h_u) → raw per-edge aggregation contribution [E, agg_dim]."""
+        raise NotImplementedError
+
+    def ms_cbn(self, p: Params, nct, x):
+        """Apply neighborhood context to (aggregated) messages. Distributive."""
+        return x
+
+    def ms_cbn_inv(self, p: Params, nct, x):
+        """Inverse of ms_cbn in x (condition 4)."""
+        return x
+
+    def update(self, p: Params, h_v, a_v):
+        """Vertex-wise update producing h_v^l. [V, d_out]"""
+        raise NotImplementedError
+
+    # ------------------------------------------------------------------ #
+    # convenience
+    # ------------------------------------------------------------------ #
+    def init_layers(
+        self, key: jax.Array, dims: Sequence[int]
+    ) -> List[Params]:
+        keys = jax.random.split(key, len(dims) - 1)
+        return [
+            self.init_params(k, dims[i], dims[i + 1]) for i, k in enumerate(keys)
+        ]
+
+
+def glorot(key, shape, scale: float = 1.0):
+    fan_in, fan_out = shape[-2], shape[-1]
+    s = scale * jnp.sqrt(2.0 / (fan_in + fan_out))
+    return jax.random.normal(key, shape, dtype=jnp.float32) * s

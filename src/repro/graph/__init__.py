@@ -1,0 +1,19 @@
+"""Streaming-graph substrate: static CSR snapshots, PMA-backed dynamic CSR,
+synthetic generators, and update-stream workloads."""
+
+from repro.graph.csr import CSRGraph
+from repro.graph.pma import PMAGraph
+from repro.graph.streaming import EdgeUpdate, UpdateBatch, StreamWorkload, make_stream
+from repro.graph.generators import barabasi_albert, erdos_renyi, make_graph
+
+__all__ = [
+    "CSRGraph",
+    "PMAGraph",
+    "EdgeUpdate",
+    "UpdateBatch",
+    "StreamWorkload",
+    "make_stream",
+    "barabasi_albert",
+    "erdos_renyi",
+    "make_graph",
+]

@@ -1,0 +1,66 @@
+"""GAT edge-softmax normalization (Pallas TPU).
+
+Phase 2 of the decoupled softmax (paper Alg. 2 line 5): given raw exp-scores
+per edge and the per-destination attention sums (phase 1 = `segment_spmm`),
+produce normalized scores.  The per-edge gather of its destination's sum is
+realized as the *transpose* one-hot MXU matmul:
+
+    sums_per_edge[BE, H] = onehotᵀ[BE, TV] @ sums_tile[TV, H]
+
+so the irregular gather again becomes systolic-array work, and the division
+fuses into the same kernel pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(block_rows_ref, dloc_ref, scores_ref, sums_ref, out_ref):
+    dloc = dloc_ref[...].reshape(-1)  # [BE]
+    tv = sums_ref.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (dloc.shape[0], tv), 1)
+    onehot_t = (cols == dloc[:, None]).astype(jnp.float32)  # [BE, TV]
+    sums_tile = sums_ref[...].astype(jnp.float32)  # [TV, H]
+    denom = jnp.dot(onehot_t, sums_tile, preferred_element_type=jnp.float32)
+    scores = scores_ref[...].astype(jnp.float32)
+    live = denom > 1e-10
+    out = jnp.where(live, scores / jnp.where(live, denom, 1.0), 0.0)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tv", "be", "bh", "interpret"))
+def edge_softmax_normalize(
+    scores: jax.Array,  # [E_pad, H_pad] raw exp-scores, block-aligned layout
+    dst_local: jax.Array,  # [E_pad] int32 (-1 padding)
+    block_rows: jax.Array,  # [NB] int32
+    sums: jax.Array,  # [rows_pad, H_pad] per-destination attention sums
+    tv: int = 8,
+    be: int = 512,
+    bh: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    e_pad, h = scores.shape
+    nb = e_pad // be
+    nh = h // bh
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nh, nb),
+        in_specs=[
+            pl.BlockSpec((be, 1), lambda j, i, br: (i, 0)),
+            pl.BlockSpec((be, bh), lambda j, i, br: (i, j)),
+            pl.BlockSpec((tv, bh), lambda j, i, br: (br[i], j)),
+        ],
+        out_specs=pl.BlockSpec((be, bh), lambda j, i, br: (i, j)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(scores.shape, scores.dtype),
+        interpret=interpret,
+        name="edge_softmax_normalize",
+    )(block_rows, dst_local[:, None], scores, sums)

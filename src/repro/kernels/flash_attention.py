@@ -1,0 +1,121 @@
+"""Blockwise streaming-softmax attention (Pallas TPU).
+
+Used by the LM model zoo (training / prefill paths) — causal and
+sliding-window variants with fp32 streaming-softmax state in VMEM scratch.
+
+Schedule: grid = (B*H, Q_blocks, K_blocks), K fastest.  Per (b, q) the
+running (max m, denom l, accumulator acc) live in VMEM scratch and are
+finalized on the last K block.  Masked K blocks are computed-and-masked
+(correctness first; the §Perf log covers skipping them via a banded grid).
+
+v5e sizing: BQ=BK=512, D=128 → q/k/v blocks 3×256 KiB, acc 256 KiB fp32,
+all ≪ VMEM.  MXU dims (512×128 @ 128×512) are lane/sublane aligned.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, causal, window, q_offset, bq, bk, num_kb):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # [BQ, D]
+    k = k_ref[0].astype(jnp.float32)  # [BK, D]
+    v = v_ref[0].astype(jnp.float32)  # [BK, D]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [BQ, BK]
+
+    qb = pl.program_id(1)
+    qpos = qb * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]  # [BQ, 1]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(kb == num_kb - 1)
+    def _():
+        l = l_ref[...]
+        safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # [B, H, Sq, D]
+    k: jax.Array,  # [B, H, Sk, D]  (kv heads pre-broadcast by wrapper)
+    v: jax.Array,  # [B, H, Sk, D]
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    bq: int = 512,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    nq, nk = sq // bq, sk // bk
+    bh = b * h
+    qf = q.reshape(bh, sq, d)
+    kf = k.reshape(bh, sk, d)
+    vf = v.reshape(bh, sk, d)
+    kernel = functools.partial(
+        _kernel,
+        scale=1.0 / (d**0.5),
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        bq=bq,
+        bk=bk,
+        num_kb=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bhi, qi, ki: (bhi, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda bhi, qi, ki: (bhi, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bhi, qi, ki: (bhi, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bhi, qi, ki: (bhi, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        interpret=interpret,
+        name="flash_attention",
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,174 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op (a) prepares the block-aligned layout on the host, (b) dispatches to
+the Pallas kernel on TPU (or ``interpret=True`` when forced), and (c) falls
+back to the pure-jnp oracle on CPU by default — interpret-mode Pallas is a
+correctness tool, not a fast path, so production CPU execution uses XLA.
+
+Set ``repro.kernels.ops.FORCE_PALLAS_INTERPRET = True`` (tests do) to route
+through the kernels in interpret mode.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as kref
+from repro.kernels.delta_agg import delta_agg as _delta_agg_kernel
+from repro.kernels.edge_softmax import edge_softmax_normalize as _esm_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.segment_spmm import prepare_block_csr, segment_spmm as _spmm_kernel
+
+FORCE_PALLAS_INTERPRET = False
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_kernels() -> bool:
+    return _on_tpu() or FORCE_PALLAS_INTERPRET
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+def _pad_dim(x: jax.Array, mult: int, axis: int = 1) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _permute_messages(messages: jax.Array, perm: np.ndarray) -> jax.Array:
+    """Gather messages into block layout; perm -1 → zero row."""
+    safe = jnp.asarray(np.where(perm >= 0, perm, 0), jnp.int32)
+    gathered = messages[safe]
+    return gathered * jnp.asarray(perm >= 0, messages.dtype)[:, None]
+
+
+def segment_sum_edges(
+    messages: jax.Array,  # [E, D] (dst-sorted, -1-padded tail allowed)
+    dst: np.ndarray,  # [E] int (host, sorted; -1 padding)
+    num_rows: int,
+    tv: int = 8,
+    be: int = 512,
+    bd: int = 128,
+) -> jax.Array:
+    """out[v] = Σ_{dst[e]=v} messages[e] — the aggregation hot spot."""
+    if not _use_kernels():
+        return kref.segment_spmm_ref(messages, jnp.asarray(dst, jnp.int32), num_rows)
+    perm, dloc, brows, _ = prepare_block_csr(dst, num_rows, tv, be)
+    msg = _permute_messages(messages, perm)
+    msg = _pad_dim(msg, bd)
+    out = _spmm_kernel(
+        msg,
+        jnp.asarray(dloc),
+        jnp.asarray(brows),
+        num_rows,
+        tv=tv,
+        be=be,
+        bd=bd,
+        interpret=_interpret(),
+    )
+    # zero-fill row tiles never visited by an edge block (DESIGN.md §7)
+    rows_pad = out.shape[0]
+    visited = np.zeros(rows_pad // tv, bool)
+    visited[np.unique(brows)] = True
+    vmask = jnp.asarray(np.repeat(visited, tv))
+    out = jnp.where(vmask[:, None], out, 0.0)
+    return out[:num_rows, : messages.shape[1]]
+
+
+def delta_agg_update(
+    state: jax.Array,  # [V, D]
+    messages: jax.Array,  # [E, D] signed deltas (dst-sorted)
+    dst: np.ndarray,  # [E] int (host, sorted; -1 padding)
+    tv: int = 8,
+    be: int = 512,
+    bd: int = 128,
+) -> jax.Array:
+    """state[dst[e]] += messages[e], touching only affected row tiles."""
+    if not _use_kernels():
+        return kref.delta_agg_ref(state, messages, jnp.asarray(dst, jnp.int32))
+    num_rows, d = state.shape
+    perm, dloc, brows, _ = prepare_block_csr(dst, num_rows, tv, be)
+    msg = _permute_messages(messages, perm)
+    msg = _pad_dim(msg, bd)
+    state_p = _pad_dim(_pad_dim(state, bd, axis=1), tv, axis=0)
+    out = _delta_agg_kernel(
+        msg,
+        jnp.asarray(dloc),
+        jnp.asarray(brows),
+        state_p,
+        tv=tv,
+        be=be,
+        bd=bd,
+        interpret=_interpret(),
+    )
+    return out[:num_rows, :d]
+
+
+def edge_softmax(
+    scores: jax.Array,  # [E, H] raw exp-scores (dst-sorted)
+    dst: np.ndarray,  # [E] int (host, sorted; -1 padding)
+    num_rows: int,
+    tv: int = 8,
+    be: int = 512,
+    bh: int = 128,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (normalized scores [E, H], attention sums [num_rows, H])."""
+    if not _use_kernels():
+        return kref.edge_softmax_ref(scores, jnp.asarray(dst, jnp.int32), num_rows)
+    h = scores.shape[1]
+    perm, dloc, brows, _ = prepare_block_csr(dst, num_rows, tv, be)
+    sc = _permute_messages(scores, perm)
+    sc = _pad_dim(sc, bh)
+    sums_p = _spmm_kernel(
+        sc, jnp.asarray(dloc), jnp.asarray(brows), num_rows,
+        tv=tv, be=be, bd=bh, interpret=_interpret(),
+    )
+    rows_pad = sums_p.shape[0]
+    visited = np.zeros(rows_pad // tv, bool)
+    visited[np.unique(brows)] = True
+    vmask = jnp.asarray(np.repeat(visited, tv))
+    sums_p = jnp.where(vmask[:, None], sums_p, 0.0)
+    normed = _esm_kernel(
+        sc, jnp.asarray(dloc), jnp.asarray(brows), sums_p,
+        tv=tv, be=be, bh=bh, interpret=_interpret(),
+    )
+    # un-permute back to the caller's edge order
+    e = scores.shape[0]
+    out = jnp.zeros((e, h), scores.dtype)
+    live = perm >= 0
+    out = out.at[jnp.asarray(perm[live])].set(normed[np.nonzero(live)[0], :h])
+    return out, sums_p[:num_rows, :h]
+
+
+def flash_attention(
+    q: jax.Array,  # [B, Hq, Sq, D]
+    k: jax.Array,  # [B, Hkv, Sk, D]
+    v: jax.Array,  # [B, Hkv, Sk, D]
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    bq: int = 512,
+    bk: int = 512,
+) -> jax.Array:
+    """GQA flash attention; broadcasts kv heads to q heads for the kernel."""
+    if not _use_kernels():
+        return kref.flash_attention_ref(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    g = q.shape[1] // k.shape[1]
+    if g > 1:
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    return _flash_kernel(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        bq=bq, bk=bk, interpret=_interpret(),
+    )

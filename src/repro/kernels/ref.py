@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+Each function is the semantic ground truth used by tests
+(`assert_allclose` across shape/dtype sweeps) and by the CPU fallback in
+:mod:`repro.kernels.ops`.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_spmm_ref(messages: jax.Array, dst: jax.Array, num_rows: int) -> jax.Array:
+    """Sum messages[e] into out[dst[e]]; dst may contain -1 (padding → dropped).
+
+    messages: [E, D] float; dst: [E] int32; returns [num_rows, D].
+    """
+    valid = dst >= 0
+    seg = jnp.where(valid, dst, num_rows)
+    out = jax.ops.segment_sum(
+        messages * valid[:, None].astype(messages.dtype), seg, num_segments=num_rows + 1
+    )
+    return out[:num_rows].astype(messages.dtype)
+
+
+def delta_agg_ref(
+    state: jax.Array, messages: jax.Array, dst: jax.Array
+) -> jax.Array:
+    """state[dst[e]] += messages[e] (signed deltas; -1 padding dropped)."""
+    delta = segment_spmm_ref(messages, dst, state.shape[0])
+    return state + delta.astype(state.dtype)
+
+
+def edge_softmax_ref(
+    scores: jax.Array, dst: jax.Array, num_rows: int
+) -> Tuple[jax.Array, jax.Array]:
+    """GAT edge softmax over raw exp-scores grouped by destination.
+
+    scores: [E, H] raw exp(logits) (the paper keeps raw exp sums — Alg. 3);
+    returns (normalized [E, H], per-row sums [num_rows, H])."""
+    sums = segment_spmm_ref(scores, dst, num_rows)
+    safe = jnp.where(dst >= 0, dst, 0)
+    denom = sums[safe]
+    out = jnp.where(denom > 1e-10, scores / jnp.where(denom > 1e-10, denom, 1.0), 0.0)
+    return out.astype(scores.dtype), sums
+
+
+def flash_attention_ref(
+    q: jax.Array,  # [B, H, Sq, D]
+    k: jax.Array,  # [B, Hkv, Sk, D]
+    v: jax.Array,  # [B, Hkv, Sk, D]
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Reference attention with GQA head-group broadcast, causal masking and
+    optional sliding window.  q_offset: absolute position of q[...,0,:]
+    (decode: q_offset = kv_len - q_len)."""
+    b, h, sq, d = q.shape
+    hkv = k.shape[1]
+    sk = k.shape[2]
+    g = h // hkv
+    # grouped-GQA einsum (no kv-head repeat — preserves KV sharding; §Perf)
+    # native-dtype operands + f32 accumulation: casting bf16 K/V to f32
+    # materializes full-cache copies (measured 38 GB/device at 32k prefill)
+    qf = q.reshape(b, hkv, g, sq, d).astype(k.dtype)
+    kf = k
+    vf = v
+
+    def _attend(q_chunk, off):
+        qc = q_chunk.shape[3]
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", q_chunk, kf,
+                            preferred_element_type=jnp.float32) / jnp.sqrt(d)
+        qpos = off + jnp.arange(qc)[:, None]
+        kpos = jnp.arange(sk)[None, :]
+        m = jnp.ones((qc, sk), bool)
+        if causal:
+            m &= kpos <= qpos
+        if window is not None:
+            m &= kpos > qpos - window
+        logits = jnp.where(m[None, None, None], logits, -jnp.inf)
+        probs = jax.nn.softmax(logits, axis=-1)
+        probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+        return jnp.einsum("bhgqk,bhkd->bhgqd", probs.astype(vf.dtype), vf,
+                          preferred_element_type=jnp.float32)
+
+    CHUNK = 2048
+    if sq > CHUNK and sq % CHUNK == 0:
+        # long prefill: bound the probs buffer to [.., CHUNK, Sk] — the
+        # XLA-side stand-in for the flash kernel's VMEM streaming
+        nb = sq // CHUNK
+        qb = jnp.moveaxis(qf.reshape(b, hkv, g, nb, CHUNK, d), 3, 0)
+        offs = q_offset + CHUNK * jnp.arange(nb)
+        outs = jax.lax.map(lambda args: _attend(*args), (qb, offs))
+        out = jnp.moveaxis(outs, 0, 3).reshape(b, hkv, g, sq, d)
+    else:
+        out = _attend(qf, q_offset)
+    return out.reshape(b, h, sq, d).astype(q.dtype)

@@ -1,0 +1,296 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Distributed GNN RTEC dry-run — the paper-representative cells.
+
+Lowers + compiles, on the production mesh(es):
+
+  * ``gnn_full_layer``  — one full-neighbor embedding-computation layer over
+    a billion-edge graph (V=2^26, E=2^30, D=128): vertices sharded over
+    "data", features over "model", edges sharded over "data" (the paper's
+    RTEC-Full baseline at pod scale);
+  * ``gnn_rtec_inc``    — one incremental RTEC layer (Alg. 1) over an
+    affected subgraph of 2^22 signed edge records / 2^20 touched vertices —
+    the paper's contribution as it would run per update batch.
+
+Roofline terms recorded like the LM cells (experiments/dryrun/<mode>/gnn_*).
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.full import full_layer
+from repro.core.incremental import incremental_layer
+from repro.core.models import GCN
+from repro.launch.dryrun import HBM_BW, ICI_BW, OUT_DIR, PEAK_FLOPS
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+
+V = 1 << 26  # 67M vertices (ogbn-paper/Friendster scale per pod-pair)
+E = 1 << 30  # 1B edges
+D = 128
+E_AFF = 1 << 22  # affected-edge records per batch
+V_AFF = 1 << 20  # touched rows
+F_CAP = 1 << 16  # constrained full-recompute rows
+FE_CAP = 1 << 20
+
+
+def _gcn_params():
+    model = GCN()
+    p = jax.eval_shape(lambda: model.init_params(jax.random.PRNGKey(0), D, D))
+    return model, p
+
+
+def full_layer_cell(mesh):
+    model, pst = _gcn_params()
+
+    def step(p, h, src, dst, ew, et, deg):
+        mask = jnp.ones(src.shape[0], dtype=bool)
+        st = full_layer(model, p, h, src, dst, ew, et, mask, deg, V)
+        return st.a, st.nct, st.h
+
+    vsh = NamedSharding(mesh, P("data", "model"))
+    esh = NamedSharding(mesh, P("data"))
+    rep = NamedSharding(mesh, P())
+    psh = jax.tree.map(lambda _: rep, pst)
+    jitted = jax.jit(step, in_shardings=(psh, vsh, esh, esh, esh, esh,
+                                         NamedSharding(mesh, P("data"))))
+    structs = (
+        pst,
+        jax.ShapeDtypeStruct((V, D), jnp.float32),
+        jax.ShapeDtypeStruct((E,), jnp.int32),
+        jax.ShapeDtypeStruct((E,), jnp.int32),
+        jax.ShapeDtypeStruct((E,), jnp.float32),
+        jax.ShapeDtypeStruct((E,), jnp.int32),
+        jax.ShapeDtypeStruct((V,), jnp.float32),
+    )
+    return jitted.lower(*structs)
+
+
+def rtec_inc_cell(mesh):
+    model, pst = _gcn_params()
+
+    def step(p, h_old, h_new, deg_old, deg_new, a, nct, h_cur,
+             e_src, e_dst, e_rowidx, e_sign, e_use_new, e_w, e_t, e_mask,
+             touch_rows, touch_mask, f_rows, f_mask, f_src, f_rowidx,
+             f_w, f_t, f_emask, out_rows, out_mask):
+        return incremental_layer(
+            model, p, h_old, h_new, deg_old, deg_new, a, nct, h_cur,
+            e_src, e_dst, e_rowidx, e_sign, e_use_new, e_w, e_t, e_mask,
+            touch_rows, touch_mask, f_rows, f_mask, f_src, f_rowidx,
+            f_w, f_t, f_emask, out_rows, out_mask,
+        )
+
+    vsh = NamedSharding(mesh, P("data", "model"))
+    vec = NamedSharding(mesh, P("data"))
+    rep = NamedSharding(mesh, P())
+    psh = jax.tree.map(lambda _: rep, pst)
+    i32 = jnp.int32
+    f32 = jnp.float32
+    # scratch row lives at index V; pad to V+16 so dim 0 stays 16-divisible
+    structs = dict(
+        h_old=jax.ShapeDtypeStruct((V + 16, D), f32),
+        h_new=jax.ShapeDtypeStruct((V + 16, D), f32),
+        deg_old=jax.ShapeDtypeStruct((V + 16,), f32),
+        deg_new=jax.ShapeDtypeStruct((V + 16,), f32),
+        a=jax.ShapeDtypeStruct((V, D), f32),
+        nct=jax.ShapeDtypeStruct((V, 1), f32),
+        h_cur=jax.ShapeDtypeStruct((V, D), f32),
+        e_src=jax.ShapeDtypeStruct((E_AFF,), i32),
+        e_dst=jax.ShapeDtypeStruct((E_AFF,), i32),
+        e_rowidx=jax.ShapeDtypeStruct((E_AFF,), i32),
+        e_sign=jax.ShapeDtypeStruct((E_AFF,), f32),
+        e_use_new=jax.ShapeDtypeStruct((E_AFF,), jnp.bool_),
+        e_w=jax.ShapeDtypeStruct((E_AFF,), f32),
+        e_t=jax.ShapeDtypeStruct((E_AFF,), i32),
+        e_mask=jax.ShapeDtypeStruct((E_AFF,), jnp.bool_),
+        touch_rows=jax.ShapeDtypeStruct((V_AFF,), i32),
+        touch_mask=jax.ShapeDtypeStruct((V_AFF,), jnp.bool_),
+        f_rows=jax.ShapeDtypeStruct((F_CAP,), i32),
+        f_mask=jax.ShapeDtypeStruct((F_CAP,), jnp.bool_),
+        f_src=jax.ShapeDtypeStruct((FE_CAP,), i32),
+        f_rowidx=jax.ShapeDtypeStruct((FE_CAP,), i32),
+        f_w=jax.ShapeDtypeStruct((FE_CAP,), f32),
+        f_t=jax.ShapeDtypeStruct((FE_CAP,), i32),
+        f_emask=jax.ShapeDtypeStruct((FE_CAP,), jnp.bool_),
+        out_rows=jax.ShapeDtypeStruct((V_AFF,), i32),
+        out_mask=jax.ShapeDtypeStruct((V_AFF,), jnp.bool_),
+    )
+    shardings = dict(
+        h_old=vsh, h_new=vsh, deg_old=vec, deg_new=vec, a=vsh,
+        nct=NamedSharding(mesh, P("data", None)), h_cur=vsh,
+        e_src=vec, e_dst=vec, e_rowidx=vec, e_sign=vec, e_use_new=vec,
+        e_w=vec, e_t=vec, e_mask=vec,
+        touch_rows=vec, touch_mask=vec, f_rows=vec, f_mask=vec,
+        f_src=vec, f_rowidx=vec, f_w=vec, f_t=vec, f_emask=vec,
+        out_rows=vec, out_mask=vec,
+    )
+    names = list(structs)
+    jitted = jax.jit(
+        lambda p, *args: step(p, *args),
+        in_shardings=(psh, *[shardings[k] for k in names]),
+    )
+    return jitted.lower(pst, *[structs[k] for k in names])
+
+
+def rtec_inc_compact_cell(mesh):
+    """Beyond-naive formulation (EXPERIMENTS.md §Perf GNN iter 2): the host
+    planner ships only the COMPACT affected rows (what NeutronRT's zero-copy
+    reads do), so no collective ever touches the full [V, D] tables.  The
+    compact kernel is the exact same `incremental_layer` (index remapping —
+    see repro/serve/offload.py)."""
+    model, pst = _gcn_params()
+    RH = E_AFF  # compact h rows upper bound (unique endpoints of records)
+    RS = V_AFF  # compact state rows
+
+    def step(p, h_old, h_new, deg_old, deg_new, a, nct, h_cur,
+             e_src, e_dst, e_rowidx, e_sign, e_use_new, e_w, e_t, e_mask,
+             touch_rows, touch_mask, f_rows, f_mask, f_src, f_rowidx,
+             f_w, f_t, f_emask, out_rows, out_mask, f_rows_h, out_rows_h):
+        return incremental_layer(
+            model, p, h_old, h_new, deg_old, deg_new, a, nct, h_cur,
+            e_src, e_dst, e_rowidx, e_sign, e_use_new, e_w, e_t, e_mask,
+            touch_rows, touch_mask, f_rows, f_mask, f_src, f_rowidx,
+            f_w, f_t, f_emask, out_rows, out_mask,
+            f_rows_h=f_rows_h, out_rows_h=out_rows_h,
+        )
+
+    vsh = NamedSharding(mesh, P("data", "model"))
+    vec = NamedSharding(mesh, P("data"))
+    rep = NamedSharding(mesh, P())
+    psh = jax.tree.map(lambda _: rep, pst)
+    i32, f32, b1 = jnp.int32, jnp.float32, jnp.bool_
+    # halo embeddings ship in bf16 (GNN iter 3: halves gather wire bytes);
+    # aggregation state stays fp32 so ms_cbn⁻¹ round-trips keep precision
+    structs = dict(
+        h_old=jax.ShapeDtypeStruct((RH + 16, D), jnp.bfloat16),
+        h_new=jax.ShapeDtypeStruct((RH + 16, D), jnp.bfloat16),
+        deg_old=jax.ShapeDtypeStruct((RH + 16,), f32),
+        deg_new=jax.ShapeDtypeStruct((RH + 16,), f32),
+        a=jax.ShapeDtypeStruct((RS, D), f32),
+        nct=jax.ShapeDtypeStruct((RS, 1), f32),
+        h_cur=jax.ShapeDtypeStruct((RS, D), f32),
+        e_src=jax.ShapeDtypeStruct((E_AFF,), i32),
+        e_dst=jax.ShapeDtypeStruct((E_AFF,), i32),
+        e_rowidx=jax.ShapeDtypeStruct((E_AFF,), i32),
+        e_sign=jax.ShapeDtypeStruct((E_AFF,), f32),
+        e_use_new=jax.ShapeDtypeStruct((E_AFF,), b1),
+        e_w=jax.ShapeDtypeStruct((E_AFF,), f32),
+        e_t=jax.ShapeDtypeStruct((E_AFF,), i32),
+        e_mask=jax.ShapeDtypeStruct((E_AFF,), b1),
+        touch_rows=jax.ShapeDtypeStruct((V_AFF,), i32),
+        touch_mask=jax.ShapeDtypeStruct((V_AFF,), b1),
+        f_rows=jax.ShapeDtypeStruct((F_CAP,), i32),
+        f_mask=jax.ShapeDtypeStruct((F_CAP,), b1),
+        f_src=jax.ShapeDtypeStruct((FE_CAP,), i32),
+        f_rowidx=jax.ShapeDtypeStruct((FE_CAP,), i32),
+        f_w=jax.ShapeDtypeStruct((FE_CAP,), f32),
+        f_t=jax.ShapeDtypeStruct((FE_CAP,), i32),
+        f_emask=jax.ShapeDtypeStruct((FE_CAP,), b1),
+        out_rows=jax.ShapeDtypeStruct((V_AFF,), i32),
+        out_mask=jax.ShapeDtypeStruct((V_AFF,), b1),
+        f_rows_h=jax.ShapeDtypeStruct((F_CAP,), i32),
+        out_rows_h=jax.ShapeDtypeStruct((V_AFF,), i32),
+    )
+    shardings = {k: vec for k in structs}
+    for k in ("h_old", "h_new", "a", "h_cur"):
+        shardings[k] = vsh
+    shardings["nct"] = NamedSharding(mesh, P("data", None))
+    names = list(structs)
+    jitted = jax.jit(
+        lambda p, *args: step(p, *args),
+        in_shardings=(psh, *[shardings[k] for k in names]),
+    )
+    return jitted.lower(pst, *[structs[k] for k in names])
+
+
+_CELLS = {
+    "gnn_full_layer": full_layer_cell,
+    "gnn_rtec_inc": rtec_inc_cell,
+    "gnn_rtec_inc_compact": rtec_inc_compact_cell,
+}
+
+
+def run_cell(name: str, multi_pod: bool) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(mesh.devices.shape))
+    t0 = time.time()
+    lowered = _CELLS[name](mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    stats = analyze_hlo(compiled.as_text(), default_trip_count=1, total_devices=n_chips)
+    compute_s = stats.flops / PEAK_FLOPS
+    memory_s = stats.hbm_bytes / HBM_BW
+    collective_s = stats.collective_bytes / ICI_BW
+    dom = max([("compute", compute_s), ("memory", memory_s), ("collective", collective_s)],
+              key=lambda kv: kv[1])[0]
+    return {
+        "arch": name,
+        "shape": f"V{V}_E{E if name == 'gnn_full_layer' else E_AFF}_D{D}",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory_analysis": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "peak_est_gb": round((mem.argument_size_in_bytes + mem.output_size_in_bytes
+                                  - mem.alias_size_in_bytes + mem.temp_size_in_bytes) / 1e9, 3),
+        },
+        "hlo_per_device": {
+            "flops": stats.flops,
+            "hbm_bytes_raw": stats.hbm_bytes,
+            "collective_wire_bytes": stats.collective_bytes,
+            "collective_counts": stats.collective_counts,
+        },
+        "roofline": {
+            "compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": collective_s, "dominant": dom,
+            "bound_s": max(compute_s, memory_s, collective_s),
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="opt")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out_dir = OUT_DIR / args.mode
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for name in ("gnn_rtec_inc", "gnn_full_layer", "gnn_rtec_inc_compact"):
+        for mp in (False, True):
+            tag = f"{name}__{'pod2' if mp else 'pod1'}"
+            path = out_dir / f"{tag}.json"
+            if path.exists() and not args.force:
+                print(f"[skip cached] {tag}")
+                continue
+            print(f"[run ] {tag}", flush=True)
+            try:
+                res = run_cell(name, mp)
+                path.write_text(json.dumps(res, indent=2))
+                r = res["roofline"]
+                print(f"[done] {tag}: compile={res['compile_s']}s "
+                      f"mem={res['memory_analysis']['peak_est_gb']}GB "
+                      f"c={r['compute_s']:.2e} m={r['memory_s']:.2e} "
+                      f"n={r['collective_s']:.2e} dom={r['dominant']}", flush=True)
+            except Exception as e:  # noqa
+                path.with_suffix(".err").write_text(traceback.format_exc())
+                print(f"[FAIL] {tag}: {e}")
+
+
+if __name__ == "__main__":
+    main()

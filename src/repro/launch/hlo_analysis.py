@@ -1,0 +1,440 @@
+"""Post-SPMD HLO text analyzer for the roofline (DESIGN.md §10).
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, so a
+scanned L-layer model under-reports by ~L×.  This analyzer parses the
+optimized HLO text and computes, per device:
+
+  * **flops** — 2·M·N·K per ``dot`` (+ convolutions), recursively through
+    called computations, multiplying ``while`` bodies by their
+    ``known_trip_count`` (fallback: caller-supplied default);
+  * **hbm_bytes** — Σ (result + operand bytes) over *top-level* instructions
+    of executed computations, NOT descending into fusion bodies — fusion
+    internals never round-trip HBM, so instruction boundaries model HBM
+    traffic the way XLA's buffer assignment does;
+  * **collective wire bytes** — per collective op, bytes on the wire per
+    chip using ring-algorithm factors over the op's replica group size g:
+      all-gather (g−1)/g·result, all-reduce 2(g−1)/g·result,
+      reduce-scatter (g−1)·result, all-to-all (g−1)/g·result,
+      collective-permute 1·result.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->")
+_CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[\\"]*:?\s*[{\\"]*n[\\"]*:?[\\"]*(\d+)')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _shapes_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, [int(x) for x in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    rest: str  # everything after '='
+    result_bytes: int
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+    param_types: Dict[str, str]
+
+
+def _gte_or_param(name: str, comps: Dict[str, "Computation"]) -> bool:
+    """True if instruction `name` is a get-tuple-element / parameter anywhere
+    (i.e. a loop-carried or argument buffer, alias-eligible)."""
+    cache = getattr(_gte_or_param, "_cache", None)
+    if cache is None or cache[0] is not comps:
+        kinds = {}
+        for c in comps.values():
+            for k in c.param_types:
+                kinds[k] = True
+            for ins in c.instructions:
+                op_ = _opcode(ins.rest)
+                kinds[ins.name] = op_ in ("get-tuple-element", "parameter")
+        _gte_or_param._cache = (comps, kinds)
+        cache = _gte_or_param._cache
+    return cache[1].get(name, False)
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_START_RE.match(line)
+            if m and stripped.endswith("{"):
+                params = {}
+                for pm in re.finditer(r"%?([\w\.\-]+):\s*([\w\[\],\{\} ]+)", m.group(2)):
+                    params[pm.group(1)] = pm.group(2)
+                cur = Computation(m.group(1), [], params)
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        im = _INSTR_RE.match(line)
+        if im:
+            name, rest = im.groups()
+            cur.instructions.append(Instruction(name, rest, _shapes_bytes(rest.split(" ", 1)[0] if "(" not in rest.split(" ")[0] else rest)))
+    return comps
+
+
+def _result_type(rest: str) -> str:
+    # rest looks like: "f32[16,256]{1,0} dot(%a, %b), ..." or "(f32[..], ...) tuple(...)"
+    m = re.match(r"(\([^)]*\)|[\w\[\],]+(?:\{[\d,]*\})?)", rest)
+    return m.group(1) if m else ""
+
+
+def _opcode(rest: str) -> str:
+    t = _result_type(rest)
+    tail = rest[len(t):].strip()
+    m = re.match(r"([\w\-]+)", tail)
+    return m.group(1) if m else ""
+
+
+def _operands(rest: str) -> List[str]:
+    m = re.search(r"\(([^)]*)\)", rest[rest.index(" ") :] if " " in rest else rest)
+    if not m:
+        return []
+    ops = []
+    for tok in m.group(1).split(","):
+        tok = tok.strip()
+        mm = re.match(r"%?([\w\.\-]+)$", tok)
+        if mm:
+            ops.append(mm.group(1))
+    return ops
+
+
+@dataclasses.dataclass
+class HLOStats:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    collective_counts: Dict[str, int]
+    per_collective_bytes: Dict[str, float]
+    # HBM bytes excluding attention-matrix-shaped buffers ([.., Sq, Skv]).
+    # The CPU lowering materializes softmax(QKᵀ) in HBM; the TPU deployment
+    # streams it through VMEM via the Pallas flash kernel, so the adjusted
+    # number models the deployed memory traffic (DESIGN.md §10).
+    hbm_bytes_flash_adjusted: float = 0.0
+    attn_matrix_bytes: float = 0.0
+
+
+def _dot_flops(rest: str, symtab: Dict[str, str]) -> float:
+    rt = _shape_dims(_result_type(rest))
+    if rt is None:
+        return 0.0
+    _, rdims = rt
+    ops = _operands(rest)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+    if not ops or m is None:
+        return 0.0
+    lhs_type = symtab.get(ops[0])
+    if lhs_type is None:
+        return 0.0
+    lt = _shape_dims(lhs_type)
+    if lt is None:
+        return 0.0
+    _, ldims = lt
+    k = 1
+    if m.group(1):
+        for i in m.group(1).split(","):
+            idx = int(i)
+            if idx < len(ldims):
+                k *= ldims[idx]
+    n = 1
+    for d in rdims:
+        n *= d
+    return 2.0 * n * k
+
+
+def _group_size(rest: str, total_devices: int) -> int:
+    m = _GROUPS_RE.search(rest)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_OLD_RE.search(rest)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return total_devices
+
+
+_WIRE_FACTOR = {
+    "all-gather": lambda g: (g - 1) / g,
+    "all-reduce": lambda g: 2 * (g - 1) / g,
+    "reduce-scatter": lambda g: float(g - 1),
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+
+def analyze_hlo(
+    hlo: str,
+    default_trip_count: int = 1,
+    total_devices: int = 1,
+    attn_seq_hint: Optional[int] = None,
+) -> HLOStats:
+    comps = parse_computations(hlo)
+    # global symbol table: instruction name -> result type string
+    symtab: Dict[str, str] = {}
+    for c in comps.values():
+        for k, v in c.param_types.items():
+            symtab[k] = v
+        for ins in c.instructions:
+            symtab[ins.name] = _result_type(ins.rest)
+
+    entry = None
+    for name, c in comps.items():
+        if re.match(r"main", name) or name.endswith("_spmd") and entry is None:
+            entry = name
+    # prefer a computation literally containing 'main'
+    mains = [n for n in comps if "main" in n]
+    if mains:
+        entry = max(mains, key=lambda n: len(comps[n].instructions))
+    if entry is None:  # fallback: biggest computation
+        entry = max(comps, key=lambda n: len(comps[n].instructions))
+
+    fusion_names = set()
+    for c in comps.values():
+        for ins in c.instructions:
+            if _opcode(ins.rest) == "fusion":
+                m = _CALL_RE.search(ins.rest)
+                if m:
+                    fusion_names.add(m.group(1))
+
+    # effective read bytes per (fusion computation, param index): if every
+    # direct user of a parameter is a slice/gather, the fusion only touches
+    # the sliced window — critical for scanned stacked weights, where the
+    # full [L, ...] tensor is an operand of a per-layer fusion.
+    def _param_read_bytes(comp_name: str) -> Dict[int, float]:
+        c = comps.get(comp_name)
+        if c is None:
+            return {}
+        out: Dict[int, float] = {}
+        params: Dict[str, int] = {}
+        for ins in c.instructions:
+            if _opcode(ins.rest) == "parameter":
+                m = re.search(r"parameter\((\d+)\)", ins.rest)
+                if m:
+                    params[ins.name] = int(m.group(1))
+        for pname, pidx in params.items():
+            users = [i for i in c.instructions if pname in _operands(i.rest)]
+            if users and all(
+                _opcode(u.rest) in ("dynamic-slice", "gather", "slice") for u in users
+            ):
+                out[pidx] = sum(_shapes_bytes(_result_type(u.rest)) for u in users)
+        return out
+
+    param_reads: Dict[str, Dict[int, float]] = {}
+
+    memo_flops: Dict[str, float] = {}
+    memo_bytes: Dict[str, float] = {}
+    memo_attn: Dict[str, float] = {}
+    memo_coll: Dict[str, Tuple[float, Dict[str, int], Dict[str, float]]] = {}
+
+    def _is_attn_matrix(type_str: str) -> bool:
+        """[.., Sq≥128, Skv==hint] — only attention score/prob tensors have a
+        trailing dim equal to the (kv-)sequence length at these shapes."""
+        if attn_seq_hint is None:
+            return False
+        sd = _shape_dims(type_str)
+        if sd is None:
+            return False
+        _, dims = sd
+        return len(dims) >= 3 and dims[-1] == attn_seq_hint and dims[-2] >= 128
+
+    def comp_flops(name: str) -> float:
+        """Recursive flops including fusion bodies and while trips."""
+        if name in memo_flops:
+            return memo_flops[name]
+        memo_flops[name] = 0.0  # cycle guard
+        total = 0.0
+        c = comps.get(name)
+        if c is None:
+            return 0.0
+        for ins in c.instructions:
+            op = _opcode(ins.rest)
+            if op == "dot" or op.startswith("convolution"):
+                total += _dot_flops(ins.rest, symtab)
+            if op == "while":
+                wm = _WHILE_RE.search(ins.rest)
+                tm = _TRIP_RE.search(ins.rest)
+                trips = int(tm.group(1)) if tm else default_trip_count
+                if wm:
+                    total += trips * comp_flops(wm.group(2)) + comp_flops(wm.group(1))
+            else:
+                for cm in _CALL_RE.finditer(ins.rest):
+                    total += comp_flops(cm.group(1))
+        memo_flops[name] = total
+        return total
+
+    def comp_bytes(name: str) -> Tuple[float, float]:
+        """HBM traffic: top-level instruction boundaries only (no fusion
+        internals), while bodies × trips.  Returns (total, attn_matrix_part)."""
+        if name in memo_bytes:
+            return memo_bytes[name]
+        memo_bytes[name] = (0.0, 0.0)
+        total = 0.0
+        attn = 0.0
+        c = comps.get(name)
+        if c is None:
+            return 0.0, 0.0
+        for ins in c.instructions:
+            op = _opcode(ins.rest)
+            if op in ("tuple", "get-tuple-element", "parameter", "constant", "bitcast"):
+                continue
+            if op == "while":
+                wm = _WHILE_RE.search(ins.rest)
+                tm = _TRIP_RE.search(ins.rest)
+                trips = int(tm.group(1)) if tm else default_trip_count
+                if wm:
+                    tb, ab = comp_bytes(wm.group(2))
+                    cb, cab = comp_bytes(wm.group(1))
+                    total += trips * tb + cb
+                    attn += trips * ab + cab
+                continue
+            if op in ("call", "conditional"):
+                for cm in _CALL_RE.finditer(ins.rest):
+                    tb, ab = comp_bytes(cm.group(1))
+                    total += tb
+                    attn += ab
+                continue
+            rb = _shapes_bytes(_result_type(ins.rest))
+            if op in ("dynamic-slice", "gather"):
+                # reads only the sliced window, not the whole operand
+                total += 2 * rb
+                continue
+            if op in ("dynamic-update-slice", "scatter"):
+                # in-place window write: traffic ≈ 2 × update operand
+                ops_ = _operands(ins.rest)
+                ub = _shapes_bytes(symtab.get(ops_[1], "")) if len(ops_) > 1 else rb
+                total += 2 * ub
+                continue
+            eff = {}
+            if op == "fusion":
+                cm = _CALL_RE.search(ins.rest)
+                if cm:
+                    callee = cm.group(1)
+                    if callee not in param_reads:
+                        param_reads[callee] = _param_read_bytes(callee)
+                    eff = param_reads[callee]
+            this_attn = 0.0
+            if _is_attn_matrix(_result_type(ins.rest)):
+                this_attn += rb
+            ob = 0.0
+            aliased = False
+            for i, o in enumerate(_operands(ins.rest)):
+                b = eff.get(i, _shapes_bytes(symtab.get(o, "")))
+                # loop-carried buffer updated in place (DUS-style fusion whose
+                # result size equals a carried-state operand): XLA's buffer
+                # assignment aliases it — the write is windowed, not full-size
+                if (
+                    not aliased
+                    and b == rb
+                    and rb > 1 << 20
+                    and symtab.get(o) is not None
+                    and _gte_or_param(o, comps)
+                ):
+                    aliased = True
+                    continue  # neither read nor rewritten wholesale
+                ob += b
+                if i not in eff and _is_attn_matrix(symtab.get(o, "")):
+                    this_attn += b
+            total += (0.0 if aliased else rb) + ob
+            attn += this_attn
+        memo_bytes[name] = (total, attn)
+        return memo_bytes[name]
+
+    def comp_coll(name: str):
+        if name in memo_coll:
+            return memo_coll[name]
+        memo_coll[name] = (0.0, {}, {})
+        total = 0.0
+        counts: Dict[str, int] = {}
+        per: Dict[str, float] = {}
+        c = comps.get(name)
+        if c is None:
+            return 0.0, {}, {}
+        for ins in c.instructions:
+            op = _opcode(ins.rest)
+            if op in COLLECTIVE_OPS or (op.endswith("-start") and op[:-6] in COLLECTIVE_OPS):
+                base = op[:-6] if op.endswith("-start") else op
+                g = _group_size(ins.rest, total_devices)
+                rb = _shapes_bytes(_result_type(ins.rest))
+                wire = rb * _WIRE_FACTOR[base](g)
+                total += wire
+                counts[base] = counts.get(base, 0) + 1
+                per[base] = per.get(base, 0.0) + wire
+            elif op == "while":
+                wm = _WHILE_RE.search(ins.rest)
+                tm = _TRIP_RE.search(ins.rest)
+                trips = int(tm.group(1)) if tm else default_trip_count
+                if wm:
+                    t2, c2, p2 = comp_coll(wm.group(2))
+                    total += trips * t2
+                    for k, v in c2.items():
+                        counts[k] = counts.get(k, 0) + trips * v
+                    for k, v in p2.items():
+                        per[k] = per.get(k, 0.0) + trips * v
+            else:
+                for cm in _CALL_RE.finditer(ins.rest):
+                    if cm.group(1) in fusion_names:
+                        continue
+                    t2, c2, p2 = comp_coll(cm.group(1))
+                    total += t2
+                    for k, v in c2.items():
+                        counts[k] = counts.get(k, 0) + v
+                    for k, v in p2.items():
+                        per[k] = per.get(k, 0.0) + v
+        memo_coll[name] = (total, counts, per)
+        return memo_coll[name]
+
+    coll_total, coll_counts, coll_per = comp_coll(entry)
+    total_b, attn_b = comp_bytes(entry)
+    return HLOStats(
+        flops=comp_flops(entry),
+        hbm_bytes=total_b,
+        collective_bytes=coll_total,
+        collective_counts=coll_counts,
+        per_collective_bytes=coll_per,
+        hbm_bytes_flash_adjusted=total_b - attn_b,
+        attn_matrix_bytes=attn_b,
+    )

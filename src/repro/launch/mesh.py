@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single pod = 16×16 v5e ("data", "model");
+multi-pod = 2 pods × 16×16 ("pod", "data", "model") — the "pod" axis maps
+to the cross-pod DCN/ICI links.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devices)} — run under "
+            f'XLA_FLAGS="--xla_force_host_platform_device_count={n}" (dryrun.py sets this)'
+        )
+    return jax.make_mesh(shape, axes, devices=devices[:n])

@@ -1,0 +1,157 @@
+"""Step builders + input specs for training/serving under a mesh.
+
+These are shared by the multi-pod dry-run (`launch/dryrun.py`), the real
+drivers (`launch/train.py` / `launch/serve.py`) and the benchmarks: one
+definition of `train_step` / `prefill_step` / `serve_step` per architecture,
+with shardings derived from the logical-axis rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.dist.sharding import (
+    ShardingConfig,
+    auto_spec,
+    batch_specs,
+    cache_specs,
+    tree_shardings,
+)
+from repro.models import decode_step, init_model, loss_fn, prefill
+from repro.models.encdec import EncDecCache
+from repro.train.optimizer import OptConfig, OptState, adamw_init, adamw_update
+
+
+# ---------------------------------------------------------------------- #
+# abstract inputs (ShapeDtypeStruct only — never allocates)
+# ---------------------------------------------------------------------- #
+def batch_struct(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.encdec:
+        out["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_frontend), jnp.bfloat16)
+    if cfg.num_patches:
+        out["patches"] = jax.ShapeDtypeStruct((b, cfg.num_patches, cfg.d_frontend), jnp.bfloat16)
+    return out
+
+
+def serve_cache_struct(cfg: ArchConfig, b: int, s_max: int):
+    """Abstract decode-cache pytree (via eval_shape; no allocation)."""
+    if cfg.encdec:
+        hd = cfg.resolved_head_dim
+
+        def mk():
+            return EncDecCache(
+                k=jnp.zeros((cfg.num_layers, b, cfg.num_kv_heads, s_max, hd), jnp.bfloat16),
+                v=jnp.zeros((cfg.num_layers, b, cfg.num_kv_heads, s_max, hd), jnp.bfloat16),
+                mem_k=jnp.zeros((cfg.num_layers, b, cfg.num_heads, s_max, hd), jnp.bfloat16),
+                mem_v=jnp.zeros((cfg.num_layers, b, cfg.num_heads, s_max, hd), jnp.bfloat16),
+                index=jnp.zeros((), jnp.int32),
+            )
+
+        return jax.eval_shape(mk)
+    from repro.models import init_cache
+
+    return jax.eval_shape(lambda: init_cache(cfg, b, s_max))
+
+
+def params_struct(cfg: ArchConfig) -> Tuple[Any, Any]:
+    """(param ShapeDtypeStruct tree, logical-axes tree) with NO allocation:
+    shapes come from `eval_shape` over the full config; the axes tree (static
+    python strings, which eval_shape cannot return) comes from an eager init
+    of the structurally-identical reduced config."""
+    from repro.configs import reduced_config
+
+    shapes = jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg)[0])
+    _, axes = init_model(jax.random.PRNGKey(0), reduced_config(cfg))
+    return shapes, axes
+
+
+# ---------------------------------------------------------------------- #
+# step functions
+# ---------------------------------------------------------------------- #
+def make_train_step(cfg: ArchConfig, opt_cfg: OptConfig):
+    def train_step(params, opt_state: OptState, batch):
+        def lf(p):
+            return loss_fn(p, cfg, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        new_params, new_state, lr = adamw_update(grads, opt_state, params, opt_cfg)
+        return new_params, new_state, {"loss": loss, "lr": lr, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, s_max: int):
+    def prefill_step(params, batch):
+        return prefill(params, cfg, batch, s_max)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, cache, token):
+        return decode_step(params, cfg, token, cache)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------- #
+# sharding assembly
+# ---------------------------------------------------------------------- #
+def shardings_for_cell(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    fsdp_train: bool = True,
+):
+    """Returns dict with everything dryrun/train/serve need:
+    param/opt/batch/cache shardings + abstract inputs."""
+    multi = "pod" in mesh.axis_names
+    dp_axes = ("pod", "data") if multi else ("data",)
+    # training shards params over data (FSDP); serving keeps TP-only params
+    shcfg_train = ShardingConfig(fsdp=fsdp_train, dp_axes=dp_axes)
+    shcfg_serve = ShardingConfig(fsdp=False, dp_axes=dp_axes)
+    shcfg = shcfg_train if shape.kind == "train" else shcfg_serve
+
+    pstruct, axes = params_struct(cfg)
+    psharding = tree_shardings(axes, mesh, shcfg, shapes_tree=pstruct)
+
+    out: Dict[str, Any] = {
+        "shcfg": shcfg,
+        "params_struct": pstruct,
+        "params_sharding": psharding,
+    }
+    bstruct = batch_struct(cfg, shape)
+    bspec = {k: auto_spec(v.shape, mesh, shcfg, batch_dim=0) for k, v in bstruct.items()}
+    out["batch_struct"] = bstruct
+    out["batch_sharding"] = {k: NamedSharding(mesh, s) for k, s in bspec.items()}
+
+    if shape.kind == "train":
+        ostruct = jax.eval_shape(lambda: adamw_init(pstruct))
+        osharding = OptState(
+            m=psharding, v=psharding, count=NamedSharding(mesh, P())
+        )
+        out["opt_struct"] = ostruct
+        out["opt_sharding"] = osharding
+    else:
+        s_max = shape.seq_len + (cfg.num_patches or 0)
+        cstruct = serve_cache_struct(cfg, shape.global_batch, s_max)
+        cspecs = cache_specs(cstruct, mesh, shcfg)
+        out["cache_struct"] = cstruct
+        out["cache_sharding"] = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                                             is_leaf=lambda x: isinstance(x, P))
+        out["token_struct"] = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        tspec = auto_spec((shape.global_batch, 1), mesh, shcfg, batch_dim=0)
+        out["token_sharding"] = NamedSharding(mesh, tspec)
+        out["s_max"] = s_max
+    return out

@@ -1,0 +1,50 @@
+"""Production training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --steps 200 [--multi-pod] [--reduced] [--checkpoint-dir ckpt/]
+
+On real hardware the mesh comes from the runtime; on this container use
+--reduced (CPU-scale config, single device) — the same code path the
+dry-run compiles for the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_NAMES, get_arch, reduced_config
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES, default="llama3.2-1b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale reduced config (default on 1 device)")
+    ap.add_argument("--checkpoint-dir", type=str, default=None)
+    ap.add_argument("--compression", choices=["int8", "topk"], default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced or len(jax.devices()) == 1:
+        cfg = reduced_config(cfg)
+    tcfg = TrainConfig(
+        steps=args.steps, batch=args.batch, seq_len=args.seq_len,
+        checkpoint_dir=args.checkpoint_dir, compression=args.compression,
+        microbatches=args.microbatches,
+    )
+    t = Trainer(cfg, tcfg, OptConfig(peak_lr=3e-3, warmup_steps=10,
+                                     stable_steps=args.steps, decay_steps=10))
+    out = t.train()
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

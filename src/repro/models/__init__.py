@@ -1,0 +1,52 @@
+"""Model zoo API: unified init / loss / prefill / decode per architecture."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec as _encdec
+from repro.models import lm as _lm
+
+
+def init_model(key: jax.Array, cfg: ArchConfig):
+    """Returns (params, logical_axes)."""
+    if cfg.encdec:
+        return _encdec.init_encdec(key, cfg)
+    return _lm.init_lm(key, cfg)
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict[str, Any]):
+    if cfg.encdec:
+        return _encdec.encdec_loss(params, cfg, batch)
+    return _lm.lm_loss(params, cfg, batch)
+
+
+def forward(params, cfg: ArchConfig, batch: Dict[str, Any]):
+    if cfg.encdec:
+        return _encdec.forward(params, cfg, batch["frames"], batch["tokens"])
+    return _lm.forward(params, cfg, batch["tokens"], batch.get("patches"))
+
+
+def prefill(params, cfg: ArchConfig, batch: Dict[str, Any], s_max: int, cache_dtype=None):
+    import jax.numpy as jnp
+
+    cache_dtype = cache_dtype or jnp.bfloat16
+    if cfg.encdec:
+        return _encdec.prefill(params, cfg, batch["frames"], batch["tokens"], s_max,
+                               cache_dtype=cache_dtype)
+    return _lm.prefill(params, cfg, batch["tokens"], s_max,
+                       patches=batch.get("patches"), cache_dtype=cache_dtype)
+
+
+def decode_step(params, cfg: ArchConfig, token, cache):
+    if cfg.encdec:
+        return _encdec.decode_step(params, cfg, token, cache)
+    return _lm.decode_step(params, cfg, token, cache)
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=None):
+    import jax.numpy as jnp
+
+    return _lm.init_cache(cfg, batch, s_max, dtype or jnp.bfloat16)

@@ -1,0 +1,186 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The audio frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings [B, S_src, d_frontend]; the encoder is a
+bidirectional transformer over projected frames, the decoder a causal
+transformer with per-layer cross-attention to the encoder memory.  Serving
+keeps the encoder memory's cross-K/V precomputed in the cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.lm import _dtype, _logits
+from repro.nn import param as pm
+from repro.nn.attention import (
+    KVCache,
+    attention_apply,
+    attention_prefill_kv,
+    cross_attention_apply,
+    cross_memory,
+    init_attention,
+    init_cross_attention,
+)
+from repro.nn.layers import rms_norm, softmax_xent, swiglu
+from repro.models.lm import _init_mlp
+
+
+class EncDecCache(NamedTuple):
+    k: jax.Array  # [L, B, Hkv, S_max, dh] decoder self-attn
+    v: jax.Array
+    mem_k: jax.Array  # [L, B, H, S_src, dh] cross-attn memory
+    mem_v: jax.Array
+    index: jax.Array
+
+
+def init_encdec(key: jax.Array, cfg: ArchConfig):
+    dtype = _dtype(cfg.param_dtype)
+    d = cfg.d_model
+    keys = jax.random.split(key, 10)
+    hd = cfg.resolved_head_dim
+    tree: Dict[str, Any] = {
+        "embed": pm.Param(
+            jax.random.normal(keys[0], (cfg.vocab_size, d), dtype) * 0.02,
+            ("vocab", "embed"),
+        ),
+        "lm_head": pm.dense(keys[1], (d, cfg.vocab_size), ("embed", "vocab"), dtype),
+        "frame_proj": pm.dense(keys[2], (cfg.d_frontend, d), (None, "embed"), dtype),
+        "final_norm": pm.ones((d,), (None,), dtype),
+        "enc_final_norm": pm.ones((d,), (None,), dtype),
+        "enc_blocks": {
+            "ln1": pm.stacked_ones(cfg.enc_layers, (d,), (None,), dtype),
+            "ln2": pm.stacked_ones(cfg.enc_layers, (d,), (None,), dtype),
+            "attn": init_attention(keys[3], cfg.enc_layers, d, cfg.num_heads,
+                                   cfg.num_kv_heads, hd, dtype=dtype),
+            "mlp": _init_mlp(keys[4], cfg.enc_layers, d, cfg.d_ff, dtype),
+        },
+        "dec_blocks": {
+            "ln1": pm.stacked_ones(cfg.num_layers, (d,), (None,), dtype),
+            "ln_x": pm.stacked_ones(cfg.num_layers, (d,), (None,), dtype),
+            "ln2": pm.stacked_ones(cfg.num_layers, (d,), (None,), dtype),
+            "attn": init_attention(keys[5], cfg.num_layers, d, cfg.num_heads,
+                                   cfg.num_kv_heads, hd, dtype=dtype),
+            "xattn": init_cross_attention(keys[6], cfg.num_layers, d, d,
+                                          cfg.num_heads, hd, dtype=dtype),
+            "mlp": _init_mlp(keys[7], cfg.num_layers, d, cfg.d_ff, dtype),
+        },
+    }
+    return pm.unzip(tree)
+
+
+def encode(params, cfg: ArchConfig, frames):
+    """frames [B, S_src, d_frontend] → encoder memory [B, S_src, D]."""
+    cdt = _dtype(cfg.compute_dtype)
+    x = frames.astype(cdt) @ params["frame_proj"].astype(cdt)
+
+    def body(xc, p):
+        h = rms_norm(xc, p["ln1"])
+        out, _ = attention_apply(
+            p["attn"], h, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta, causal=False,
+        )
+        xc = xc + out
+        xc = xc + swiglu(rms_norm(xc, p["ln2"]), p["mlp"]["wg"], p["mlp"]["wi"], p["mlp"]["wo"])
+        return xc, None
+
+    body_ck = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_ck, x, params["enc_blocks"])
+    return rms_norm(x, params["enc_final_norm"])
+
+
+def forward(params, cfg: ArchConfig, frames, tokens):
+    """Training forward: (logits [B, S_dec, V], aux=0)."""
+    memory = encode(params, cfg, frames)
+    cdt = _dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    hd = cfg.resolved_head_dim
+
+    def body(xc, p):
+        h = rms_norm(xc, p["ln1"])
+        out, _ = attention_apply(
+            p["attn"], h, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            head_dim=hd, rope_theta=cfg.rope_theta, causal=True,
+        )
+        xc = xc + out
+        hx = rms_norm(xc, p["ln_x"])
+        mem_kv = cross_memory(p["xattn"], memory, cfg.num_heads, hd)
+        xc = xc + cross_attention_apply(p["xattn"], hx, mem_kv, n_heads=cfg.num_heads, head_dim=hd)
+        xc = xc + swiglu(rms_norm(xc, p["ln2"]), p["mlp"]["wg"], p["mlp"]["wi"], p["mlp"]["wo"])
+        return xc, None
+
+    body_ck = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_ck, x, params["dec_blocks"])
+    x = rms_norm(x, params["final_norm"])
+    return _logits(params, cfg, x), jnp.zeros((), jnp.float32)
+
+
+def encdec_loss(params, cfg: ArchConfig, batch):
+    logits, _ = forward(params, cfg, batch["frames"], batch["tokens"])
+    loss = softmax_xent(logits, batch["labels"])
+    return loss, {"ce": loss}
+
+
+def prefill(params, cfg: ArchConfig, frames, tokens, s_max: int, cache_dtype=jnp.bfloat16):
+    """Encode source + prefill decoder positions [0, S_dec)."""
+    memory = encode(params, cfg, frames)
+    cdt = _dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    b, s_dec, _ = x.shape
+    hd = cfg.resolved_head_dim
+
+    def body(xc, p):
+        h = rms_norm(xc, p["ln1"])
+        out, kf, vf = attention_prefill_kv(
+            p["attn"], h, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            head_dim=hd, rope_theta=cfg.rope_theta, causal=True,
+        )
+        xc = xc + out
+        hx = rms_norm(xc, p["ln_x"])
+        mk, mv = cross_memory(p["xattn"], memory, cfg.num_heads, hd)
+        xc = xc + cross_attention_apply(p["xattn"], hx, (mk, mv), n_heads=cfg.num_heads, head_dim=hd)
+        xc = xc + swiglu(rms_norm(xc, p["ln2"]), p["mlp"]["wg"], p["mlp"]["wi"], p["mlp"]["wo"])
+        pad = s_max - kf.shape[2]
+        kf = jnp.pad(kf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return xc, (kf.astype(cache_dtype), vf.astype(cache_dtype),
+                    mk.astype(cache_dtype), mv.astype(cache_dtype))
+
+    x, ys = jax.lax.scan(body, x, params["dec_blocks"])
+    ck, cv, mk, mv = ys
+    x = rms_norm(x, params["final_norm"])
+    logits = _logits(params, cfg, x[:, -1:])
+    cache = EncDecCache(k=ck, v=cv, mem_k=mk, mem_v=mv,
+                        index=jnp.asarray(s_dec, jnp.int32))
+    return logits, cache
+
+
+def decode_step(params, cfg: ArchConfig, token, cache: EncDecCache):
+    cdt = _dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], token, axis=0).astype(cdt)
+    hd = cfg.resolved_head_dim
+    index = cache.index
+
+    def body(xc, xs):
+        p, ck, cv, mk, mv = xs
+        h = rms_norm(xc, p["ln1"])
+        out, kv = attention_apply(
+            p["attn"], h, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            head_dim=hd, rope_theta=cfg.rope_theta, causal=True,
+            cache=KVCache(ck, cv), cache_index=index,
+        )
+        xc = xc + out
+        hx = rms_norm(xc, p["ln_x"])
+        xc = xc + cross_attention_apply(p["xattn"], hx, (mk, mv),
+                                        n_heads=cfg.num_heads, head_dim=hd)
+        xc = xc + swiglu(rms_norm(xc, p["ln2"]), p["mlp"]["wg"], p["mlp"]["wi"], p["mlp"]["wo"])
+        return xc, (kv.k, kv.v)
+
+    x, ys = jax.lax.scan(body, x, (params["dec_blocks"], cache.k, cache.v,
+                                   cache.mem_k, cache.mem_v))
+    ck, cv = ys
+    x = rms_norm(x, params["final_norm"])
+    return _logits(params, cfg, x), cache._replace(k=ck, v=cv, index=index + 1)

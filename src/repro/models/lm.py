@@ -1,0 +1,655 @@
+"""Unified decoder-only LM covering the assigned architecture families:
+
+  * dense GQA transformers (qwen2.5 / granite / llama3.2 / minicpm)
+  * MoE transformers (qwen3-moe, moonshot) — GShard-style EP MoE blocks
+  * hybrid attention+SSM (hymba) — parallel SWA-attention + Mamba-2/SSD
+    heads per layer (global-attn layers configured via `full_attn_layers`;
+    decode uses a ring-buffer window cache, DESIGN.md §5)
+  * xLSTM — groups of (1 sLSTM + k−1 mLSTM) blocks, chunkwise-parallel
+    training form and O(1)-state decode
+
+Layers are stacked and scanned (`lax.scan`) so the 512-device dry-run HLO
+stays compact; per-layer heterogeneity (hymba window mix) rides along as a
+scanned int32 array.  Params are `Param(value, logical_axes)` pairs — see
+`repro.dist.sharding` for the mesh mapping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.nn import param as pm
+from repro.nn.attention import (
+    KVCache,
+    attention_apply,
+    attention_core,
+    init_attention,
+)
+from repro.nn.layers import rms_norm, softmax_xent, swiglu
+from repro.nn.moe import init_moe, moe_apply
+from repro.nn.ssm import (
+    MLSTMState,
+    SLSTMState,
+    causal_conv,
+    mlstm_chunked,
+    mlstm_init_state,
+    mlstm_step,
+    slstm_init_state,
+    slstm_seq,
+    slstm_step,
+    ssd_chunked,
+    ssd_step,
+)
+
+FULL_WINDOW = 1 << 30
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+# ====================================================================== #
+# init
+# ====================================================================== #
+def _init_mlp(key, layers, d, f, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wg": pm.stacked_dense(k1, layers, (d, f), ("embed", "mlp"), dtype),
+        "wi": pm.stacked_dense(k2, layers, (d, f), ("embed", "mlp"), dtype),
+        "wo": pm.stacked_dense(k3, layers, (f, d), ("mlp", "embed"), dtype),
+    }
+
+
+def _init_ssd_branch(key, layers, d, cfg: ArchConfig, dtype):
+    """Mamba-2/SSD branch (hymba)."""
+    di = cfg.ssm_expand * d
+    h = cfg.ssm_heads
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": pm.stacked_dense(ks[0], layers, (d, 2 * di), ("embed", "mlp"), dtype),
+        "conv_w": pm.Param(
+            jax.random.normal(ks[1], (layers, cfg.conv_width, di), dtype) * 0.2,
+            ("layers", None, "mlp"),
+        ),
+        "w_bc": pm.stacked_dense(ks[2], layers, (di, 2 * h * n), ("mlp", "heads"), dtype),
+        "w_dt": pm.stacked_dense(ks[3], layers, (di, h), ("mlp", None), dtype),
+        "a_log": pm.stacked_zeros(layers, (h,), (None,), jnp.float32),
+        "dt_bias": pm.stacked_zeros(layers, (h,), (None,), jnp.float32),
+        "d_skip": pm.stacked_ones(layers, (h,), (None,), jnp.float32),
+        "w_out": pm.stacked_dense(ks[6], layers, (di, d), ("mlp", "embed"), dtype),
+        "out_norm": pm.stacked_ones(layers, (di,), (None,), dtype),
+    }
+
+
+def _init_mlstm_blocks(key, groups, per, d, heads, conv_width, dtype):
+    ks = jax.random.split(key, 8)
+    shp = lambda *s: (groups, per, *s)
+
+    def sd(k, s, axes, fan):
+        std = 1.0 / (fan**0.5)
+        return pm.Param(jax.random.normal(k, shp(*s), dtype) * std, ("layers", "stack", *axes))
+
+    return {
+        "ln": pm.Param(jnp.ones(shp(d), dtype), ("layers", "stack", None)),
+        "w_up": sd(ks[0], (d, 2 * d), ("embed", "mlp"), d),
+        "conv_w": pm.Param(jax.random.normal(ks[1], shp(conv_width, d), dtype) * 0.2,
+                           ("layers", "stack", None, "mlp")),
+        "wq": sd(ks[2], (d, d), ("embed", "heads"), d),
+        "wk": sd(ks[3], (d, d), ("embed", "heads"), d),
+        "wv": sd(ks[4], (d, d), ("embed", "heads"), d),
+        "w_gates": sd(ks[5], (d, 2 * heads), ("embed", None), d),
+        "b_gates": pm.Param(jnp.zeros(shp(2 * heads), jnp.float32), ("layers", "stack", None)),
+        "w_down": sd(ks[6], (d, d), ("heads", "embed"), d),
+        "out_norm": pm.Param(jnp.ones(shp(d), dtype), ("layers", "stack", None)),
+    }
+
+
+def _init_slstm_blocks(key, groups, d, heads, dtype):
+    ks = jax.random.split(key, 6)
+
+    def sd(k, s, axes, fan):
+        std = 1.0 / (fan**0.5)
+        return pm.Param(jax.random.normal(k, (groups, *s), dtype) * std, ("layers", *axes))
+
+    return {
+        "ln": pm.Param(jnp.ones((groups, d), dtype), ("layers", None)),
+        "wz": sd(ks[0], (d, d), ("embed", "heads"), d),
+        "wif": sd(ks[1], (d, 2 * d), ("embed", "heads"), d),
+        "wo_gate": sd(ks[2], (d, d), ("embed", "heads"), d),
+        "w_down": sd(ks[3], (d, d), ("heads", "embed"), d),
+    }
+
+
+def init_lm(key: jax.Array, cfg: ArchConfig):
+    """Returns (params, logical_axes) trees."""
+    dtype = _dtype(cfg.param_dtype)
+    d = cfg.d_model
+    keys = jax.random.split(key, 12)
+    tree: Dict[str, Any] = {
+        "embed": pm.Param(
+            jax.random.normal(keys[0], (cfg.vocab_size, d), dtype) * 0.02,
+            ("vocab", "embed"),
+        ),
+        "final_norm": pm.ones((d,), (None,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = pm.dense(keys[1], (d, cfg.vocab_size), ("embed", "vocab"), dtype)
+    if cfg.num_patches:
+        tree["patch_proj"] = pm.dense(keys[2], (cfg.d_frontend, d), (None, "embed"), dtype)
+
+    L = cfg.num_layers
+    if cfg.block_pattern == "attn":
+        blocks = {
+            "ln1": pm.stacked_ones(L, (d,), (None,), dtype),
+            "ln2": pm.stacked_ones(L, (d,), (None,), dtype),
+            "attn": init_attention(
+                keys[3], L, d, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim,
+                qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm, dtype=dtype,
+            ),
+        }
+        if cfg.is_moe:
+            blocks["moe"] = init_moe(
+                keys[4], L, d, cfg.moe_d_ff, cfg.num_experts, dtype,
+                num_shared=cfg.num_shared_experts, shared_d_ff=cfg.moe_d_ff,
+            )
+        else:
+            blocks["mlp"] = _init_mlp(keys[4], L, d, cfg.d_ff, dtype)
+        tree["blocks"] = blocks
+    elif cfg.block_pattern == "hymba":
+        blocks = {
+            "ln1": pm.stacked_ones(L, (d,), (None,), dtype),
+            "ln2": pm.stacked_ones(L, (d,), (None,), dtype),
+            "attn": init_attention(
+                keys[3], L, d, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim,
+                dtype=dtype,
+            ),
+            "ssd": _init_ssd_branch(keys[4], L, d, cfg, dtype),
+            "mlp": _init_mlp(keys[5], L, d, cfg.d_ff, dtype),
+        }
+        tree["blocks"] = blocks
+    elif cfg.block_pattern == "xlstm":
+        per = cfg.slstm_every or L
+        assert L % per == 0, "xlstm layers must divide into sLSTM-led groups"
+        groups = L // per
+        tree["slstm_blocks"] = _init_slstm_blocks(keys[3], groups, d, cfg.num_heads, dtype)
+        tree["mlstm_blocks"] = _init_mlstm_blocks(
+            keys[4], groups, per - 1, d, cfg.num_heads, cfg.conv_width, dtype
+        )
+    else:
+        raise ValueError(cfg.block_pattern)
+    return pm.unzip(tree)
+
+
+def window_schedule(cfg: ArchConfig) -> np.ndarray:
+    """Per-layer attention window (FULL_WINDOW = unmasked)."""
+    if cfg.window == 0:
+        return np.full(cfg.num_layers, FULL_WINDOW, np.int32)
+    w = np.full(cfg.num_layers, cfg.window, np.int32)
+    for l in cfg.full_attn_layers:
+        w[l] = FULL_WINDOW
+    return w
+
+
+# ====================================================================== #
+# block bodies
+# ====================================================================== #
+def _attn_block(cfg: ArchConfig, p, x, window_t, cache: Optional[KVCache], index):
+    h = rms_norm(x, p["ln1"])
+    out, new_cache = attention_apply(
+        p["attn"], h,
+        n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+        rope_theta=cfg.rope_theta, causal=True, window=window_t,
+        cache=cache, cache_index=index,
+    )
+    x = x + out
+    h2 = rms_norm(x, p["ln2"])
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.is_moe:
+        mo, aux = moe_apply(p["moe"], h2, top_k=cfg.top_k, capacity_factor=cfg.capacity_factor)
+        x = x + mo
+    else:
+        x = x + swiglu(h2, p["mlp"]["wg"], p["mlp"]["wi"], p["mlp"]["wo"])
+    return x, new_cache, aux
+
+
+def _ssd_branch(cfg: ArchConfig, p, h, ssm_state, conv_carry, decoding: bool):
+    """Mamba-2/SSD branch. h: [B,S,D] (S=1 for decode)."""
+    di = cfg.ssm_expand * cfg.d_model
+    nh, ns = cfg.ssm_heads, cfg.ssm_state
+    dh = di // nh
+    xz = h @ p["w_in"]
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xr, conv_carry = causal_conv(xr, p["conv_w"], conv_carry)
+    xr = jax.nn.silu(xr)
+    bc = xr @ p["w_bc"]
+    bmat, cmat = jnp.split(bc, 2, axis=-1)  # [B,S,H*ns] each
+    b, s, _ = h.shape
+    k = bmat.reshape(b, s, nh, ns)
+    q = cmat.reshape(b, s, nh, ns)
+    v = xr.reshape(b, s, nh, dh)
+    dt = jax.nn.softplus(xr @ p["w_dt"] + p["dt_bias"])  # [B,S,H]
+    la = -dt * jnp.exp(p["a_log"])  # log decay ≤ 0
+    if decoding:
+        ssm_state, y = ssd_step(ssm_state, q[:, 0], k[:, 0], v[:, 0], la[:, 0])
+        y = y[:, None]
+    else:
+        y, ssm_state = ssd_chunked(q, k, v, la, s0=ssm_state, chunk=min(cfg.chunk, s))
+    y = y + (p["d_skip"][None, None, :, None] * v).astype(y.dtype)
+    y = y.reshape(b, s, di).astype(h.dtype)
+    y = rms_norm(y, p["out_norm"]) * jax.nn.silu(z)
+    return (y @ p["w_out"]).astype(h.dtype), ssm_state, conv_carry
+
+
+def _hymba_block(cfg: ArchConfig, p, x, window_t, cache, ssm_state, conv_carry, index):
+    """Parallel attention + SSD heads, averaged (hymba)."""
+    h = rms_norm(x, p["ln1"])
+    attn_out, new_cache = attention_apply(
+        p["attn"], h,
+        n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+        rope_theta=cfg.rope_theta, causal=True, window=window_t,
+        cache=cache, cache_index=index,
+    )
+    ssd_out, ssm_state, conv_carry = _ssd_branch(
+        cfg, p["ssd"], h, ssm_state, conv_carry, decoding=(h.shape[1] == 1)
+    )
+    x = x + 0.5 * (attn_out + ssd_out)
+    h2 = rms_norm(x, p["ln2"])
+    x = x + swiglu(h2, p["mlp"]["wg"], p["mlp"]["wi"], p["mlp"]["wo"])
+    return x, new_cache, ssm_state, conv_carry
+
+
+def _mlstm_block(cfg: ArchConfig, p, x, state: MLSTMState, conv_carry, decoding: bool):
+    d = cfg.d_model
+    nh = cfg.num_heads
+    dh = d // nh
+    b, s, _ = x.shape
+    h = rms_norm(x, p["ln"])
+    up = h @ p["w_up"]
+    xm, zg = jnp.split(up, 2, axis=-1)
+    xc, conv_carry = causal_conv(xm, p["conv_w"], conv_carry)
+    xc = jax.nn.silu(xc)
+    q = (xc @ p["wq"]).reshape(b, s, nh, dh)
+    k = (xc @ p["wk"]).reshape(b, s, nh, dh) / (dh**0.5)
+    v = (xm @ p["wv"]).reshape(b, s, nh, dh)
+    gates = (h @ p["w_gates"]).astype(jnp.float32) + p["b_gates"]
+    lf_raw, li = jnp.split(gates, 2, axis=-1)  # [B,S,H]
+    lf = jax.nn.log_sigmoid(lf_raw)
+    if decoding:
+        state, y = mlstm_step(state, q[:, 0], k[:, 0], v[:, 0], lf[:, 0], li[:, 0])
+        y = y[:, None]
+    else:
+        y, state = mlstm_chunked(q, k, v, lf, li, st=state, chunk=min(cfg.chunk, s))
+    y = y.reshape(b, s, d).astype(x.dtype)
+    y = rms_norm(y, p["out_norm"]) * jax.nn.silu(zg)
+    return x + y @ p["w_down"], state, conv_carry
+
+
+def _slstm_block(cfg: ArchConfig, p, x, state: SLSTMState, decoding: bool):
+    d = cfg.d_model
+    nh = cfg.num_heads
+    dh = d // nh
+    b, s, _ = x.shape
+    h = rms_norm(x, p["ln"])
+    z = jnp.tanh(h @ p["wz"]).reshape(b, s, nh, dh)
+    gif = (h @ p["wif"]).astype(jnp.float32).reshape(b, s, nh, 2 * dh)
+    li, lf_raw = jnp.split(gif, 2, axis=-1)
+    lf = jax.nn.log_sigmoid(lf_raw)
+    o = jax.nn.sigmoid(h @ p["wo_gate"]).reshape(b, s, nh, dh)
+    if decoding:
+        state, y = slstm_step(state, z[:, 0].astype(jnp.float32), lf[:, 0], li[:, 0],
+                              o[:, 0].astype(jnp.float32))
+        y = y[:, None]
+    else:
+        y, state = slstm_seq(z, lf, li, o)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    return x + y @ p["w_down"], state
+
+
+# ====================================================================== #
+# caches
+# ====================================================================== #
+class LMCache(NamedTuple):
+    """Stacked-per-layer decode state for attn/hymba patterns."""
+
+    k: Optional[jax.Array]  # [L, B, Hkv, S_cache, dh]
+    v: Optional[jax.Array]
+    ssm: Optional[jax.Array]  # [L, B, H_ssm, ns, dh_ssm]
+    conv: Optional[jax.Array]  # [L, B, kw-1, di]
+    index: jax.Array  # scalar int32 — next position to write
+
+
+class XLSTMCache(NamedTuple):
+    s_c: jax.Array  # [G, B, H, dh]
+    s_n: jax.Array
+    s_m: jax.Array
+    m_c: jax.Array  # [G, P-1, B, H, dh, dh]
+    m_n: jax.Array  # [G, P-1, B, H, dh]
+    m_m: jax.Array  # [G, P-1, B, H]
+    conv: jax.Array  # [G, P-1, B, kw-1, D]
+    index: jax.Array
+
+
+def cache_len(cfg: ArchConfig, s_max: int) -> int:
+    """Per-layer KV length: ring buffer of `window` for pure-SWA layer mixes
+    (hymba long-context serving), else the full context."""
+    if cfg.block_pattern == "hymba" and cfg.window and s_max > cfg.window:
+        return cfg.window
+    return s_max
+
+
+def init_cache(cfg: ArchConfig, batch: int, s_max: int, dtype=jnp.bfloat16):
+    L, d = cfg.num_layers, cfg.d_model
+    if cfg.block_pattern == "xlstm":
+        per = cfg.slstm_every or L
+        g = L // per
+        nh = cfg.num_heads
+        dh = d // nh
+        return XLSTMCache(
+            s_c=jnp.zeros((g, batch, nh, dh), jnp.float32),
+            s_n=jnp.zeros((g, batch, nh, dh), jnp.float32),
+            s_m=jnp.full((g, batch, nh, dh), -1e30, jnp.float32),
+            m_c=jnp.zeros((g, per - 1, batch, nh, dh, dh), jnp.float32),
+            m_n=jnp.zeros((g, per - 1, batch, nh, dh), jnp.float32),
+            m_m=jnp.full((g, per - 1, batch, nh), -1e30, jnp.float32),
+            conv=jnp.zeros((g, per - 1, batch, cfg.conv_width - 1, d), dtype),
+            index=jnp.zeros((), jnp.int32),
+        )
+    sc = cache_len(cfg, s_max)
+    hkv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    k = jnp.zeros((L, batch, hkv, sc, dh), dtype)
+    v = jnp.zeros((L, batch, hkv, sc, dh), dtype)
+    ssm = conv = None
+    if cfg.block_pattern == "hymba":
+        di = cfg.ssm_expand * d
+        ssm = jnp.zeros((L, batch, cfg.ssm_heads, cfg.ssm_state, di // cfg.ssm_heads), jnp.float32)
+        conv = jnp.zeros((L, batch, cfg.conv_width - 1, di), dtype)
+    return LMCache(k=k, v=v, ssm=ssm, conv=conv, index=jnp.zeros((), jnp.int32))
+
+
+# ====================================================================== #
+# embedding / logits
+# ====================================================================== #
+def _embed(params, cfg: ArchConfig, tokens, patches=None):
+    cdt = _dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cdt)
+    if patches is not None:
+        px = (patches.astype(cdt) @ params["patch_proj"].astype(cdt))
+        x = jnp.concatenate([px, x], axis=1)
+    return x
+
+
+def _logits(params, cfg: ArchConfig, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head.astype(x.dtype)
+
+
+def _window_static(cfg: ArchConfig):
+    sched = window_schedule(cfg)
+    if len(set(sched.tolist())) == 1:
+        w = int(sched[0])
+        return None if w >= FULL_WINDOW else w
+    return sched  # heterogeneous → traced per-layer array
+
+
+# ====================================================================== #
+# training / full forward
+# ====================================================================== #
+def forward(params, cfg: ArchConfig, tokens, patches=None):
+    """Full forward (no cache). Returns (logits [B,S_text,V], aux)."""
+    x = _embed(params, cfg, tokens, patches)
+    n_patch = 0 if patches is None else patches.shape[1]
+
+    if cfg.block_pattern == "xlstm":
+        per = cfg.slstm_every or cfg.num_layers
+        b = x.shape[0]
+        nh = cfg.num_heads
+        dh = cfg.d_model // nh
+
+        def inner(xc2, pslice):
+            xc2, _, _ = _mlstm_block(
+                cfg, pslice, xc2, mlstm_init_state(b, nh, dh, dh), None, False
+            )
+            return xc2, None
+
+        # remat ONLY the mLSTM blocks: rematerializing the sLSTM step loop
+        # recomputes full-sequence gate tensors inside every scan iteration —
+        # a ~500 TB/device HBM blowup (EXPERIMENTS.md §Perf xlstm iter 2)
+        inner_ck = jax.checkpoint(inner) if cfg.remat else inner
+
+        def group_body(xc, xs):
+            ps, pms = xs
+            xc, _ = _slstm_block(cfg, ps, xc, slstm_init_state(b, nh, dh), decoding=False)
+            xc, _ = jax.lax.scan(inner_ck, xc, pms)
+            return xc, jnp.zeros((), jnp.float32)
+
+        x, _ = jax.lax.scan(group_body, x, (params["slstm_blocks"], params["mlstm_blocks"]))
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        wstat = _window_static(cfg)
+        blocks = params["blocks"]
+        if cfg.block_pattern == "attn":
+            def body(xc, xs):
+                if isinstance(wstat, np.ndarray):
+                    p, w = xs
+                else:
+                    p, w = xs[0], wstat
+                xc, _, aux = _attn_block(cfg, p, xc, w, None, 0)
+                return xc, aux
+        else:  # hymba
+            b = x.shape[0]
+            di = cfg.ssm_expand * cfg.d_model
+
+            def body(xc, xs):
+                if isinstance(wstat, np.ndarray):
+                    p, w = xs
+                else:
+                    p, w = xs[0], wstat
+                ssm0 = jnp.zeros((b, cfg.ssm_heads, cfg.ssm_state, di // cfg.ssm_heads), jnp.float32)
+                xc, _, _, _ = _hymba_block(cfg, p, xc, w, None, ssm0, None, 0)
+                return xc, jnp.zeros((), jnp.float32)
+
+        xs = (blocks, jnp.asarray(window_schedule(cfg))) if isinstance(wstat, np.ndarray) else (blocks,)
+        body_ck = jax.checkpoint(body) if cfg.remat else body
+        x, auxs = jax.lax.scan(body_ck, x, xs)
+        aux = auxs.mean()
+
+    x = rms_norm(x, params["final_norm"])
+    if n_patch:
+        x = x[:, n_patch:]
+    return _logits(params, cfg, x), aux
+
+
+def lm_loss(params, cfg: ArchConfig, batch: Dict[str, jax.Array]):
+    """Next-token CE (+ MoE aux). batch: tokens [B,S], labels [B,S], patches?"""
+    logits, aux = forward(params, cfg, batch["tokens"], batch.get("patches"))
+    loss = softmax_xent(logits, batch["labels"])
+    return loss + 0.01 * aux, {"ce": loss, "aux": aux}
+
+
+# ====================================================================== #
+# serving: prefill + decode
+# ====================================================================== #
+def prefill(params, cfg: ArchConfig, tokens, s_max: int, patches=None,
+            cache_dtype=jnp.bfloat16):
+    """Populate a decode cache from a prompt; returns (last-token logits,
+    cache).  tokens occupy positions [0, S); cache.index = S."""
+    from repro.nn.attention import attention_prefill_kv
+
+    x = _embed(params, cfg, tokens, patches)
+    b, s_tot, _ = x.shape
+    cache = init_cache(cfg, b, s_max, cache_dtype)
+
+    if cfg.block_pattern == "xlstm":
+        nh = cfg.num_heads
+        dh = cfg.d_model // nh
+
+        def group_body(xc, xs):
+            ps, pms = xs
+            xc, s_st = _slstm_block(cfg, ps, xc, slstm_init_state(b, nh, dh), decoding=False)
+
+            def inner(xc2, pslice):
+                st0 = mlstm_init_state(b, nh, dh, dh)
+                cc0 = jnp.zeros((b, cfg.conv_width - 1, cfg.d_model), xc2.dtype)
+                xc2, m_st, cc = _mlstm_block(cfg, pslice, xc2, st0, cc0, False)
+                return xc2, (m_st.c, m_st.n, m_st.m, cc)
+
+            xc, ys = jax.lax.scan(inner, xc, pms)
+            return xc, (s_st.c, s_st.n, s_st.m, *ys)
+
+        x, outs = jax.lax.scan(group_body, x, (params["slstm_blocks"], params["mlstm_blocks"]))
+        sc, sn, sm, mc, mn, mm, conv = outs
+        cache = XLSTMCache(s_c=sc, s_n=sn, s_m=sm, m_c=mc, m_n=mn, m_m=mm,
+                           conv=conv.astype(cache_dtype), index=jnp.asarray(s_tot, jnp.int32))
+    else:
+        sc_len = cache_len(cfg, s_max)
+        wstat = _window_static(cfg)
+        di = cfg.ssm_expand * cfg.d_model
+
+        def body(xc, xs):
+            if isinstance(wstat, np.ndarray):
+                p, w = xs
+            else:
+                p, w = xs[0], wstat
+            h = rms_norm(xc, p["ln1"])
+            if cfg.block_pattern == "hymba":
+                attn_out, kf, vf = attention_prefill_kv(
+                    p["attn"], h, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                    causal=True, window=w,
+                )
+                ssm0 = jnp.zeros((b, cfg.ssm_heads, cfg.ssm_state, di // cfg.ssm_heads), jnp.float32)
+                cc0 = jnp.zeros((b, cfg.conv_width - 1, di), xc.dtype)
+                ssd_out, ssm_st, cc = _ssd_branch(cfg, p["ssd"], h, ssm0, cc0, False)
+                xc = xc + 0.5 * (attn_out + ssd_out)
+                xc = xc + swiglu(rms_norm(xc, p["ln2"]), p["mlp"]["wg"], p["mlp"]["wi"], p["mlp"]["wo"])
+                # ring fill: slot j holds the latest position p ≡ j (mod W),
+                # p < s_tot; slots never written stay masked at decode
+                s_here = kf.shape[2]
+                slot_pos = (s_here - 1) - jnp.mod(
+                    s_here - 1 - jnp.arange(sc_len), sc_len
+                )
+                slot_pos = jnp.clip(slot_pos, 0, s_here - 1)
+                ck = jnp.take(kf, slot_pos, axis=2).astype(cache_dtype)
+                cv = jnp.take(vf, slot_pos, axis=2).astype(cache_dtype)
+                return xc, (ck, cv, ssm_st, cc.astype(cache_dtype), jnp.zeros((), jnp.float32))
+            else:
+                attn_out, kf, vf = attention_prefill_kv(
+                    p["attn"], h, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                    causal=True, window=w,
+                )
+                xc = xc + attn_out
+                h2 = rms_norm(xc, p["ln2"])
+                aux = jnp.zeros((), jnp.float32)
+                if cfg.is_moe:
+                    mo, aux = moe_apply(p["moe"], h2, top_k=cfg.top_k,
+                                        capacity_factor=cfg.capacity_factor)
+                    xc = xc + mo
+                else:
+                    xc = xc + swiglu(h2, p["mlp"]["wg"], p["mlp"]["wi"], p["mlp"]["wo"])
+                pad = sc_len - kf.shape[2]
+                kf = jnp.pad(kf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                vf = jnp.pad(vf, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                return xc, (kf.astype(cache_dtype), vf.astype(cache_dtype), aux)
+
+        xs = (params["blocks"], jnp.asarray(window_schedule(cfg))) if isinstance(wstat, np.ndarray) else (params["blocks"],)
+        x, ys = jax.lax.scan(body, x, xs)
+        if cfg.block_pattern == "hymba":
+            ck, cv, ssm, conv, _ = ys
+            cache = LMCache(k=ck, v=cv, ssm=ssm, conv=conv,
+                            index=jnp.asarray(s_tot, jnp.int32))
+        else:
+            ck, cv, _ = ys
+            cache = LMCache(k=ck, v=cv, ssm=None, conv=None,
+                            index=jnp.asarray(s_tot, jnp.int32))
+
+    x = rms_norm(x, params["final_norm"])
+    logits = _logits(params, cfg, x[:, -1:])
+    return logits, cache
+
+
+def decode_step(params, cfg: ArchConfig, token, cache):
+    """One decode step. token [B, 1] int32. Returns (logits [B,1,V], cache)."""
+    from repro.nn.attention import ring_decode_attention
+
+    x = _embed(params, cfg, token)
+    b = x.shape[0]
+    index = cache.index
+
+    if cfg.block_pattern == "xlstm":
+        def group_body(xc, xs):
+            ps, pms, sc, sn, sm, mc, mn, mm, conv = xs
+            xc, s_st = _slstm_block(cfg, ps, xc, SLSTMState(sc, sn, sm), decoding=True)
+
+            def inner(xc2, inner_xs):
+                pslice, c_, n_, m_, cc_ = inner_xs
+                xc2, m_st, cc = _mlstm_block(cfg, pslice, xc2, MLSTMState(c_, n_, m_),
+                                             cc_.astype(xc2.dtype), True)
+                return xc2, (m_st.c, m_st.n, m_st.m, cc)
+
+            xc, ys = jax.lax.scan(inner, xc, (pms, mc, mn, mm, conv))
+            return xc, (s_st.c, s_st.n, s_st.m, *ys)
+
+        x, outs = jax.lax.scan(
+            group_body, x,
+            (params["slstm_blocks"], params["mlstm_blocks"],
+             cache.s_c, cache.s_n, cache.s_m, cache.m_c, cache.m_n, cache.m_m, cache.conv),
+        )
+        sc, sn, sm, mc, mn, mm, conv = outs
+        new_cache = XLSTMCache(s_c=sc, s_n=sn, s_m=sm, m_c=mc, m_n=mn, m_m=mm,
+                               conv=conv.astype(cache.conv.dtype), index=index + 1)
+    else:
+        wsched = jnp.asarray(window_schedule(cfg))
+        ring = cfg.block_pattern == "hymba" and cache.k.shape[3] < FULL_WINDOW and cfg.window and cache.k.shape[3] == cfg.window
+
+        if cfg.block_pattern == "hymba":
+            def body(xc, xs):
+                p, w, ck, cv, ssm, conv = xs
+                h = rms_norm(xc, p["ln1"])
+                attn_out, ck, cv = ring_decode_attention(
+                    p["attn"], h, ck, cv, index,
+                    n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                )
+                ssd_out, ssm, conv_new = _ssd_branch(cfg, p["ssd"], h, ssm,
+                                                     conv.astype(xc.dtype), True)
+                xc = xc + 0.5 * (attn_out + ssd_out)
+                xc = xc + swiglu(rms_norm(xc, p["ln2"]), p["mlp"]["wg"], p["mlp"]["wi"], p["mlp"]["wo"])
+                return xc, (ck, cv, ssm, conv_new.astype(conv.dtype))
+
+            x, ys = jax.lax.scan(body, x, (params["blocks"], wsched, cache.k, cache.v,
+                                           cache.ssm, cache.conv))
+            ck, cv, ssm, conv = ys
+            new_cache = LMCache(k=ck, v=cv, ssm=ssm, conv=conv, index=index + 1)
+        else:
+            def body(xc, xs):
+                p, ck, cv = xs
+                h = rms_norm(xc, p["ln1"])
+                out, kv = attention_apply(
+                    p["attn"], h, n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                    head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                    causal=True, window=None, cache=KVCache(ck, cv), cache_index=index,
+                )
+                xc = xc + out
+                h2 = rms_norm(xc, p["ln2"])
+                if cfg.is_moe:
+                    mo, _ = moe_apply(p["moe"], h2, top_k=cfg.top_k,
+                                      capacity_factor=cfg.capacity_factor)
+                    xc = xc + mo
+                else:
+                    xc = xc + swiglu(h2, p["mlp"]["wg"], p["mlp"]["wi"], p["mlp"]["wo"])
+                return xc, (kv.k, kv.v)
+
+            x, ys = jax.lax.scan(body, x, (params["blocks"], cache.k, cache.v))
+            ck, cv = ys
+            new_cache = LMCache(k=ck, v=cv, ssm=None, conv=None, index=index + 1)
+
+    x = rms_norm(x, params["final_norm"])
+    return _logits(params, cfg, x), new_cache

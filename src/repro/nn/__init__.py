@@ -1,0 +1,2 @@
+"""NN substrate for the LM model zoo: functional layers with paired
+logical-axis metadata for GSPMD sharding."""

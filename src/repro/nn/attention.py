@@ -1,0 +1,290 @@
+"""GQA attention with RoPE, KV cache, sliding window, optional QK-norm.
+
+Dispatch policy (DESIGN.md §7): training/prefill shapes (static q_offset=0,
+static window) route to the Pallas flash kernel on TPU; decode shapes
+(traced cache index) and traced per-layer windows (hymba's scanned layer mix)
+use the XLA einsum path — decode attention is HBM-bandwidth-bound, where the
+kernel adds nothing over XLA's fused gather+dot.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.ctx import ashard
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.nn import param as pm
+from repro.nn.layers import apply_rope, rms_norm, rope_freqs
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, Hkv, S_max, Dh]
+    v: jax.Array  # [B, Hkv, S_max, Dh]
+
+
+def init_attention(
+    key,
+    layers: int,
+    d_model: int,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    qkv_bias: bool = False,
+    qk_norm: bool = False,
+    dtype=jnp.float32,
+) -> Dict[str, pm.Param]:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": pm.stacked_dense(ks[0], layers, (d_model, n_heads * head_dim), ("embed", "heads"), dtype),
+        "wk": pm.stacked_dense(ks[1], layers, (d_model, n_kv * head_dim), ("embed", "heads"), dtype),
+        "wv": pm.stacked_dense(ks[2], layers, (d_model, n_kv * head_dim), ("embed", "heads"), dtype),
+        "wo": pm.stacked_dense(ks[3], layers, (n_heads * head_dim, d_model), ("heads", "embed"), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = pm.stacked_zeros(layers, (n_heads * head_dim,), ("heads",), dtype)
+        p["bk"] = pm.stacked_zeros(layers, (n_kv * head_dim,), ("heads",), dtype)
+        p["bv"] = pm.stacked_zeros(layers, (n_kv * head_dim,), ("heads",), dtype)
+    if qk_norm:
+        p["q_norm"] = pm.stacked_ones(layers, (head_dim,), (None,), dtype)
+        p["k_norm"] = pm.stacked_ones(layers, (head_dim,), (None,), dtype)
+    return p
+
+
+def attention_core(
+    q: jax.Array,  # [B, Hq, Sq, Dh]
+    k: jax.Array,  # [B, Hkv, Sk, Dh]
+    v: jax.Array,
+    causal: bool,
+    window: Union[None, int, jax.Array],
+    q_offset: Union[int, jax.Array],
+) -> jax.Array:
+    static = isinstance(window, (int, type(None))) and isinstance(q_offset, int)
+    if static and q.shape[2] > 1:
+        return kops.flash_attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    # XLA path (decode / traced window).  Grouped-GQA einsum — NOT
+    # jnp.repeat: repeating KV heads materializes a g-times-larger tensor and
+    # breaks the cache's position sharding, forcing XLA SPMD into an
+    # involuntary full rematerialization (all-gather of the whole cache;
+    # EXPERIMENTS.md Perf decode iteration).
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    sk = k.shape[2]
+    # keep K/V in cache dtype (bf16): MXU consumes bf16 natively; accumulate
+    # in f32 via preferred_element_type (§Perf decode iter 2).
+    qf = q.reshape(b, hkv, g, sq, d).astype(k.dtype)
+
+    def _attend(q_chunk, off):
+        # q_chunk [b, hkv, g, qc, d]; off = absolute position of row 0
+        qc = q_chunk.shape[3]
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", q_chunk, k,
+                            preferred_element_type=jnp.float32) / jnp.sqrt(d)
+        qpos = off + jnp.arange(qc)[:, None]
+        kpos = jnp.arange(sk)[None, :]
+        m = jnp.ones((qc, sk), bool)
+        if causal:
+            m &= kpos <= qpos
+        if window is not None:
+            m &= kpos > qpos - window
+        logits = jnp.where(m[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", probs.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out
+
+    CHUNK = 2048
+    if sq > CHUNK and sq % CHUNK == 0 and isinstance(q_offset, int):
+        # long prefill: chunk the query dim so the probs buffer is
+        # [.., CHUNK, Sk] instead of [.., Sq, Sk] (bounds HBM when the
+        # Pallas flash path is unavailable, e.g. the CPU-lowered dry-run)
+        nb = sq // CHUNK
+        qb = jnp.moveaxis(qf.reshape(b, hkv, g, nb, CHUNK, d), 3, 0)
+        offs = q_offset + CHUNK * jnp.arange(nb)
+        outs = jax.lax.map(lambda args: _attend(*args), (qb, offs))
+        out = jnp.moveaxis(outs, 0, 3).reshape(b, hkv, g, sq, d)
+    else:
+        out = _attend(qf, q_offset)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def attention_apply(
+    p: Dict[str, jax.Array],  # per-layer slice (no leading L dim)
+    x: jax.Array,  # [B, S, D]
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float = 1e6,
+    causal: bool = True,
+    window: Union[None, int, jax.Array] = None,
+    cache: Optional[KVCache] = None,
+    cache_index: Union[int, jax.Array] = 0,
+    use_rope: bool = True,
+) -> Tuple[jax.Array, Optional[KVCache]]:
+    """Self-attention over x.  If `cache` is given:
+      * S == cache length → prefill: fills cache positions [0, S)
+      * S == 1            → decode: writes position `cache_index`, attends to
+                            the full cache with q_offset = cache_index.
+    """
+    b, s, d_model = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = ashard(q.reshape(b, s, n_heads, head_dim).transpose(0, 2, 1, 3), "dp", "tp")
+    k = ashard(k.reshape(b, s, n_kv, head_dim).transpose(0, 2, 1, 3), "dp", "tp")
+    v = ashard(v.reshape(b, s, n_kv, head_dim).transpose(0, 2, 1, 3), "dp", "tp")
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if use_rope:
+        if isinstance(cache_index, int) and cache_index == 0:
+            positions = jnp.arange(s)
+        else:
+            positions = cache_index + jnp.arange(s)
+        angles = rope_freqs(head_dim, rope_theta, positions)
+        q = ashard(apply_rope(q, angles), "dp", "tp")
+        k = ashard(apply_rope(k, angles), "dp", "tp")
+
+    new_cache = None
+    if cache is not None:
+        if s == 1:  # decode
+            idx = cache_index if not isinstance(cache_index, int) else jnp.asarray(cache_index)
+            ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, 0, idx, 0))
+            cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, 0, idx, 0))
+            new_cache = KVCache(ck, cv)
+            out = attention_core(q, ck, cv, causal=causal, window=window, q_offset=idx)
+        else:  # prefill
+            ck = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0))
+            new_cache = KVCache(ck, cv)
+            out = attention_core(q, k, v, causal=causal, window=window, q_offset=0)
+    else:
+        out = attention_core(q, k, v, causal=causal, window=window,
+                             q_offset=0 if isinstance(cache_index, int) else cache_index)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, n_heads * head_dim)
+    return out @ p["wo"], new_cache
+
+
+def init_cross_attention(key, layers, d_model, d_enc, n_heads, head_dim, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": pm.stacked_dense(ks[0], layers, (d_model, n_heads * head_dim), ("embed", "heads"), dtype),
+        "wk": pm.stacked_dense(ks[1], layers, (d_enc, n_heads * head_dim), ("embed", "heads"), dtype),
+        "wv": pm.stacked_dense(ks[2], layers, (d_enc, n_heads * head_dim), ("embed", "heads"), dtype),
+        "wo": pm.stacked_dense(ks[3], layers, (n_heads * head_dim, d_model), ("heads", "embed"), dtype),
+    }
+
+
+def cross_attention_apply(
+    p: Dict[str, jax.Array],
+    x: jax.Array,  # [B, Sq, D]
+    memory_kv: Tuple[jax.Array, jax.Array],  # precomputed ([B,H,Sk,dh], [B,H,Sk,dh])
+    *,
+    n_heads: int,
+    head_dim: int,
+) -> jax.Array:
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim).transpose(0, 2, 1, 3)
+    k, v = memory_kv
+    out = attention_core(q, k, v, causal=False, window=None, q_offset=0)
+    return out.transpose(0, 2, 1, 3).reshape(b, s, n_heads * head_dim) @ p["wo"]
+
+
+def cross_memory(p: Dict[str, jax.Array], enc: jax.Array, n_heads: int, head_dim: int):
+    """Precompute encoder-side K/V for cross attention (once per request)."""
+    b, sk, _ = enc.shape
+    k = (enc @ p["wk"]).reshape(b, sk, n_heads, head_dim).transpose(0, 2, 1, 3)
+    v = (enc @ p["wv"]).reshape(b, sk, n_heads, head_dim).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def attention_prefill_kv(
+    p: Dict[str, jax.Array],
+    x: jax.Array,  # [B, S, D]
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float = 1e6,
+    causal: bool = True,
+    window=None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Prefill that also returns the (rope-applied) full-length K/V so the
+    caller can populate dense or ring caches (DESIGN.md §5)."""
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = ashard(q.reshape(b, s, n_heads, head_dim).transpose(0, 2, 1, 3), "dp", "tp")
+    k = ashard(k.reshape(b, s, n_kv, head_dim).transpose(0, 2, 1, 3), "dp", "tp")
+    v = ashard(v.reshape(b, s, n_kv, head_dim).transpose(0, 2, 1, 3), "dp", "tp")
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    angles = rope_freqs(head_dim, rope_theta, jnp.arange(s))
+    q = ashard(apply_rope(q, angles), "dp", "tp")
+    k = ashard(apply_rope(k, angles), "dp", "tp")
+    out = attention_core(q, k, v, causal=causal, window=window, q_offset=0)
+    out = ashard(out, "dp", "tp")
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, n_heads * head_dim)
+    return out @ p["wo"], k, v
+
+
+def ring_decode_attention(
+    p: Dict[str, jax.Array],
+    x: jax.Array,  # [B, 1, D]
+    ck: jax.Array,  # [B, Hkv, W, dh] ring cache (rope-applied keys)
+    cv: jax.Array,
+    index,  # traced scalar: absolute position being generated
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    rope_theta: float = 1e6,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Sliding-window decode against a ring-buffer KV cache.  Slot s of the
+    ring holds absolute position p(s) = index - ((index - s) mod W); slots
+    with p(s) < 0 are masked (not yet written)."""
+    b, _, _ = x.shape
+    w = ck.shape[2]
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, 1, n_heads, head_dim).transpose(0, 2, 1, 3)
+    k = k.reshape(b, 1, n_kv, head_dim).transpose(0, 2, 1, 3)
+    v = v.reshape(b, 1, n_kv, head_dim).transpose(0, 2, 1, 3)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    angles = rope_freqs(head_dim, rope_theta, index + jnp.arange(1))
+    q = apply_rope(q, angles)
+    k = apply_rope(k, angles)
+    slot = jnp.mod(index, w)
+    ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, 0, slot, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, 0, slot, 0))
+    # absolute position per slot
+    s_idx = jnp.arange(w)
+    pos = index - jnp.mod(index - s_idx, w)
+    mask = pos >= 0
+    g = n_heads // n_kv
+    qf = q.reshape(b, n_kv, g, 1, head_dim).astype(jnp.float32)
+    kf = ck.astype(jnp.float32)
+    vf = cv.astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) / jnp.sqrt(head_dim)
+    logits = jnp.where(mask[None, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    out = out.reshape(b, n_heads, 1, head_dim).astype(x.dtype)
+    out = out.transpose(0, 2, 1, 3).reshape(b, 1, n_heads * head_dim)
+    return out @ p["wo"], ck, cv

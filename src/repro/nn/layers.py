@@ -1,0 +1,62 @@
+"""Functional NN building blocks: norms, MLPs, RoPE, embeddings."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma + beta
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    from repro.dist.ctx import ashard
+
+    g = ashard(x @ w_gate, "dp", None, "tp")
+    u = ashard(x @ w_up, "dp", None, "tp")
+    return (jax.nn.silu(g) * u) @ w_down
+
+
+def rope_freqs(head_dim: int, theta: float, positions: jax.Array) -> jax.Array:
+    """[*, head_dim/2] complex rotation angles for the given positions."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    return positions[..., None].astype(jnp.float32) * inv  # [*, hd/2]
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: [B, H, S, D]; angles: [S, D/2] or [B, S, D/2]."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    if angles.ndim == 2:
+        cos = jnp.cos(angles)[None, None]
+        sin = jnp.sin(angles)[None, None]
+    else:
+        cos = jnp.cos(angles)[:, None]
+        sin = jnp.sin(angles)[:, None]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    return jnp.take(table, ids, axis=0)
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token cross entropy; logits [.., V] fp32-stabilized."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

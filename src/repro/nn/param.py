@@ -1,0 +1,59 @@
+"""Parameter trees with paired logical sharding axes.
+
+Every parameter is created as ``Param(value, axes)`` where ``axes`` is a
+tuple of logical axis names (one per dim, ``None`` = replicated).  Model
+init builds one tree; :func:`unzip` splits it into the value tree (for
+compute) and the axes tree (for the sharding rule system in
+``repro.dist.sharding``) — the MaxText-style "logical axis" pattern.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Param(NamedTuple):
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def unzip(tree):
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def dense(key, shape, axes, dtype=jnp.float32, scale: float = 1.0) -> Param:
+    fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+    std = scale / (fan_in**0.5)
+    return Param(jax.random.normal(key, shape, dtype) * jnp.asarray(std, dtype), axes)
+
+
+def stacked_dense(key, layers: int, shape, axes, dtype=jnp.float32, scale: float = 1.0) -> Param:
+    """[layers, *shape] for lax.scan over layers; leading axis logical name 'layers'."""
+    fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+    std = scale / (fan_in**0.5)
+    v = jax.random.normal(key, (layers, *shape), dtype) * jnp.asarray(std, dtype)
+    return Param(v, ("layers", *axes))
+
+
+def zeros(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.zeros(shape, dtype), axes)
+
+
+def ones(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.ones(shape, dtype), axes)
+
+
+def stacked_zeros(layers: int, shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.zeros((layers, *shape), dtype), ("layers", *axes))
+
+
+def stacked_ones(layers: int, shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.ones((layers, *shape), dtype), ("layers", *axes))

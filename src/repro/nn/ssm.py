@@ -1,0 +1,285 @@
+"""Recurrent sequence mixers: Mamba-2-style SSD and xLSTM (mLSTM/sLSTM).
+
+TPU adaptation (DESIGN.md §3): selective scans are realized in *chunkwise
+parallel* form — within a chunk the recurrence becomes masked-decay matmuls
+(MXU work), across chunks a `lax.scan` carries the matrix state.  This is
+the SSD duality (Mamba-2) and the standard chunked mLSTM formulation; the
+per-step sequential forms are kept as oracles (`*_seq`) and as the O(1)
+decode steps (`*_step`).
+
+Shapes: q/k [B, S, H, dk], v [B, S, H, dv], log-decay la [B, S, H] (≤ 0),
+optional log input gate li [B, S, H] (mLSTM).  State [B, H, dk, dv].
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import param as pm
+
+
+# ====================================================================== #
+# SSD (scalar-decay linear recurrence): S_t = a_t S_{t-1} + k_tᵀ v_t
+#                                       y_t = q_t S_t
+# ====================================================================== #
+def ssd_seq(q, k, v, la, s0=None):
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    state = jnp.zeros((b, h, dk, dv), jnp.float32) if s0 is None else s0
+
+    def step(state, inp):
+        qt, kt, vt, lat = inp  # [B,H,dk] [B,H,dk] [B,H,dv] [B,H]
+        a = jnp.exp(lat)[..., None, None]
+        state = a * state + kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", qt, state)
+        return state, y
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), la.transpose(1, 0, 2))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state  # [B,S,H,dv]
+
+
+def ssd_chunked(q, k, v, la, s0=None, chunk: int = 128):
+    """Chunkwise-parallel SSD. Returns (y [B,S,H,dv], final state).
+
+    Non-multiple lengths are padded with identity steps (k=v=0, decay=1):
+    they contribute nothing and leave the carried state untouched."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        zq = jnp.zeros((b, pad, h, dk), q.dtype)
+        q = jnp.concatenate([q, zq], 1)
+        k = jnp.concatenate([k, zq], 1)
+        v = jnp.concatenate([v, jnp.zeros((b, pad, h, dv), v.dtype)], 1)
+        la = jnp.concatenate([la, jnp.zeros((b, pad, h), la.dtype)], 1)
+        y, st = ssd_chunked(q, k, v, la, s0=s0, chunk=chunk)
+        return y[:, :s], st
+    nc = s // chunk
+    qf = q.reshape(b, nc, chunk, h, dk).astype(jnp.float32)
+    kf = k.reshape(b, nc, chunk, h, dk).astype(jnp.float32)
+    vf = v.reshape(b, nc, chunk, h, dv).astype(jnp.float32)
+    laf = la.reshape(b, nc, chunk, h).astype(jnp.float32)
+    state0 = jnp.zeros((b, h, dk, dv), jnp.float32) if s0 is None else s0
+
+    def chunk_step(state, inp):
+        qc, kc, vc, lac = inp  # [B,c,H,*]
+        cum = jnp.cumsum(lac, axis=1)  # [B,c,H]
+        total = cum[:, -1]  # [B,H]
+        # intra-chunk: L[t,s] = exp(cum_t - cum_s) for s<=t
+        rel = cum[:, :, None, :] - cum[:, None, :, :]  # [B,t,s,H]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        L = jnp.where(tri[None, :, :, None], jnp.exp(rel), 0.0)
+        scores = jnp.einsum("bthk,bshk->btsh", qc, kc) * L
+        y_intra = jnp.einsum("btsh,bshv->bthv", scores, vc)
+        # inter-chunk: y += exp(cum_t) q_t S_prev
+        qdec = qc * jnp.exp(cum)[..., None]
+        y_inter = jnp.einsum("bthk,bhkv->bthv", qdec, state)
+        # state update: S = exp(total) S + Σ_s exp(total - cum_s) k_s v_sᵀ
+        w = jnp.exp(total[:, None] - cum)  # [B,c,H]
+        kw = kf_scale = kc * w[..., None]
+        s_new = jnp.exp(total)[..., None, None] * state + jnp.einsum(
+            "bshk,bshv->bhkv", kw, vc
+        )
+        return s_new, y_intra + y_inter
+
+    xs = (qf.transpose(1, 0, 2, 3, 4), kf.transpose(1, 0, 2, 3, 4),
+          vf.transpose(1, 0, 2, 3, 4), laf.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(chunk_step, state0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dv)
+    return y.astype(v.dtype), state
+
+
+def ssd_step(state, qt, kt, vt, lat):
+    """Single decode step. state [B,H,dk,dv]; qt/kt [B,H,dk], vt [B,H,dv]."""
+    a = jnp.exp(lat.astype(jnp.float32))[..., None, None]
+    state = a * state + kt.astype(jnp.float32)[..., :, None] * vt.astype(jnp.float32)[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", qt.astype(jnp.float32), state)
+    return state, y.astype(vt.dtype)
+
+
+# ====================================================================== #
+# mLSTM (xLSTM): matrix memory + normalizer + exp input gate, stabilized
+#   C_t = f_t C_{t-1} + i_t k_tᵀ v_t ;  n_t = f_t n_{t-1} + i_t k_t
+#   h_t = (q_t C_t) / max(|q_t n_t|, 1)
+# with log-space gates lf = logsigmoid(f̂), li = î and running max
+# stabilizer m (chunk-granular in the chunked form; DESIGN.md §4).
+# ====================================================================== #
+class MLSTMState(NamedTuple):
+    c: jax.Array  # [B, H, dk, dv]
+    n: jax.Array  # [B, H, dk]
+    m: jax.Array  # [B, H]
+
+
+def mlstm_init_state(b, h, dk, dv):
+    return MLSTMState(
+        c=jnp.zeros((b, h, dk, dv), jnp.float32),
+        n=jnp.zeros((b, h, dk), jnp.float32),
+        m=jnp.full((b, h), -1e30, jnp.float32),
+    )
+
+
+def mlstm_seq(q, k, v, lf, li, st: Optional[MLSTMState] = None):
+    """Per-step oracle (stabilized exactly as the xLSTM paper)."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    st = st or mlstm_init_state(b, h, dk, dv)
+
+    def step(st, inp):
+        qt, kt, vt, lft, lit = inp
+        m_new = jnp.maximum(st.m + lft, lit)
+        fdec = jnp.exp(st.m + lft - m_new)
+        iexp = jnp.exp(lit - m_new)
+        c = fdec[..., None, None] * st.c + iexp[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :]
+        )
+        n = fdec[..., None] * st.n + iexp[..., None] * kt
+        num = jnp.einsum("bhk,bhkv->bhv", qt, c)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n))
+        h_t = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return MLSTMState(c, n, m_new), h_t
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (q, k, v)) + tuple(
+        a.transpose(1, 0, 2) for a in (lf, li)
+    )
+    st, ys = jax.lax.scan(step, st, xs)
+    return ys.transpose(1, 0, 2, 3), st
+
+
+def mlstm_chunked(q, k, v, lf, li, st: Optional[MLSTMState] = None, chunk: int = 128):
+    """Chunkwise mLSTM with per-step-exact stabilizer computed via cummax.
+
+    Non-multiple lengths padded with identity steps (decay 1, gate −∞)."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        zq = jnp.zeros((b, pad, h, dk), q.dtype)
+        q = jnp.concatenate([q, zq], 1)
+        k = jnp.concatenate([k, zq], 1)
+        v = jnp.concatenate([v, jnp.zeros((b, pad, h, dv), v.dtype)], 1)
+        lf = jnp.concatenate([lf, jnp.zeros((b, pad, h), lf.dtype)], 1)
+        li = jnp.concatenate([li, jnp.full((b, pad, h), -1e30, li.dtype)], 1)
+        y, stf = mlstm_chunked(q, k, v, lf, li, st=st, chunk=chunk)
+        return y[:, :s], stf
+    nc = s // chunk
+    st = st or mlstm_init_state(b, h, dk, dv)
+    qf = q.reshape(b, nc, chunk, h, dk).astype(jnp.float32)
+    kf = k.reshape(b, nc, chunk, h, dk).astype(jnp.float32)
+    vf = v.reshape(b, nc, chunk, h, dv).astype(jnp.float32)
+    lff = lf.reshape(b, nc, chunk, h).astype(jnp.float32)
+    lif = li.reshape(b, nc, chunk, h).astype(jnp.float32)
+
+    def chunk_step(carry, inp):
+        c_st, n_st, m_st = carry
+        qc, kc, vc, lfc, lic = inp
+        cum = jnp.cumsum(lfc, axis=1)  # Σ_{r≤t} lf_r   [B,c,H]
+        total = cum[:, -1]
+        # per-step stabilizer: m_t = cum_t + max(m_0, cummax_s≤t(li_s - cum_s))
+        z = lic - cum
+        zmax = jax.lax.cummax(z, axis=1)
+        m_t = cum + jnp.maximum(m_st[:, None], zmax)  # [B,c,H]
+        # intra contributions: D[t,s] = exp(cum_t - cum_s + li_s - m_t), s≤t
+        rel = cum[:, :, None, :] - cum[:, None, :, :] + lic[:, None, :, :] - m_t[:, :, None, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        D = jnp.where(tri[None, :, :, None], jnp.exp(rel), 0.0)
+        scores = jnp.einsum("bthk,bshk->btsh", qc, kc) * D
+        num_intra = jnp.einsum("btsh,bshv->bthv", scores, vc)
+        # denominator uses k (not qk): n contribution = Σ_s D[t,s] k_s
+        n_intra = jnp.einsum("btsh,bshk->bthk", D, kc)
+        # inter: decay of old state to step t: exp(cum_t + m_0 - m_t)
+        dec = jnp.exp(cum + m_st[:, None] - m_t)  # [B,c,H]
+        num_inter = jnp.einsum("bthk,bhkv->bthv", qc * dec[..., None], c_st)
+        n_t = n_intra + dec[..., None] * n_st[:, None]
+        num = num_intra + num_inter
+        den = jnp.abs(jnp.einsum("bthk,bthk->bth", qc, n_t))
+        y = num / jnp.maximum(den, jnp.exp(-m_t))[..., None]
+        # carry update (end of chunk, stabilized at m_end)
+        m_end = m_t[:, -1]
+        w = jnp.exp(total[:, None] - cum + lic - m_end[:, None])  # [B,c,H]
+        c_new = jnp.exp(total + m_st - m_end)[..., None, None] * c_st + jnp.einsum(
+            "bshk,bshv->bhkv", kc * w[..., None], vc
+        )
+        n_new = jnp.exp(total + m_st - m_end)[..., None] * n_st + jnp.einsum(
+            "bsh,bshk->bhk", w, kc
+        )
+        return (c_new, n_new, m_end), y
+
+    xs = (qf.transpose(1, 0, 2, 3, 4), kf.transpose(1, 0, 2, 3, 4),
+          vf.transpose(1, 0, 2, 3, 4), lff.transpose(1, 0, 2, 3),
+          lif.transpose(1, 0, 2, 3))
+    (c, n, m), ys = jax.lax.scan(chunk_step, (st.c, st.n, st.m), xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dv)
+    return y.astype(v.dtype), MLSTMState(c, n, m)
+
+
+def mlstm_step(st: MLSTMState, qt, kt, vt, lft, lit):
+    qt, kt, vt = (a.astype(jnp.float32) for a in (qt, kt, vt))
+    m_new = jnp.maximum(st.m + lft, lit)
+    fdec = jnp.exp(st.m + lft - m_new)
+    iexp = jnp.exp(lit - m_new)
+    c = fdec[..., None, None] * st.c + iexp[..., None, None] * (kt[..., :, None] * vt[..., None, :])
+    n = fdec[..., None] * st.n + iexp[..., None] * kt
+    num = jnp.einsum("bhk,bhkv->bhv", qt, c)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n))
+    h_t = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return MLSTMState(c, n, m_new), h_t
+
+
+# ====================================================================== #
+# sLSTM (xLSTM): scalar memory per head-dim, sequential by nature
+# ====================================================================== #
+class SLSTMState(NamedTuple):
+    c: jax.Array  # [B, H, dh]
+    n: jax.Array  # [B, H, dh]
+    m: jax.Array  # [B, H, dh]
+
+
+def slstm_init_state(b, h, dh):
+    return SLSTMState(
+        c=jnp.zeros((b, h, dh), jnp.float32),
+        n=jnp.zeros((b, h, dh), jnp.float32),
+        m=jnp.full((b, h, dh), -1e30, jnp.float32),
+    )
+
+
+def slstm_step(st: SLSTMState, zt, lft, lit, ot):
+    """z: cell input [B,H,dh]; lf/li: log gates [B,H,dh]; o: output gate."""
+    m_new = jnp.maximum(st.m + lft, lit)
+    fdec = jnp.exp(st.m + lft - m_new)
+    iexp = jnp.exp(lit - m_new)
+    c = fdec * st.c + iexp * zt
+    n = fdec * st.n + iexp
+    h = ot * c / jnp.maximum(n, jnp.exp(-m_new))
+    return SLSTMState(c, n, m_new), h
+
+
+def slstm_seq(z, lf, li, o, st: Optional[SLSTMState] = None, unroll: int = 8):
+    """Sequential sLSTM.  `unroll` keeps the (c, n, m) state in registers
+    across unrolled steps instead of round-tripping HBM every step — the
+    dominant cost of a scalar recurrence on TPU (EXPERIMENTS.md §Perf)."""
+    b, s, h, dh = z.shape
+    st = st or slstm_init_state(b, h, dh)
+
+    def step(st, inp):
+        return slstm_step(st, *inp)
+
+    xs = tuple(a.transpose(1, 0, 2, 3).astype(jnp.float32) for a in (z, lf, li, o))
+    st, ys = jax.lax.scan(step, st, xs, unroll=min(unroll, s))
+    return ys.transpose(1, 0, 2, 3).astype(z.dtype), st
+
+
+# ====================================================================== #
+# causal depthwise conv (width kw) with carry for decode
+# ====================================================================== #
+def causal_conv(x: jax.Array, w: jax.Array, carry: Optional[jax.Array] = None):
+    """x [B,S,D], w [kw, D] depthwise. Returns (y [B,S,D], new carry [B,kw-1,D])."""
+    kw = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], kw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    ys = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(kw))
+    return ys, xp[:, -(kw - 1) :]

@@ -1,0 +1,2 @@
+"""Serving: host-offloaded embedding store, chunked task scheduling with
+shard-embedding reuse, LM decode loop."""

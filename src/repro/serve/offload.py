@@ -1,0 +1,182 @@
+"""Out-of-memory embedding management (paper §V-B) — TPU/JAX realization.
+
+NeutronRT offloads intermediate embeddings to CPU memory and reads sparse
+rows with GPU-directed zero-copy.  The JAX equivalent keeps the per-layer
+state (h, a, nct) as **host numpy** and, per update batch, transfers only the
+*compact row sets the plan touches* to the device, runs the same
+`incremental_layer` kernel over compact arrays (the kernel is index-based,
+so a compact view with remapped indices is exactly equivalent), and groups
+all write-backs (the paper's "group all updated embeddings and write them
+back in parallel").  Transfer accounting mirrors the paper's access-volume
+metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.affected import LayerPlan, build_plan
+from repro.core.engine import BatchStats
+from repro.core.full import full_forward
+from repro.core.incremental import incremental_layer, with_scratch
+from repro.core.operators import GNNModel, Params
+from repro.graph.csr import CSRGraph
+from repro.graph.streaming import UpdateBatch
+
+
+@dataclasses.dataclass
+class TransferStats:
+    rows_up: int = 0
+    rows_down: int = 0
+    bytes_up: int = 0
+    bytes_down: int = 0
+
+
+def _remap(indices: np.ndarray, rows: np.ndarray, n_compact: int, scratch: int) -> np.ndarray:
+    """Map global vertex ids → compact positions; scratch id → n_compact."""
+    lut = np.full(scratch + 1, n_compact, np.int32)
+    if rows.size:
+        lut[rows] = np.arange(rows.shape[0], dtype=np.int32)
+    return lut[np.asarray(indices, np.int64)]
+
+
+def _override_rows(dst_vals: np.ndarray, dst_rows: np.ndarray,
+                   src_rows: np.ndarray, src_vals: np.ndarray) -> None:
+    """dst_vals[i] ← src_vals[j] where dst_rows[i] == src_rows[j] (vectorized)."""
+    if not src_rows.size or not dst_rows.size:
+        return
+    order = np.argsort(src_rows)
+    pos = np.searchsorted(src_rows[order], dst_rows)
+    pos = np.clip(pos, 0, src_rows.size - 1)
+    hit = src_rows[order][pos] == dst_rows
+    dst_vals[hit] = src_vals[order][pos[hit]]
+
+
+class OffloadedRTECEngine:
+    """Incremental RTEC with host-resident state (CPU-offload engine)."""
+
+    def __init__(self, model: GNNModel, params: Sequence[Params], graph: CSRGraph,
+                 x: np.ndarray):
+        self.model = model
+        self.params = list(params)
+        self.L = len(params)
+        self.graph = graph
+        self.x = np.asarray(x, np.float32)
+        self.transfers = TransferStats()
+        states = full_forward(model, params, jnp.asarray(self.x), graph)
+        self.h: List[np.ndarray] = [self.x.copy()] + [np.array(s.h) for s in states]
+        self.a: List[np.ndarray] = [np.array(s.a) for s in states]
+        self.nct: List[np.ndarray] = [np.array(s.nct) for s in states]
+
+    @property
+    def embeddings(self) -> np.ndarray:
+        return self.h[-1]
+
+    def state_bytes(self) -> int:
+        return (sum(a.nbytes for a in self.a) + sum(c.nbytes for c in self.nct)
+                + sum(h.nbytes for h in self.h))
+
+    # ------------------------------------------------------------------ #
+    def apply_batch(self, batch: UpdateBatch) -> BatchStats:
+        t0 = time.perf_counter()
+        g_new = self.graph.apply_updates(
+            batch.ins_src, batch.ins_dst, batch.del_src, batch.del_dst,
+            batch.ins_weights, batch.ins_etypes,
+        )
+        t1 = time.perf_counter()
+        plan = build_plan(self.model, self.graph, g_new, batch, self.L)
+        t2 = time.perf_counter()
+
+        n = self.graph.n
+        deg_old_np = plan.deg_old
+        deg_new_np = plan.deg_new
+
+        # layer-0 feature updates: keep old values for the delta pass
+        if batch.feat_vertices is not None and batch.feat_vertices.size:
+            prev_rows = np.asarray(batch.feat_vertices, np.int64)
+            prev_old = self.h[0][prev_rows].copy()
+            self.h[0][prev_rows] = batch.feat_values
+        else:
+            prev_rows = np.zeros(0, np.int64)
+            prev_old = np.zeros((0, self.h[0].shape[1]), np.float32)
+
+        for l, lp in enumerate(plan.layers):
+            prev_rows, prev_old = self._layer(
+                l, lp, deg_old_np, deg_new_np, prev_rows, prev_old, n
+            )
+        self.graph = g_new
+        t3 = time.perf_counter()
+        return BatchStats(
+            inc_edges=plan.total_inc_edges(), full_edges=plan.total_full_edges(),
+            out_vertices=plan.total_vertices(), plan_time_s=t2 - t1,
+            exec_time_s=t3 - t2, graph_time_s=t1 - t0,
+        )
+
+    # ------------------------------------------------------------------ #
+    def _layer(self, l: int, lp: LayerPlan, deg_old_np, deg_new_np,
+               prev_rows: np.ndarray, prev_old: np.ndarray, n: int):
+        need_h = np.unique(np.concatenate([
+            lp.e_src[lp.e_mask].astype(np.int64),
+            lp.e_dst[lp.e_mask].astype(np.int64),
+            lp.f_src[lp.f_emask].astype(np.int64),
+            lp.f_rows[lp.f_mask].astype(np.int64),
+            lp.out_rows[lp.out_mask].astype(np.int64),
+            prev_rows,
+        ]))
+        srows = lp.out_rows[lp.out_mask].astype(np.int64)  # = touch ∪ full ∪ carried
+        nh, ns = need_h.shape[0], srows.shape[0]
+        out_old = self.h[l + 1][srows].copy() if ns else np.zeros((0, self.h[l + 1].shape[1]), np.float32)
+        if nh == 0 and ns == 0:
+            return srows, out_old
+
+        h_prev = self.h[l]
+        h_new_rows = h_prev[need_h]  # host already holds the NEW h^{l-1}
+        h_old_rows = h_new_rows.copy()
+        _override_rows(h_old_rows, need_h, prev_rows, prev_old)
+
+        a_rows = self.a[l][srows]
+        nct_rows = self.nct[l][srows]
+        h_cur_rows = self.h[l + 1][srows]
+
+        self.transfers.rows_up += 2 * nh + 3 * ns
+        self.transfers.bytes_up += 2 * h_new_rows.nbytes + a_rows.nbytes + nct_rows.nbytes + h_cur_rows.nbytes
+
+        e_src = _remap(lp.e_src, need_h, nh, n)
+        e_dst = _remap(lp.e_dst, need_h, nh, n)
+        f_src = _remap(lp.f_src, need_h, nh, n)
+        touch_rows_s = _remap(lp.touch_rows, srows, ns, n)
+        f_rows_s = _remap(lp.f_rows, srows, ns, n)
+        out_rows_s = _remap(lp.out_rows, srows, ns, n)
+        f_rows_h = _remap(lp.f_rows, need_h, nh, n)
+        out_rows_h = _remap(lp.out_rows, need_h, nh, n)
+
+        deg_old_rows = np.concatenate([deg_old_np[need_h], [0.0]]).astype(np.float32)
+        deg_new_rows = np.concatenate([deg_new_np[need_h], [0.0]]).astype(np.float32)
+
+        a_new, nct_new, h_new = incremental_layer(
+            self.model, self.params[l],
+            with_scratch(jnp.asarray(h_old_rows)), with_scratch(jnp.asarray(h_new_rows)),
+            jnp.asarray(deg_old_rows), jnp.asarray(deg_new_rows),
+            jnp.asarray(a_rows), jnp.asarray(nct_rows), jnp.asarray(h_cur_rows),
+            jnp.asarray(e_src), jnp.asarray(e_dst), jnp.asarray(lp.e_rowidx),
+            jnp.asarray(lp.e_sign), jnp.asarray(lp.e_use_new), jnp.asarray(lp.e_w),
+            jnp.asarray(lp.e_t), jnp.asarray(lp.e_mask),
+            jnp.asarray(touch_rows_s), jnp.asarray(lp.touch_mask),
+            jnp.asarray(f_rows_s), jnp.asarray(lp.f_mask),
+            jnp.asarray(f_src), jnp.asarray(lp.f_rowidx), jnp.asarray(lp.f_w),
+            jnp.asarray(lp.f_t), jnp.asarray(lp.f_emask),
+            jnp.asarray(out_rows_s), jnp.asarray(lp.out_mask),
+            f_rows_h=jnp.asarray(f_rows_h), out_rows_h=jnp.asarray(out_rows_h),
+        )
+
+        # grouped parallel write-back
+        self.a[l][srows] = np.asarray(a_new)
+        self.nct[l][srows] = np.asarray(nct_new)
+        self.h[l + 1][srows] = np.asarray(h_new)
+        self.transfers.rows_down += 3 * ns
+        self.transfers.bytes_down += int(np.asarray(a_new).nbytes + np.asarray(nct_new).nbytes + np.asarray(h_new).nbytes)
+        return srows, out_old

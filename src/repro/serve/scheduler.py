@@ -1,0 +1,140 @@
+"""Chunked task scheduling with inter-chunk shard-embedding reuse (§V-C).
+
+When a layer's computation graph exceeds device memory, NeutronRT splits it
+into destination-vertex chunks and caches neighborhood intersections between
+chunks in a device staging buffer so shared source embeddings transfer once.
+
+`ChunkedLayerScheduler` executes a (full or subset) layer over host-resident
+embeddings in chunks: per chunk it gathers only the source rows NOT already
+staged from the previous chunk (precomputed intersections — the paper's
+mechanism), runs the compact `subset_layer`, and writes results back.
+Transfer accounting exposes the reuse win (benchmarks/fig10).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.full import next_bucket, subset_layer
+from repro.core.operators import GNNModel, Params
+from repro.graph.csr import CSRGraph
+
+
+@dataclasses.dataclass
+class ChunkStats:
+    chunks: int = 0
+    rows_transferred: int = 0
+    rows_reused: int = 0
+    edges_processed: int = 0
+
+    @property
+    def reuse_frac(self) -> float:
+        tot = self.rows_transferred + self.rows_reused
+        return self.rows_reused / tot if tot else 0.0
+
+
+from functools import partial
+
+
+@partial(jax.jit, static_argnums=(0, 11))
+def _subset_jit(model, p, h_prev, rows, rmask, e_src, e_ridx, e_w, e_t, e_mask, deg, r_cap):
+    return subset_layer(model, p, h_prev, rows, rmask, e_src, e_ridx, e_w, e_t, e_mask, deg, r_cap)
+
+
+class ChunkedLayerScheduler:
+    def __init__(self, model: GNNModel, chunk_size: int = 8192, reuse: bool = True):
+        self.model = model
+        self.chunk_size = chunk_size
+        self.reuse = reuse
+        self.stats = ChunkStats()
+
+    def run_layer(
+        self,
+        p: Params,
+        g: CSRGraph,
+        h_prev_host: np.ndarray,  # [N, d_in] host
+        rows: np.ndarray,  # destination rows to compute
+        deg: np.ndarray,  # [N] float
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Returns (a_rows, nct_rows, h_rows) for `rows`, chunked."""
+        n = g.n
+        outs_a, outs_n, outs_h = [], [], []
+        staged_rows = np.zeros(0, np.int64)  # rows resident on device
+        staged_vals: jnp.ndarray = None  # [len(staged), d]
+        deg_x = jnp.asarray(np.concatenate([deg.astype(np.float32), [0.0]]))
+
+        for c0 in range(0, rows.shape[0], self.chunk_size):
+            chunk = rows[c0 : c0 + self.chunk_size]
+            srcs, ridx, ws, ts = [], [], [], []
+            for i, v in enumerate(chunk):
+                nb, w, t = g.in_edge_data(int(v))
+                srcs.extend(nb.tolist())
+                ridx.extend([i] * nb.shape[0])
+                ws.extend(w.tolist())
+                ts.extend(t.tolist())
+            self.stats.edges_processed += len(srcs)
+            # rows needed on device for this chunk
+            need = np.unique(np.concatenate([np.asarray(srcs, np.int64), chunk]))
+            if self.reuse and staged_rows.size:
+                shared = np.intersect1d(need, staged_rows, assume_unique=True)
+                fresh = np.setdiff1d(need, staged_rows, assume_unique=True)
+            else:
+                shared = np.zeros(0, np.int64)
+                fresh = need
+            self.stats.rows_reused += shared.size
+            self.stats.rows_transferred += fresh.size
+            # assemble device buffer: shared rows reused from staging
+            if shared.size and staged_vals is not None:
+                pos = np.searchsorted(staged_rows, shared)
+                dev_shared = staged_vals[jnp.asarray(pos)]
+                dev_fresh = jnp.asarray(h_prev_host[fresh])
+                order = np.argsort(np.concatenate([shared, fresh]))
+                allrows = np.concatenate([shared, fresh])[order]
+                dev = jnp.concatenate([dev_shared, dev_fresh], axis=0)[jnp.asarray(order)]
+            else:
+                allrows = need
+                dev = jnp.asarray(h_prev_host[need])
+            staged_rows, staged_vals = allrows, dev
+
+            # remap into compact space
+            lut = np.full(n + 1, allrows.shape[0], np.int32)
+            lut[allrows] = np.arange(allrows.shape[0], dtype=np.int32)
+            r_cap = next_bucket(chunk.shape[0])
+            e_cap = next_bucket(len(srcs))
+
+            def pad(a, cap, fill, dt):
+                out = np.full(cap, fill, dtype=dt)
+                out[: len(a)] = a
+                return out
+
+            rows_c = pad(lut[chunk], r_cap, allrows.shape[0], np.int32)
+            rmask = pad(np.ones(chunk.shape[0], bool), r_cap, False, bool)
+            e_src = pad(lut[np.asarray(srcs, np.int64)] if srcs else [], e_cap, allrows.shape[0], np.int32)
+            e_ridx = pad(ridx, e_cap, r_cap, np.int32)
+            e_w = pad(ws, e_cap, 0.0, np.float32)
+            e_t = pad(ts, e_cap, 0, np.int32)
+            e_mask = pad(np.ones(len(srcs), bool), e_cap, False, bool)
+            # compact degree table aligned with the staged rows
+            deg_c = jnp.concatenate([deg_x[jnp.asarray(allrows)], jnp.zeros(1)])
+
+            h_dev = jnp.concatenate([dev, jnp.zeros((1, dev.shape[1]), dev.dtype)])
+            a_c, nct_c, h_c = _subset_jit(
+                self.model, p, h_dev, jnp.asarray(rows_c), jnp.asarray(rmask),
+                jnp.asarray(e_src), jnp.asarray(e_ridx), jnp.asarray(e_w),
+                jnp.asarray(e_t), jnp.asarray(e_mask), deg_c, r_cap,
+            )
+            k = chunk.shape[0]
+            outs_a.append(np.asarray(a_c)[:k])
+            outs_n.append(np.asarray(nct_c)[:k])
+            outs_h.append(np.asarray(h_c)[:k])
+            self.stats.chunks += 1
+
+        return (
+            np.concatenate(outs_a) if outs_a else np.zeros((0, 1), np.float32),
+            np.concatenate(outs_n) if outs_n else np.zeros((0, 1), np.float32),
+            np.concatenate(outs_h) if outs_h else np.zeros((0, 1), np.float32),
+        )

@@ -1,0 +1,2 @@
+"""Training substrate: optimizer (AdamW + WSD), trainer loop, checkpointing,
+fault tolerance, gradient compression."""

@@ -1,0 +1,83 @@
+"""AdamW with the WSD (warmup–stable–decay) schedule (MiniCPM
+[arXiv:2404.06395]) — functional, pytree-shaped, so optimizer state inherits
+the parameter sharding specs (ZeRO-1/3 per `repro.dist.sharding`)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # WSD schedule
+    warmup_steps: int = 100
+    stable_steps: int = 1000
+    decay_steps: int = 100
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+def wsd_schedule(step: jax.Array, cfg: OptConfig) -> jax.Array:
+    """Warmup → stable plateau → sqrt-style decay (MiniCPM §4)."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(cfg.warmup_steps, 1)
+    decay_pos = (s - cfg.warmup_steps - cfg.stable_steps) / jnp.maximum(cfg.decay_steps, 1)
+    decay = 1.0 - (1.0 - cfg.min_lr_frac) * jnp.clip(decay_pos, 0.0, 1.0)
+    lr = jnp.where(
+        s < cfg.warmup_steps,
+        warm,
+        jnp.where(s < cfg.warmup_steps + cfg.stable_steps, 1.0, decay),
+    )
+    return cfg.peak_lr * lr
+
+
+def adamw_init(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(m=zeros, v=jax.tree.map(jnp.copy, zeros), count=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    grads, state: OptState, params, cfg: OptConfig
+) -> Tuple[Any, OptState, jax.Array]:
+    """Returns (new_params, new_state, lr). Grad clip by global norm."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    count = state.count + 1
+    lr = wsd_schedule(count, cfg)
+    c1 = 1.0 - cfg.b1**count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2**count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        step = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(m=new_m, v=new_v, count=count), lr

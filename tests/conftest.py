@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single real CPU device; only launch/dryrun (in its own
+# process) requests 512 placeholder devices.  Keep compilation deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

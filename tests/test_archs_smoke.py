@@ -1,0 +1,160 @@
+"""Per-assigned-architecture smoke tests (reduced configs, CPU):
+forward/train step shape + NaN asserts, plus serve-path consistency —
+prefill+decode logits must match the full forward at the same positions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_arch, reduced_config
+from repro.models import decode_step, forward, init_model, loss_fn, prefill
+
+B, S = 2, 32
+
+
+def _batch(cfg, rng, s=S):
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, s))),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, s))),
+    }
+    if cfg.encdec:
+        batch["frames"] = jnp.asarray(rng.normal(size=(B, s, cfg.d_frontend)).astype(np.float32))
+    if cfg.num_patches:
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.num_patches, cfg.d_frontend)).astype(np.float32)
+        )
+    return batch
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_forward_and_train_step(name, rng):
+    cfg = reduced_config(get_arch(name))
+    params, axes = init_model(jax.random.PRNGKey(0), cfg)
+    assert jax.tree.structure(params) == jax.tree.structure(
+        axes, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    batch = _batch(cfg, rng)
+    logits, aux = forward(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    # one SGD step through the loss must produce finite grads for every leaf
+    loss, metrics = loss_fn(params, cfg, batch)
+    assert bool(jnp.isfinite(loss))
+    grads = jax.grad(lambda p: loss_fn(p, cfg, batch)[0])(params)
+    for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+        assert bool(jnp.all(jnp.isfinite(g))), f"{name}: non-finite grad at {path}"
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_prefill_decode_matches_forward(name, rng):
+    """Teacher-forced decode must reproduce the full forward logits.
+
+    MoE archs run with dropless capacity here: capacity-based token dropping
+    is context-dependent by design (GShard semantics), so train-time
+    forward and decode only agree exactly when nothing overflows."""
+    import dataclasses
+
+    cfg = reduced_config(get_arch(name))
+    if cfg.is_moe:
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.num_experts) / cfg.top_k)
+    if cfg.block_pattern == "hymba":
+        # decode rings ALL layers (DESIGN.md §5); exact consistency holds for
+        # the pure-SWA mix — the dedicated ring test covers the semantics
+        cfg = dataclasses.replace(cfg, full_attn_layers=())
+    params, _ = init_model(jax.random.PRNGKey(1), cfg)
+    batch = _batch(cfg, rng)
+    tokens = batch["tokens"]
+    full_logits, _ = forward(params, cfg, batch)
+
+    n_steps = 4
+    prompt = {**batch, "tokens": tokens[:, : S - n_steps]}
+    s_max = S + (cfg.num_patches or 0)  # vlm caches cover patch positions too
+    logits, cache = prefill(params, cfg, prompt, s_max=s_max, cache_dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0], np.float32),
+        np.asarray(full_logits[:, S - n_steps - 1], np.float32),
+        atol=2e-2, rtol=2e-2,
+    )
+    for i in range(n_steps):
+        tok = tokens[:, S - n_steps + i : S - n_steps + i + 1]
+        logits, cache = decode_step(params, cfg, tok, cache)
+        if S - n_steps + i < S - 1 or True:
+            np.testing.assert_allclose(
+                np.asarray(logits[:, 0], np.float32),
+                np.asarray(full_logits[:, S - n_steps + i], np.float32),
+                atol=2e-2, rtol=2e-2,
+                err_msg=f"{name} step {i}",
+            )
+
+
+def test_hymba_ring_cache_matches_window_attention():
+    """Long decode with ring cache == forward with sliding-window mask."""
+    cfg = reduced_config(get_arch("hymba-1.5b"))
+    import dataclasses
+    cfg = dataclasses.replace(cfg, full_attn_layers=())  # pure SWA for exactness
+    params, _ = init_model(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(3)
+    s = 48  # > window (16) → ring wraps
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, s)))
+    full_logits, _ = forward(params, cfg, {"tokens": tokens})
+
+    n_steps = 8
+    logits, cache = prefill(params, cfg, {"tokens": tokens[:, : s - n_steps]},
+                            s_max=s, cache_dtype=jnp.float32)
+    assert cache.k.shape[3] == cfg.window  # ring buffer, not full length
+    for i in range(n_steps):
+        tok = tokens[:, s - n_steps + i : s - n_steps + i + 1]
+        logits, cache = decode_step(params, cfg, tok, cache)
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0], np.float32),
+            np.asarray(full_logits[:, s - n_steps + i], np.float32),
+            atol=2e-2, rtol=2e-2, err_msg=f"ring step {i}",
+        )
+
+
+@pytest.mark.parametrize("name", ["xlstm-1.3b", "hymba-1.5b"])
+def test_long_context_archs_state_bounded(name):
+    """Sub-quadratic archs: decode state must not grow with context length."""
+    cfg = reduced_config(get_arch(name))
+    assert cfg.supports_long_context
+    from repro.models import init_cache
+
+    c_small = init_cache(cfg, 1, 64)
+    c_large = init_cache(cfg, 1, 4096)
+    small = sum(np.prod(x.shape) for x in jax.tree.leaves(c_small))
+    large = sum(np.prod(x.shape) for x in jax.tree.leaves(c_large))
+    if name == "xlstm-1.3b":
+        assert small == large  # pure state, no KV at all
+    else:
+        assert large <= small * (cfg.window / 16)  # bounded by ring size
+
+
+def test_param_count_sanity():
+    """Full-size analytic param counts are in the advertised ballpark."""
+    counts = {
+        "qwen2.5-3b": (2.5e9, 4.2e9),
+        "llama3.2-1b": (1.0e9, 1.9e9),
+        "pixtral-12b": (10e9, 14e9),
+        "qwen3-moe-30b-a3b": (26e9, 34e9),
+        # the assigned 48L/64e/1408ff spec computes to ~28B total (the
+        # production Moonlight-16B uses 27 layers; we implement the brief)
+        "moonshot-v1-16b-a3b": (24e9, 32e9),
+        "hymba-1.5b": (1.0e9, 2.2e9),
+        "xlstm-1.3b": (1.0e9, 1.9e9),
+    }
+    for name, (lo, hi) in counts.items():
+        n = get_arch(name).param_count()
+        assert lo < n < hi, f"{name}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+
+
+def test_moe_active_params():
+    cfg = get_arch("qwen3-moe-30b-a3b")
+    active = cfg.active_param_count()
+    assert 2e9 < active < 5e9, active  # "a3b" ≈ 3B active

@@ -1,0 +1,111 @@
+"""Baselines: RTEC-Full / RTEC-UER correctness, RTEC-NS behaviour,
+MTEC-Period staleness semantics, ODEC query mode, access-volume ordering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    MTECPeriod,
+    RTECEngine,
+    RTECFull,
+    RTECSample,
+    RTECUER,
+    full_forward,
+    make_model,
+    odec_query,
+)
+from repro.graph import make_graph, make_stream
+from repro.graph.generators import random_features
+
+TOL = 2e-4
+
+
+def _setup(name="sage", n=120, num_batches=3, seed=0):
+    g = make_graph("powerlaw", n, avg_degree=6, seed=seed)
+    x, _ = random_features(n, 8, seed=seed)
+    wl = make_stream(g, num_batches=num_batches, batch_edges=10, delete_frac=0.3, seed=seed + 1)
+    model = make_model(name)
+    params = model.init_layers(jax.random.PRNGKey(seed), [8, 8, 8])
+    return g, x, wl, model, params
+
+
+def _final_ref(model, params, wl, x):
+    g_cur = wl.base
+    for b in wl.batches:
+        g_cur = g_cur.apply_updates(b.ins_src, b.ins_dst, b.del_src, b.del_dst,
+                                    b.ins_weights, b.ins_etypes)
+    return full_forward(model, params, jnp.asarray(x), g_cur)[-1].h, g_cur
+
+
+@pytest.mark.parametrize("cls", [RTECFull, RTECUER])
+@pytest.mark.parametrize("name", ["sage", "gcn", "gat"])
+def test_exact_baselines_match_full(cls, name):
+    _, x, wl, model, params = _setup(name)
+    bl = cls(model, params, wl.base, jnp.asarray(x))
+    for b in wl.batches:
+        bl.apply_batch(b)
+    ref, _ = _final_ref(model, params, wl, x)
+    err = float(jnp.abs(bl.embeddings - ref).max())
+    assert err < TOL, f"{cls.__name__}/{name}: {err}"
+
+
+def test_sampling_is_approximate_but_bounded():
+    _, x, wl, model, params = _setup("sage")
+    bl = RTECSample(model, params, wl.base, jnp.asarray(x), fanout=2, seed=0)
+    for b in wl.batches:
+        bl.apply_batch(b)
+    ref, _ = _final_ref(model, params, wl, x)
+    err = float(jnp.abs(bl.embeddings - ref).max())
+    assert np.isfinite(err)
+    # tiny fanout on a deg-6 graph should visibly deviate somewhere
+    assert err > 1e-6
+
+
+def test_mtec_period_stale_then_fresh():
+    _, x, wl, model, params = _setup("sage", num_batches=4)
+    bl = MTECPeriod(model, params, wl.base, jnp.asarray(x), period=4)
+    ref0 = np.array(bl.embeddings)
+    for b in wl.batches[:3]:
+        bl.apply_batch(b)
+    np.testing.assert_allclose(np.array(bl.embeddings), ref0, atol=1e-6)  # stale
+    bl.apply_batch(wl.batches[3])  # period hit → refresh
+    ref, _ = _final_ref(model, params, wl, x)
+    assert float(jnp.abs(bl.embeddings - ref).max()) < TOL
+
+
+def test_access_volume_ordering():
+    """Paper Figs. 2/8: edges processed should order Inc < UER <= Full."""
+    _, x, wl, model, params = _setup("sage", n=300, seed=3)
+    inc = RTECEngine(model, params, wl.base, jnp.asarray(x))
+    uer = RTECUER(model, params, wl.base, jnp.asarray(x))
+    fn = RTECFull(model, params, wl.base, jnp.asarray(x))
+    e_inc = e_uer = e_fn = 0
+    for b in wl.batches:
+        e_inc += inc.apply_batch(b).edges_processed
+        e_uer += uer.apply_batch(b).edges_processed
+        e_fn += fn.apply_batch(b).edges_processed
+    assert e_inc < e_uer <= e_fn, (e_inc, e_uer, e_fn)
+
+
+def test_odec_matches_committed_engine():
+    _, x, wl, model, params = _setup("gcn", n=150, num_batches=1, seed=5)
+    eng = RTECEngine(model, params, wl.base, jnp.asarray(x))
+    q = np.array([3, 17, 42, 99], np.int64)
+    emb_q, stats = odec_query(eng, wl.batches[0], q)
+    # committed path
+    eng.apply_batch(wl.batches[0])
+    np.testing.assert_allclose(
+        np.array(emb_q), np.array(eng.embeddings[jnp.asarray(q)]), atol=1e-5
+    )
+    # ODEC should process no more work than the full commit would
+    assert stats.edges_processed <= eng.graph.num_edges
+
+
+def test_odec_all_affected_reduces_to_rtec():
+    _, x, wl, model, params = _setup("sage", n=100, num_batches=1, seed=6)
+    eng = RTECEngine(model, params, wl.base, jnp.asarray(x))
+    q = np.arange(100, dtype=np.int64)
+    emb_q, _ = odec_query(eng, wl.batches[0], q)
+    eng.apply_batch(wl.batches[0])
+    np.testing.assert_allclose(np.array(emb_q), np.array(eng.embeddings), atol=1e-5)

@@ -1,0 +1,60 @@
+"""Assigned-architecture configs must match the assignment table exactly."""
+import pytest
+
+from repro.configs import ARCH_NAMES, SHAPES, get_arch
+
+SPEC = {
+    #                 L    d_model heads kv   d_ff   vocab
+    "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+    "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+    "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+    "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+    "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+    "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+    "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 0, 151936),
+    "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 0, 163840),
+}
+
+
+def test_all_ten_archs_present():
+    assert set(ARCH_NAMES) == set(SPEC)
+
+
+@pytest.mark.parametrize("name", list(SPEC))
+def test_config_matches_assignment(name):
+    cfg = get_arch(name)
+    L, d, h, kv, ff, v = SPEC[name]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+
+
+def test_moe_specs():
+    q = get_arch("qwen3-moe-30b-a3b")
+    assert (q.num_experts, q.top_k, q.moe_d_ff) == (128, 8, 768)
+    m = get_arch("moonshot-v1-16b-a3b")
+    assert (m.num_experts, m.top_k, m.moe_d_ff) == (64, 6, 1408)
+
+
+def test_special_flags():
+    assert get_arch("qwen2.5-3b").qkv_bias
+    assert get_arch("hymba-1.5b").ssm_state == 16
+    assert get_arch("hymba-1.5b").block_pattern == "hymba"
+    assert get_arch("xlstm-1.3b").block_pattern == "xlstm"
+    assert get_arch("seamless-m4t-large-v2").encdec
+    assert get_arch("pixtral-12b").num_patches > 0
+    # long-context capability per assignment (sub-quadratic only)
+    long_ok = {n for n in ARCH_NAMES if get_arch(n).supports_long_context}
+    assert long_ok == {"xlstm-1.3b", "hymba-1.5b"}
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096 and SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768 and SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].seq_len == 32768 and SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288 and SHAPES["long_500k"].global_batch == 1

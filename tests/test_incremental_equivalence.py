@@ -1,0 +1,178 @@
+"""THE central invariant (paper Theorem 1): incremental RTEC output ==
+full-neighbor recomputation from scratch, for every model, over random
+insert/delete/feature-update streams.
+
+Property-based via hypothesis over graph topology, stream composition, and
+model choice; plus deterministic long-stream drift tests.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core import ALL_MODELS, RTECEngine, full_forward, make_model
+from repro.graph import make_graph, make_stream
+from repro.graph.csr import CSRGraph
+from repro.graph.generators import random_features
+from repro.graph.streaming import UpdateBatch
+
+TOL = 2e-4
+
+
+def _mk(name):
+    kw = {"num_relations": 3} if name in ("rgcn", "rgat") else {}
+    return make_model(name, **kw)
+
+
+def _run_stream(model, params, wl, x, store_h=True):
+    eng = RTECEngine(model, params, wl.base, jnp.asarray(x), store_h=store_h)
+    g_cur = wl.base
+    x_cur = np.array(x)
+    for b in wl.batches:
+        eng.apply_batch(b)
+        g_cur = g_cur.apply_updates(
+            b.ins_src, b.ins_dst, b.del_src, b.del_dst, b.ins_weights, b.ins_etypes
+        )
+        if b.feat_vertices is not None:
+            x_cur[b.feat_vertices] = b.feat_values
+    ref = full_forward(model, params, jnp.asarray(x_cur), g_cur)
+    return eng, ref, g_cur, x_cur
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_stream_equivalence(name):
+    g = make_graph("uniform", 120, avg_degree=5, seed=3, weighted=True, num_etypes=3)
+    x, _ = random_features(120, 10, seed=1)
+    wl = make_stream(g, num_batches=4, batch_edges=12, delete_frac=0.4,
+                     feature_dim=10, feature_frac=0.02, seed=5)
+    model = _mk(name)
+    params = model.init_layers(jax.random.PRNGKey(0), [10, 8, 8])
+    eng, ref, _, _ = _run_stream(model, params, wl, x)
+    err = float(jnp.abs(eng.embeddings - ref[-1].h).max())
+    assert err < TOL, f"{name}: {err}"
+    # intermediate states must match too (a, nct per layer)
+    for l in range(2):
+        assert float(jnp.abs(eng.a[l] - ref[l].a).max()) < TOL
+        assert float(jnp.abs(eng.nct[l] - ref[l].nct).max()) < TOL
+
+
+@pytest.mark.parametrize("name", ["gcn", "gat", "sage"])
+def test_three_layer_equivalence(name):
+    g = make_graph("powerlaw", 100, avg_degree=6, seed=7)
+    x, _ = random_features(100, 8, seed=2)
+    wl = make_stream(g, num_batches=3, batch_edges=10, delete_frac=0.3, seed=8)
+    model = _mk(name)
+    params = model.init_layers(jax.random.PRNGKey(1), [8, 8, 8, 8])
+    eng, ref, _, _ = _run_stream(model, params, wl, x)
+    assert float(jnp.abs(eng.embeddings - ref[-1].h).max()) < TOL
+
+
+@pytest.mark.parametrize("store_h", [True, False])
+def test_storage_optimization_equivalence(store_h):
+    """Recomputation-based storage optimization (§V-B) must not change results."""
+    g = make_graph("uniform", 100, avg_degree=5, seed=0)
+    x, _ = random_features(100, 8, seed=0)
+    wl = make_stream(g, num_batches=3, batch_edges=10, seed=1)
+    model = _mk("sage")
+    params = model.init_layers(jax.random.PRNGKey(0), [8, 8, 8])
+    eng, ref, _, _ = _run_stream(model, params, wl, x, store_h=store_h)
+    assert float(jnp.abs(eng.embeddings - ref[-1].h).max()) < TOL
+
+
+def test_long_stream_drift():
+    """Paper reports MSE < 1e-4 between Inc and Full; check fp drift stays
+    bounded over a 60-batch stream."""
+    g = make_graph("powerlaw", 150, avg_degree=6, seed=0)
+    x, _ = random_features(150, 8, seed=0)
+    wl = make_stream(g, num_batches=60, batch_edges=8, delete_frac=0.4, seed=3)
+    model = _mk("gat")
+    params = model.init_layers(jax.random.PRNGKey(0), [8, 8, 8])
+    eng, ref, _, _ = _run_stream(model, params, wl, x)
+    mse = float(jnp.mean((eng.embeddings - ref[-1].h) ** 2))
+    assert mse < 1e-6
+
+
+def test_empty_batch_noop():
+    g = make_graph("uniform", 50, avg_degree=4, seed=0)
+    x, _ = random_features(50, 6, seed=0)
+    model = _mk("gcn")
+    params = model.init_layers(jax.random.PRNGKey(0), [6, 6, 6])
+    eng = RTECEngine(model, params, g, jnp.asarray(x))
+    before = np.array(eng.embeddings)
+    empty = UpdateBatch(
+        ins_src=np.zeros(0, np.int64), ins_dst=np.zeros(0, np.int64),
+        del_src=np.zeros(0, np.int64), del_dst=np.zeros(0, np.int64),
+        ins_weights=np.zeros(0, np.float32), ins_etypes=np.zeros(0, np.int32),
+    )
+    stats = eng.apply_batch(empty)
+    assert stats.edges_processed == 0
+    np.testing.assert_allclose(np.array(eng.embeddings), before, atol=1e-6)
+
+
+def test_drain_vertex_to_zero_degree():
+    """All in-edges of a vertex deleted → embedding equals the from-scratch
+    value (the catastrophic-cancellation guard, DESIGN.md §4)."""
+    src = np.array([0, 1, 3])
+    dst = np.array([2, 2, 4])
+    g = CSRGraph.from_edges(5, src, dst)
+    x, _ = random_features(5, 6, seed=0)
+    for name in ["gat", "sage", "gcn", "rgat"]:
+        model = _mk(name)
+        params = model.init_layers(jax.random.PRNGKey(0), [6, 6, 6])
+        eng = RTECEngine(model, params, g, jnp.asarray(x))
+        b = UpdateBatch(
+            ins_src=np.zeros(0, np.int64), ins_dst=np.zeros(0, np.int64),
+            del_src=np.array([0, 1]), del_dst=np.array([2, 2]),
+            ins_weights=np.zeros(0, np.float32), ins_etypes=np.zeros(0, np.int32),
+        )
+        eng.apply_batch(b)
+        g2 = g.apply_updates(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                             np.array([0, 1]), np.array([2, 2]))
+        ref = full_forward(model, params, jnp.asarray(x), g2)
+        err = float(jnp.abs(eng.embeddings - ref[-1].h).max())
+        assert err < TOL, f"{name}: {err}"
+
+
+# ---------------------------------------------------------------------- #
+# hypothesis property tests
+# ---------------------------------------------------------------------- #
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+@given(
+    seed=st.integers(0, 2**16),
+    n=st.integers(20, 80),
+    avg_deg=st.integers(2, 8),
+    model_name=st.sampled_from(["gcn", "sage", "gin", "gat", "pinsage", "agnn"]),
+    delete_frac=st.floats(0.0, 0.8),
+    kind=st.sampled_from(["uniform", "powerlaw"]),
+)
+def test_property_incremental_equals_full(seed, n, avg_deg, model_name, delete_frac, kind):
+    g = make_graph(kind, n, avg_degree=avg_deg, seed=seed, weighted=True)
+    if g.num_edges < 4:
+        return
+    x, _ = random_features(n, 6, seed=seed)
+    wl = make_stream(g, num_batches=2, batch_edges=max(2, g.num_edges // 20),
+                     delete_frac=delete_frac, seed=seed + 1)
+    model = _mk(model_name)
+    params = model.init_layers(jax.random.PRNGKey(seed % 97), [6, 6, 6])
+    eng, ref, _, _ = _run_stream(model, params, wl, x)
+    err = float(jnp.abs(eng.embeddings - ref[-1].h).max())
+    assert err < 5e-4, f"{model_name} n={n} seed={seed}: {err}"
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(seed=st.integers(0, 2**16), fdim=st.integers(4, 12))
+def test_property_feature_updates(seed, fdim):
+    g = make_graph("uniform", 60, avg_degree=4, seed=seed)
+    if g.num_edges < 4:
+        return
+    x, _ = random_features(60, fdim, seed=seed)
+    wl = make_stream(g, num_batches=2, batch_edges=4, delete_frac=0.2,
+                     feature_dim=fdim, feature_frac=0.05, seed=seed)
+    model = _mk("gat")
+    params = model.init_layers(jax.random.PRNGKey(seed % 89), [fdim, 8, 8])
+    eng, ref, _, _ = _run_stream(model, params, wl, x)
+    assert float(jnp.abs(eng.embeddings - ref[-1].h).max()) < 5e-4

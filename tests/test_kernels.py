@@ -1,0 +1,182 @@
+"""Per-kernel interpret-mode validation vs the pure-jnp oracles in ref.py,
+swept across shapes and dtypes (the kernel contract from the brief)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels.ops as ops
+from repro.kernels import ref as kref
+from repro.kernels.segment_spmm import prepare_block_csr
+
+
+@pytest.fixture(autouse=True)
+def _force_interpret():
+    old = ops.FORCE_PALLAS_INTERPRET
+    ops.FORCE_PALLAS_INTERPRET = True
+    yield
+    ops.FORCE_PALLAS_INTERPRET = old
+
+
+def _tol(dtype):
+    # bf16: the kernels accumulate in fp32 and round once, the jnp oracle
+    # accumulates in bf16 — allow accumulation-order noise ~ eps·sqrt(deg)·|x|
+    return dict(atol=0.3, rtol=5e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------- #
+# block-aligned CSR layout
+# ---------------------------------------------------------------------- #
+def test_prepare_block_csr_properties():
+    rng = np.random.default_rng(0)
+    dst = np.sort(rng.integers(0, 100, 1000))
+    perm, dloc, brows, e_pad = prepare_block_csr(dst, 100, tv=8, be=64)
+    assert e_pad % 64 == 0
+    assert np.all(np.diff(brows) >= 0), "block rows must be non-decreasing"
+    # every real edge appears exactly once
+    real = perm[perm >= 0]
+    assert sorted(real.tolist()) == list(range(1000))
+    # local ids consistent with tiles
+    for b in range(len(brows)):
+        seg = dloc[b * 64 : (b + 1) * 64]
+        live = seg[seg >= 0]
+        assert np.all(live < 8)
+        glob = dst[perm[b * 64 : (b + 1) * 64][seg >= 0]]
+        np.testing.assert_array_equal(glob // 8, brows[b])
+
+
+def test_prepare_block_csr_empty():
+    perm, dloc, brows, e_pad = prepare_block_csr(np.full(5, -1), 16, tv=8, be=64)
+    assert np.all(perm == -1)
+
+
+# ---------------------------------------------------------------------- #
+# segment_spmm
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "e,d,v,tv,be,bd",
+    [
+        (700, 96, 40, 8, 128, 32),
+        (64, 32, 8, 8, 64, 32),
+        (1500, 128, 256, 8, 256, 128),
+        (33, 160, 100, 8, 64, 32),  # sparse touch: many empty tiles
+    ],
+)
+def test_segment_spmm_sweep(e, d, v, tv, be, bd, dtype):
+    rng = np.random.default_rng(e + d)
+    dst = np.sort(rng.integers(0, v, e)).astype(np.int32)
+    msg = jnp.asarray(rng.normal(size=(e, d)), dtype)
+    out = ops.segment_sum_edges(msg, dst, v, tv=tv, be=be, bd=bd)
+    ref = kref.segment_spmm_ref(msg, jnp.asarray(dst), v)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+def test_segment_spmm_with_padding_tail():
+    rng = np.random.default_rng(3)
+    dst = np.concatenate([np.sort(rng.integers(0, 30, 200)), np.full(56, -1)]).astype(np.int32)
+    msg = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
+    out = ops.segment_sum_edges(msg, dst, 30, tv=8, be=64, bd=32)
+    ref = kref.segment_spmm_ref(msg, jnp.asarray(dst), 30)
+    np.testing.assert_allclose(np.array(out), np.array(ref), atol=2e-5)
+
+
+# ---------------------------------------------------------------------- #
+# delta_agg
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("e,d,v", [(700, 96, 40), (100, 32, 128), (2000, 64, 64)])
+def test_delta_agg_sweep(e, d, v, dtype):
+    rng = np.random.default_rng(e + v)
+    dst = np.sort(rng.integers(0, v, e)).astype(np.int32)
+    sign = rng.choice([-1.0, 1.0], e).astype(np.float32)
+    msg = jnp.asarray(rng.normal(size=(e, d)) * sign[:, None], dtype)
+    state = jnp.asarray(rng.normal(size=(v, d)), dtype)
+    out = ops.delta_agg_update(state, msg, dst, tv=8, be=128, bd=32)
+    ref = kref.delta_agg_ref(state, msg, jnp.asarray(dst))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+def test_delta_agg_untouched_rows_identical():
+    """Rows outside the affected tiles must be bit-identical (aliased pass-through)."""
+    rng = np.random.default_rng(0)
+    v, d = 64, 32
+    state = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32))
+    dst = np.array([3, 3, 5], np.int32)  # only tile 0 touched
+    msg = jnp.asarray(rng.normal(size=(3, d)).astype(np.float32))
+    out = ops.delta_agg_update(state, msg, dst, tv=8, be=64, bd=32)
+    np.testing.assert_array_equal(np.array(out[8:]), np.array(state[8:]))
+
+
+# ---------------------------------------------------------------------- #
+# edge_softmax
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("e,h,v", [(700, 4, 40), (120, 1, 16), (1024, 8, 128)])
+def test_edge_softmax_sweep(e, h, v):
+    rng = np.random.default_rng(e)
+    dst = np.sort(rng.integers(0, v, e)).astype(np.int32)
+    sc = jnp.asarray(rng.uniform(0.05, 5.0, size=(e, h)).astype(np.float32))
+    n1, s1 = ops.edge_softmax(sc, dst, v, tv=8, be=128, bh=32)
+    n2, s2 = kref.edge_softmax_ref(sc, jnp.asarray(dst), v)
+    np.testing.assert_allclose(np.array(n1), np.array(n2), atol=1e-5)
+    np.testing.assert_allclose(np.array(s1), np.array(s2), atol=1e-4)
+    # normalized scores per destination sum to 1
+    sums = np.zeros((v, h))
+    np.add.at(sums, dst, np.array(n1))
+    np.testing.assert_allclose(sums[np.unique(dst)], 1.0, atol=1e-4)
+
+
+# ---------------------------------------------------------------------- #
+# flash attention
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,dh,bq,bk,causal,window",
+    [
+        (2, 4, 2, 256, 64, 128, 128, True, None),
+        (1, 2, 2, 128, 32, 64, 64, False, None),
+        (2, 4, 1, 256, 64, 128, 64, True, 64),
+        (1, 8, 4, 512, 128, 256, 256, True, None),
+    ],
+)
+def test_flash_attention_sweep(b, hq, hkv, s, dh, bq, bk, causal, window, dtype):
+    rng = np.random.default_rng(s + dh)
+    q = jnp.asarray(rng.normal(size=(b, hq, s, dh)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, dh)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, dh)), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window, bq=bq, bk=bk)
+    ref = kref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        **(dict(atol=3e-2, rtol=3e-2) if dtype == jnp.bfloat16 else dict(atol=2e-5, rtol=2e-3)),
+    )
+
+
+def test_flash_attention_decode_step():
+    """q_len=1 with full KV cache (the serve_step lowering shape)."""
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.normal(size=(2, 4, 1, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 2, 256, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 2, 256, 64)).astype(np.float32))
+    out = ops.flash_attention(q, k, v, causal=True, q_offset=255, bq=1, bk=128)
+    ref = kref.flash_attention_ref(q, k, v, causal=True, q_offset=255)
+    np.testing.assert_allclose(np.array(out), np.array(ref), atol=2e-5)
+
+
+def test_flash_attention_matches_plain_softmax():
+    """Independent oracle: direct jnp softmax attention."""
+    rng = np.random.default_rng(1)
+    b, h, s, d = 1, 2, 128, 32
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, h, s, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, h, s, d)).astype(np.float32))
+    out = ops.flash_attention(q, k, v, causal=True, bq=64, bk=64)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(d)
+    mask = np.tril(np.ones((s, s), bool))
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    ref = jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(logits, -1), v)
+    np.testing.assert_allclose(np.array(out), np.array(ref), atol=2e-5)

@@ -1,0 +1,146 @@
+"""Decoupled operators: Theorem-1 condition prober + per-model semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ALL_MODELS, certify, full_forward, make_model, validate_registration
+from repro.core.operators import GNNModel
+from repro.graph.csr import CSRGraph
+from repro.graph.generators import random_features
+
+
+def _mk(name):
+    kw = {"num_relations": 3} if name in ("rgcn", "rgat") else {}
+    return make_model(name, **kw)
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_conditions_certified(name):
+    model = _mk(name)
+    rep = validate_registration(model)
+    assert rep.incrementalizable
+
+
+@pytest.mark.parametrize("name", ["gat", "agnn", "ggcn", "rgat"])
+def test_dest_dependence_detected(name):
+    rep = certify(_mk(name))
+    assert not rep.dest_independent, f"{name} should be detected as dest-dependent"
+
+
+@pytest.mark.parametrize("name", ["gcn", "sage", "gin", "commnet", "monet", "pinsage", "rgcn"])
+def test_dest_independence_detected(name):
+    rep = certify(_mk(name))
+    assert rep.dest_independent
+
+
+def test_gcn_struct_dependence_detected():
+    rep = certify(_mk("gcn"))
+    assert not rep.struct_independent
+
+
+class _BadMean(GNNModel):
+    """Undecoupled mean: ms_cbn not distributive (running mean) — must fail."""
+
+    name = "badmean"
+
+    def init_params(self, key, d_in, d_out):
+        return {"W": jnp.eye(d_in, d_out)}
+
+    def ms_local(self, p, h_u, h_v, s_u, s_v, ew, et):
+        return jnp.ones_like(s_u)
+
+    def edge_term(self, p, mlc, z, et):
+        return mlc[:, None] * z
+
+    def ms_cbn(self, p, nct, x):
+        # non-distributive: sqrt of aggregated value
+        return jnp.sqrt(jnp.abs(x) + 1.0)
+
+    def ms_cbn_inv(self, p, nct, x):
+        return x**2 - 1.0
+
+    def update(self, p, h_v, a_v):
+        return a_v @ p["W"]
+
+
+class _UndeclaredGAT(GNNModel):
+    """Destination-dependent message WITHOUT the dest_dependent flag — the
+    registration gate must reject it (the paper's SMT-check failure mode)."""
+
+    name = "undeclared"
+
+    def init_params(self, key, d_in, d_out):
+        return {"W": jnp.eye(d_in, d_out)}
+
+    def ms_local(self, p, h_u, h_v, s_u, s_v, ew, et):
+        return jnp.sum(h_u * h_v, -1)
+
+    def edge_term(self, p, mlc, z, et):
+        return mlc[:, None] * z
+
+    def update(self, p, h_v, a_v):
+        return a_v @ p["W"]
+
+
+def test_bad_mean_rejected():
+    with pytest.raises(ValueError, match="fails Theorem-1"):
+        validate_registration(_BadMean())
+
+
+def test_undeclared_dest_dependence_rejected():
+    with pytest.raises(ValueError, match="destination-dependent"):
+        validate_registration(_UndeclaredGAT())
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_full_forward_shapes_finite(name):
+    model = _mk(name)
+    g = CSRGraph.from_edges(
+        10,
+        np.array([0, 1, 2, 3, 4, 5, 6, 7, 8, 9]),
+        np.array([1, 2, 3, 4, 5, 6, 7, 8, 9, 0]),
+        np.random.default_rng(0).uniform(0.5, 1.5, 10).astype(np.float32),
+        np.random.default_rng(0).integers(0, 3, 10).astype(np.int32),
+    )
+    x, _ = random_features(10, 6, seed=0)
+    params = model.init_layers(jax.random.PRNGKey(0), [6, 8, 4])
+    states = full_forward(model, params, jnp.asarray(x), g)
+    assert states[-1].h.shape == (10, 4)
+    assert states[0].h.shape == (10, 8)
+    for st in states:
+        assert bool(jnp.all(jnp.isfinite(st.h)))
+        assert bool(jnp.all(jnp.isfinite(st.a)))
+
+
+def test_gat_softmax_equals_reference():
+    """Decoupled GAT (exp/sum/normalize) == direct softmax attention."""
+    model = make_model("gat", heads=2)
+    n, d = 12, 8
+    rng = np.random.default_rng(0)
+    src = np.array([i for i in range(n) for _ in range(3)]) % n
+    dst = np.array([(i // 3 + j + 1) % n for i, j in
+                    zip(range(3 * n), [0, 1, 2] * n)])
+    key = dst * n + src
+    _, idx = np.unique(key, return_index=True)
+    src, dst = src[idx], dst[idx]
+    g = CSRGraph.from_edges(n, src, dst)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    params = model.init_layers(jax.random.PRNGKey(3), [d, 8])
+    st = full_forward(model, params, jnp.asarray(x), g)[-1]
+
+    # direct dense softmax reference
+    p = params[0]
+    H, dh = 2, 4
+    W = np.array(p["W"])
+    wx = (x @ W).reshape(n, H, dh)
+    logits = np.full((n, n, H), -np.inf, np.float32)
+    for u, v in zip(src, dst):
+        lg = (wx[u] * np.array(p["a_src"])).sum(-1) + (wx[v] * np.array(p["a_dst"])).sum(-1)
+        lg = np.clip(np.where(lg > 0, lg, 0.2 * lg), -30, 30)
+        logits[v, u] = lg
+    att = np.exp(logits)
+    att = att / np.maximum(att.sum(1, keepdims=True), 1e-10)
+    out = np.einsum("vuh,uhd->vhd", np.nan_to_num(att), wx).reshape(n, H * dh)
+    ref = np.where(out > 0, out, np.expm1(out))  # elu
+    np.testing.assert_allclose(np.array(st.h), ref, atol=1e-4)

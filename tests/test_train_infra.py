@@ -1,0 +1,221 @@
+"""Training substrate: optimizer/WSD, checkpointing (atomic/async/elastic),
+fault tolerance (rollback, failure injection, stragglers), gradient
+compression (error feedback + convergence), trainer end-to-end."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, reduced_config
+from repro.train.checkpoint import CheckpointManager
+from repro.train.compression import compress_grads, init_state
+from repro.train.fault import (
+    FaultConfig,
+    FaultTolerantRunner,
+    StragglerMonitor,
+    WorkerFailure,
+)
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update, wsd_schedule
+from repro.train.trainer import TrainConfig, Trainer, synthetic_batch
+
+
+# ---------------------------------------------------------------------- #
+# optimizer
+# ---------------------------------------------------------------------- #
+def test_wsd_schedule_phases():
+    cfg = OptConfig(peak_lr=1.0, warmup_steps=10, stable_steps=20, decay_steps=10,
+                    min_lr_frac=0.1)
+    lrs = [float(wsd_schedule(jnp.asarray(s), cfg)) for s in range(45)]
+    assert lrs[0] == 0.0 and lrs[5] == pytest.approx(0.5)
+    assert lrs[15] == pytest.approx(1.0) and lrs[29] == pytest.approx(1.0)
+    assert lrs[35] < 1.0 and lrs[44] == pytest.approx(0.1, abs=1e-3)
+
+
+def test_adamw_reduces_quadratic():
+    key = jax.random.PRNGKey(0)
+    w_true = jax.random.normal(key, (8,))
+    params = {"w": jnp.zeros(8)}
+    opt = adamw_init(params)
+    cfg = OptConfig(peak_lr=0.1, warmup_steps=5, stable_steps=200, decay_steps=5,
+                    weight_decay=0.0)
+
+    def loss(p):
+        return jnp.sum((p["w"] - w_true) ** 2)
+
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(g, opt, params, cfg)
+    assert float(loss(params)) < 1e-2
+
+
+# ---------------------------------------------------------------------- #
+# checkpointing
+# ---------------------------------------------------------------------- #
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 6)), "b": {"c": jnp.arange(5.0)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    mgr.save(3, t)
+    restored, step = mgr.restore(t)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(t["a"]))
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in [1, 2, 3, 4]:
+        mgr.save(s, _tree(s))
+    assert mgr.all_steps() == [3, 4]
+    r, s = mgr.restore(_tree())
+    assert s == 4
+    np.testing.assert_array_equal(np.asarray(r["a"]), np.asarray(_tree(4)["a"]))
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _tree(1), blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Restore under different shardings (elastic restart path)."""
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree()
+    mgr.save(1, t)
+    dev = jax.devices()[0]
+    sh = jax.tree.map(lambda _: jax.sharding.SingleDeviceSharding(dev), t)
+    restored, _ = mgr.restore(t, shardings=sh)
+    assert restored["a"].sharding == jax.sharding.SingleDeviceSharding(dev)
+
+
+# ---------------------------------------------------------------------- #
+# fault tolerance
+# ---------------------------------------------------------------------- #
+def test_runner_rolls_back_on_nan(tmp_path):
+    injected = {"done": False}
+
+    def step(state, batch):
+        # inject a NaN exactly once at step 7
+        if int(state["s"]) == 7 and not injected["done"]:
+            injected["done"] = True
+            return state, jnp.asarray(float("nan"))
+        return {"s": state["s"] + 1}, jnp.asarray(1.0)
+
+    mgr = CheckpointManager(str(tmp_path))
+    runner = FaultTolerantRunner(step, mgr, FaultConfig(checkpoint_every=5))
+    state, step_n = runner.run({"s": jnp.asarray(0)}, lambda s: None, 10)
+    assert step_n == 10 and runner.restarts == 1
+    assert int(state["s"]) == 10
+
+
+def test_runner_survives_worker_failure(tmp_path):
+    fail_at = {"left": 2}
+
+    def step(state, batch):
+        if int(state["s"]) == 4 and fail_at["left"] > 0:
+            fail_at["left"] -= 1
+            raise WorkerFailure("node-17 heartbeat lost")
+        return {"s": state["s"] + 1}, jnp.asarray(0.5)
+
+    mgr = CheckpointManager(str(tmp_path))
+    runner = FaultTolerantRunner(step, mgr, FaultConfig(checkpoint_every=2))
+    state, n = runner.run({"s": jnp.asarray(0)}, lambda s: None, 8)
+    assert n == 8 and runner.restarts == 2
+
+
+def test_runner_gives_up_after_max_restarts(tmp_path):
+    def step(state, batch):
+        raise WorkerFailure("flapping node")
+
+    mgr = CheckpointManager(str(tmp_path))
+    runner = FaultTolerantRunner(step, mgr, FaultConfig(max_restarts=2))
+    with pytest.raises(RuntimeError, match="max_restarts"):
+        runner.run({"s": jnp.asarray(0)}, lambda s: None, 5)
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(4, FaultConfig(straggler_factor=2.0, ema=0.5))
+    for _ in range(10):
+        for w, dt in enumerate([0.1, 0.1, 0.1, 0.5]):
+            mon.record(w, dt)
+    assert mon.stragglers() == [3]
+
+
+# ---------------------------------------------------------------------- #
+# compression
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("method", ["int8", "topk"])
+def test_compression_error_feedback_converges(method):
+    key = jax.random.PRNGKey(1)
+    w_true = jax.random.normal(key, (32,))
+    params = {"w": jnp.zeros(32)}
+    opt = adamw_init(params)
+    ocfg = OptConfig(peak_lr=0.05, warmup_steps=5, stable_steps=400, decay_steps=5,
+                     weight_decay=0.0)
+    cstate = init_state(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - w_true) ** 2)
+
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        g, cstate, wire = compress_grads(g, cstate, method=method, topk_frac=0.25)
+        params, opt, _ = adamw_update(g, opt, params, ocfg)
+    assert float(loss(params)) < 5e-2, method
+
+
+def test_int8_wire_reduction():
+    g = {"w": jnp.ones((1000,))}
+    _, _, wire = compress_grads(g, init_state(g), method="int8")
+    assert wire == 1000  # 1 byte per element vs 4 for fp32
+
+
+# ---------------------------------------------------------------------- #
+# trainer end-to-end (loss must go down on learnable synthetic data)
+# ---------------------------------------------------------------------- #
+def test_trainer_loss_decreases():
+    cfg = reduced_config(get_arch("llama3.2-1b"))
+    cfg = dataclasses.replace(cfg, num_layers=2, d_model=32, d_ff=64,
+                              num_heads=2, num_kv_heads=2, head_dim=16)
+    t = Trainer(cfg, TrainConfig(steps=60, batch=8, seq_len=32, log_every=10),
+                OptConfig(peak_lr=3e-3, warmup_steps=10, stable_steps=60, decay_steps=10))
+    out = t.train()
+    assert out["losses"][-1] < out["losses"][0] - 0.5, out["losses"]
+
+
+def test_trainer_with_checkpointing(tmp_path):
+    cfg = reduced_config(get_arch("llama3.2-1b"))
+    cfg = dataclasses.replace(cfg, num_layers=2, d_model=32, d_ff=64,
+                              num_heads=2, num_kv_heads=2, head_dim=16)
+    t = Trainer(cfg, TrainConfig(steps=20, batch=4, seq_len=16,
+                                 checkpoint_dir=str(tmp_path), checkpoint_every=10))
+    out = t.train()
+    assert out["steps"] == 20
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.latest_step() == 20
+
+
+def test_trainer_microbatch_equivalence():
+    """Gradient accumulation must not change the loss trajectory (much)."""
+    cfg = reduced_config(get_arch("llama3.2-1b"))
+    cfg = dataclasses.replace(cfg, num_layers=1, d_model=32, d_ff=64,
+                              num_heads=2, num_kv_heads=2, head_dim=16)
+    t1 = Trainer(cfg, TrainConfig(steps=10, batch=8, seq_len=16, microbatches=1))
+    t2 = Trainer(cfg, TrainConfig(steps=10, batch=8, seq_len=16, microbatches=4))
+    o1, o2 = t1.train(), t2.train()
+    assert abs(o1["losses"][-1] - o2["losses"][-1]) < 0.15
+
+
+def test_synthetic_batch_deterministic():
+    cfg = reduced_config(get_arch("llama3.2-1b"))
+    tcfg = TrainConfig(batch=4, seq_len=16)
+    b1 = synthetic_batch(cfg, tcfg, 7)
+    b2 = synthetic_batch(cfg, tcfg, 7)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
