@@ -3,18 +3,18 @@ CSV emission (`name,us_per_call,derived`)."""
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    RTECUER,
     MTECPeriod,
     RTECEngine,
     RTECFull,
     RTECSample,
-    RTECUER,
     make_model,
 )
 from repro.graph import make_graph, make_stream

@@ -3,7 +3,6 @@ breakdown: Upd+ASD (graph update + affected-subgraph detection), CGC
 (computation-graph construction = planning), Comp (device compute)."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from benchmarks.common import emit, gnn_params, make_engine, run_stream, setup
 from repro.core import make_model

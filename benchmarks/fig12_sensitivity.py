@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, gnn_params, make_engine, run_stream, setup
-from repro.core import RTECEngine, RTECFull, make_model, odec_query
+from repro.core import RTECEngine, make_model, odec_query
 from repro.graph import make_stream
 
 

@@ -3,7 +3,6 @@ affected subgraph (AS).  AS = the incremental engine's processed edges (the
 update-propagation paths — exactly the red region of Fig. 1)."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from benchmarks.common import emit, gnn_params, make_engine, run_stream, setup
 from repro.core import make_model

@@ -9,6 +9,22 @@ MODELS = ["gcn", "sage", "gin", "monet", "agnn", "gat"]
 METHODS = ["full", "ns10", "ns5", "uer", "inc"]
 
 
+def smoke():
+    """One tiny cell (gcn × {full, inc}) for the CI benchmark-smoke job —
+    finishes in well under a minute on one CPU (EXPERIMENTS.md §Perf)."""
+    _, x, wl = setup("powerlaw", n=300, avg_degree=4.0, num_batches=2, batch_edges=8)
+    model = make_model("gcn")
+    params = gnn_params(model, [16, 16])
+    times = {}
+    for method in ("full", "inc"):
+        eng = make_engine(method, model, params, wl.base, x)
+        t, _ = run_stream(eng, wl)
+        times[method] = t
+        emit(f"fig7/smoke/gcn/{method}", t * 1e6, "")
+    emit("fig7/smoke/gcn/inc_speedup_vs_full", times["inc"] * 1e6,
+         f"{times['full'] / times['inc']:.2f}x")
+
+
 def run(quick: bool = True):
     n = 2000 if quick else 8000
     g, x, wl = setup("powerlaw", n=n, avg_degree=8.0, num_batches=4, batch_edges=16)

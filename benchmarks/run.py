@@ -2,23 +2,27 @@
 """Benchmark harness entry point.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig2,table4,...]
+    PYTHONPATH=src python -m benchmarks.run --smoke   # <60s; BENCH_smoke.json
 
 Each module reproduces one paper artifact (DESIGN.md §8).  `--full` uses the
 larger graph sizes; default (quick) finishes on one CPU in minutes.
+`--smoke` runs one tiny fig7 cell and writes `BENCH_smoke.json` — the CI
+benchmark-smoke job uploads it so the perf trajectory accumulates per commit.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
 
 from benchmarks import (
+    fig10_breakdown,
+    fig12_sensitivity,
     fig2_edge_volume,
     fig7_response_time,
     fig8_access_volume,
-    fig10_breakdown,
-    fig12_sensitivity,
     roofline,
     table4_accuracy,
     table5_degree,
@@ -39,11 +43,28 @@ MODULES = {
 }
 
 
+def smoke() -> None:
+    from benchmarks.common import ROWS
+
+    t0 = time.time()
+    fig7_response_time.smoke()
+    wall = time.time() - t0
+    out = {"rows": list(ROWS), "wall_s": round(wall, 2)}
+    with open("BENCH_smoke.json", "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote BENCH_smoke.json ({wall:.1f}s)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
     ap.add_argument("--only", type=str, default="")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny fig7 cell, <60s; writes BENCH_smoke.json")
     args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
     names = [s for s in args.only.split(",") if s] or list(MODULES)
     print("name,us_per_call,derived")
     for name in names:

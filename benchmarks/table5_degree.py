@@ -6,10 +6,9 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, gnn_params, setup
-from repro.core import RTECEngine, RTECFull, make_model
+from repro.core import make_model
 from repro.core.affected import build_plan
 from repro.core.baselines import forward_affected_sets
-import jax.numpy as jnp
 
 
 def run(quick: bool = True):

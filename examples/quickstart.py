@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import RTECEngine, RTECFull, full_forward, make_model
+from repro.core import RTECEngine, RTECFull, make_model
 from repro.graph import make_graph, make_stream
 from repro.graph.generators import random_features
 

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import RTECEngine, full_forward, make_model, odec_query
+from repro.core import RTECEngine, make_model, odec_query
 from repro.graph import make_graph, make_stream
 from repro.graph.generators import random_features
 

@@ -1,6 +1,6 @@
 """Architecture registry: one module per assigned architecture, plus the
 paper-native GNN streaming configs (repro.configs.gnn)."""
-from repro.configs.base import ArchConfig, ShapeConfig, SHAPES
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig
 
 _ARCH_MODULES = {
     "qwen2.5-3b": "qwen2_5_3b",

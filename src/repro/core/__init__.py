@@ -1,12 +1,12 @@
 """Core incremental-RTEC framework — the paper's contribution in JAX."""
 
-from repro.core.operators import GNNModel
-from repro.core.models import make_model, ALL_MODELS
-from repro.core.engine import RTECEngine, BatchStats
-from repro.core.full import full_forward, LayerState
-from repro.core.baselines import RTECFull, RTECSample, RTECUER, MTECPeriod
-from repro.core.odec import odec_query
+from repro.core.baselines import RTECUER, MTECPeriod, RTECFull, RTECSample
 from repro.core.conditions import certify, validate_registration
+from repro.core.engine import BatchStats, RTECEngine
+from repro.core.full import LayerState, full_forward
+from repro.core.models import ALL_MODELS, make_model
+from repro.core.odec import odec_query
+from repro.core.operators import GNNModel
 
 __all__ = [
     "GNNModel",

@@ -20,7 +20,7 @@ capacity slot, so they can never alias live data.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 

@@ -21,7 +21,7 @@ paper's SMT check guards against).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -15,14 +15,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.affected import BatchPlan, build_plan
-from repro.core.full import LayerState, full_forward
+from repro.core.full import full_forward
 from repro.core.incremental import incremental_layer, with_scratch
 from repro.core.operators import GNNModel, Params
 from repro.graph.csr import CSRGraph

@@ -12,7 +12,7 @@ so padded indices never alias real vertices.
 from __future__ import annotations
 
 from functools import partial
-from typing import List, NamedTuple, Optional, Sequence, Tuple
+from typing import List, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,7 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
-from repro.core.operators import GNNModel, Params, glorot
+from repro.core.operators import GNNModel, glorot
 
 _EPS = 1e-12
 # Empty-neighborhood guard thresholds (DESIGN.md §4): when a context sum

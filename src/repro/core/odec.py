@@ -13,7 +13,7 @@ When Q covers all affected vertices, ODEC reduces to plain incremental RTEC
 from __future__ import annotations
 
 import time
-from typing import List, Sequence, Tuple
+from typing import List, Tuple
 
 import jax.numpy as jnp
 import numpy as np

@@ -1,0 +1,109 @@
+"""Activation-sharding context: `activation_sharding` + `ashard`.
+
+Model code annotates activations with *logical* activation axes ("dp" =
+batch-like, "tp" = head/feature-like, None = replicated) instead of mesh
+names, so the same forward pass runs unmodified on one device, one pod or
+multiple pods.  `ashard` is a no-op unless the caller opened an
+`activation_sharding(mesh, shcfg)` context — single-device tests and the
+eager paths never pay for it.
+
+Entering the context is cheap and purely thread-local; it composes with
+`jax.jit` because `ashard` resolves the (mesh, config) pair at *trace*
+time, baking a `with_sharding_constraint` into the jaxpr.
+
+CAVEAT — the context is NOT part of jit's cache key.  A function traced
+*outside* the context caches the unconstrained program, and a later call
+inside the context with the same avals silently reuses it (and vice
+versa).  Always enter `activation_sharding` before the first call of a
+jitted step you want constrained, or jit a fresh function per context —
+`launch/dryrun.py` and `tests/test_dist.py` both follow this pattern.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import ShardingConfig, _as_tuple, _axis_sizes, _entry, _prod_size
+
+_state = threading.local()
+
+
+def _stack():
+    if not hasattr(_state, "stack"):
+        _state.stack = []
+    return _state.stack
+
+
+def current_mesh_and_config() -> Optional[Tuple[object, ShardingConfig]]:
+    """The innermost active (mesh, ShardingConfig), or None."""
+    stack = _stack()
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, shcfg: ShardingConfig):
+    """Activate `ashard` constraints for `mesh` under `shcfg`'s rules.
+
+    Usage (see `launch/dryrun.py` / `tests/test_dist.py`)::
+
+        sh = shardings_for_cell(cfg, shape, mesh)
+        with activation_sharding(mesh, sh["shcfg"]):
+            jitted = jax.jit(step, in_shardings=...)
+            out = jitted(...)
+    """
+    _stack().append((mesh, shcfg))
+    try:
+        yield
+    finally:
+        _stack().pop()
+
+
+def _activation_spec(shape, logical_axes, mesh, shcfg: ShardingConfig) -> P:
+    """Map ("dp"|"tp"|None, ...) onto mesh axes, divisibility-checked.
+
+    `logical_axes` may be shorter than the rank; trailing dims replicate.
+    A mesh axis is used at most once (first dim wins), and any dim not
+    divisible by its axes falls back to replicated — so the same annotation
+    is valid for 4-head test models and 128-head production models.
+    """
+    sizes = _axis_sizes(mesh)
+    lookup = {
+        "dp": tuple(a for a in shcfg.dp_axes if a in sizes),
+        "tp": (shcfg.tp_axis,) if shcfg.tp_axis in sizes else (),
+    }
+    used: set = set()
+    entries = []
+    for i, dim in enumerate(shape):
+        ax = logical_axes[i] if i < len(logical_axes) else None
+        mesh_axes = lookup.get(ax, ()) if ax is not None else ()
+        mesh_axes = _as_tuple(mesh_axes)
+        if (
+            mesh_axes
+            and not any(m in used for m in mesh_axes)
+            and dim % _prod_size(mesh_axes, sizes) == 0
+        ):
+            used.update(mesh_axes)
+            entries.append(_entry(mesh_axes))
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def ashard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Constrain activation `x` to the logical axes, or pass through.
+
+    Outside an `activation_sharding` context this returns `x` unchanged
+    (identity, no tracing cost), which keeps every single-device code path
+    byte-identical to the unsharded program.
+    """
+    ctx = current_mesh_and_config()
+    if ctx is None:
+        return x
+    mesh, shcfg = ctx
+    spec = _activation_spec(np.shape(x), logical_axes, mesh, shcfg)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,239 @@
+"""Logical-axis sharding rules (MaxText pattern).
+
+Every parameter carries a tuple of *logical* axis names (``nn/param.py``);
+this module owns the single mapping from logical names to physical mesh
+axes.  The mapping depends only on :class:`ShardingConfig` — training wants
+FSDP (shard the replicated ``embed`` dim over the data axes, ZeRO-3 style),
+serving wants TP-only params so decode never all-gathers weights.
+
+Key invariant: a mesh axis may appear at most once in a
+:class:`~jax.sharding.PartitionSpec`; :func:`spec_for_axes` resolves
+conflicts first-dim-wins.  All shape-aware entry points
+(:func:`auto_spec`, :func:`tree_shardings`, :func:`cache_specs`) drop any
+assignment whose dim is not divisible by the mesh axes it would occupy, so
+tiny test configs and production configs share one rule table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# A rule maps a logical axis name to one mesh axis, a tuple of mesh axes
+# (e.g. FSDP over ("pod", "data")), or None (replicated).
+MeshAxes = Union[None, str, Tuple[str, ...]]
+Rules = Dict[str, MeshAxes]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingConfig:
+    """How logical axes map onto the physical mesh.
+
+    ``fsdp``    — shard the ``embed`` dim of every weight over ``dp_axes``
+                  (ZeRO-3: params, grads and optimizer state all sharded).
+                  With ``fsdp=False`` params are TP-only (serving layout);
+                  optimizer state can still be dp-sharded via
+                  :func:`opt_state_specs` (ZeRO-1).
+    ``dp_axes`` — mesh axes that jointly form the data-parallel group
+                  (("data",) single pod, ("pod", "data") multi-pod).
+    ``tp_axis`` — the tensor-parallel mesh axis.
+    """
+
+    fsdp: bool = True
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+
+    def rules(self) -> Rules:
+        dp = tuple(self.dp_axes)
+        return {
+            # weight matrices: contracting/output dims over TP
+            "vocab": self.tp_axis,
+            "heads": self.tp_axis,
+            "mlp": self.tp_axis,
+            # FSDP shards the embed dim over the data axes; otherwise the
+            # embed dim stays replicated (pure-TP serving layout)
+            "embed": dp if self.fsdp else None,
+            # scan-stacked leading dims are never sharded
+            "layers": None,
+            "stack": None,
+            # experts are local to each TP group (no expert-parallel axis yet)
+            "experts": None,
+        }
+
+
+def _as_tuple(v: MeshAxes) -> Tuple[str, ...]:
+    if v is None:
+        return ()
+    if isinstance(v, str):
+        return (v,)
+    return tuple(v)
+
+
+def _entry(axes: Tuple[str, ...]):
+    """Collapse a mesh-axes tuple into a PartitionSpec entry."""
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def spec_for_axes(axes: Sequence[Optional[str]], rules: Rules) -> P:
+    """Logical axes tuple -> PartitionSpec under ``rules``.
+
+    Unknown logical names are replicated; a mesh axis already consumed by an
+    earlier dim is dropped (first-dim-wins), never duplicated.
+    """
+    used: set = set()
+    entries = []
+    for ax in axes:
+        mesh_axes = _as_tuple(rules.get(ax)) if ax is not None else ()
+        if mesh_axes and not any(m in used for m in mesh_axes):
+            used.update(mesh_axes)
+            entries.append(_entry(mesh_axes))
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def _axis_sizes(mesh) -> Dict[str, int]:
+    """{mesh axis -> size}; works for jax.sharding.Mesh and test doubles
+    exposing only ``axis_names`` + ``devices``."""
+    return dict(zip(tuple(mesh.axis_names), np.shape(mesh.devices)))
+
+
+def _prod_size(axes: Tuple[str, ...], sizes: Dict[str, int]) -> int:
+    return math.prod(sizes[a] for a in axes)
+
+
+def _drop_indivisible(spec: P, shape: Sequence[int], sizes: Dict[str, int]) -> P:
+    """Replicate any dim whose size is not divisible by its assigned axes."""
+    entries = []
+    for dim, entry in zip(shape, tuple(spec)):
+        axes = _as_tuple(entry)
+        if axes and dim % _prod_size(axes, sizes) != 0:
+            entry = None
+        entries.append(entry)
+    return P(*entries)
+
+
+def auto_spec(shape: Sequence[int], mesh, shcfg: ShardingConfig, batch_dim: int = 0) -> P:
+    """Divisibility-aware spec for an *input* array (batches, tokens).
+
+    The dp axes land on ``batch_dim`` when its size divides the dp group;
+    otherwise they move to the first other divisible dim (so odd benchmark
+    batch sizes still get some parallelism).  The tp axis then takes the
+    rightmost remaining divisible dim.  Anything left is replicated.
+    """
+    sizes = _axis_sizes(mesh)
+    dp = tuple(a for a in shcfg.dp_axes if a in sizes)
+    entries: list = [None] * len(shape)
+
+    if dp:
+        dp_size = _prod_size(dp, sizes)
+        dp_dim = None
+        if shape[batch_dim] % dp_size == 0:
+            dp_dim = batch_dim
+        else:
+            for i, d in enumerate(shape):
+                if i != batch_dim and d % dp_size == 0:
+                    dp_dim = i
+                    break
+        if dp_dim is not None:
+            entries[dp_dim] = _entry(dp)
+
+    if shcfg.tp_axis in sizes:
+        tp_size = sizes[shcfg.tp_axis]
+        for i in range(len(shape) - 1, -1, -1):
+            if entries[i] is None and shape[i] % tp_size == 0:
+                entries[i] = shcfg.tp_axis
+                break
+    return P(*entries)
+
+
+def _is_axes_leaf(x: Any) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+
+def tree_shardings(
+    axes_tree,
+    mesh,
+    shcfg: ShardingConfig,
+    shapes_tree=None,
+) -> Any:
+    """Map a logical-axes tree (from ``nn.param.unzip``) to NamedShardings.
+
+    With ``shapes_tree`` (matching tree of arrays / ShapeDtypeStructs) every
+    spec is additionally divisibility-checked against the actual dims — the
+    reduced test configs rely on this to fall back to replication.
+    """
+    rules = shcfg.rules()
+    sizes = _axis_sizes(mesh)
+
+    def one(axes, shaped=None):
+        spec = spec_for_axes(axes, rules)
+        if shaped is not None:
+            spec = _drop_indivisible(spec, np.shape(shaped), sizes)
+        return NamedSharding(mesh, spec)
+
+    if shapes_tree is None:
+        return jax.tree.map(one, axes_tree, is_leaf=_is_axes_leaf)
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=_is_axes_leaf)
+
+
+def batch_specs(batch_struct: Dict[str, Any], mesh, shcfg: ShardingConfig,
+                batch_dim: int = 0) -> Dict[str, P]:
+    """Per-input PartitionSpecs for a {name: array-like} batch dict."""
+    return {k: auto_spec(np.shape(v), mesh, shcfg, batch_dim=batch_dim)
+            for k, v in batch_struct.items()}
+
+
+def cache_specs(cache_struct, mesh, shcfg: ShardingConfig, batch: Optional[int] = None):
+    """PartitionSpec tree for a decode-cache pytree.
+
+    Cache leaves are stacked state buffers with the batch dim somewhere
+    after the leading scan dims — ``[L, B, heads, ...]`` for KV caches,
+    ``[G, P-1, B, ...]`` for xLSTM group state.  With ``batch`` given, the
+    dp axes land on the first dim (past dim 0) whose size equals it;
+    without it, dim 1 is assumed (the KV-cache layout).  The tp axis only
+    ever takes the dim immediately after the batch (the heads dim) —
+    sharding the ring-buffer sequence dim would turn every decode-step
+    ``dynamic_update_slice`` at a traced index into a collective.
+    Scalars (the ring index) and short leaves replicate.
+    """
+    sizes = _axis_sizes(mesh)
+    dp = tuple(a for a in shcfg.dp_axes if a in sizes)
+    dp_size = _prod_size(dp, sizes) if dp else 0
+    tp = shcfg.tp_axis if shcfg.tp_axis in sizes else None
+
+    def one(leaf):
+        shape = np.shape(leaf)
+        if len(shape) < 3:
+            return P(*([None] * len(shape)))
+        b_dim = 1
+        if batch is not None:
+            b_dim = next((i for i in range(1, len(shape)) if shape[i] == batch), 1)
+        entries: list = [None] * len(shape)
+        if dp and shape[b_dim] % dp_size == 0:
+            entries[b_dim] = _entry(dp)
+        h_dim = b_dim + 1
+        if tp and h_dim < len(shape) - 1 and shape[h_dim] % sizes[tp] == 0:
+            entries[h_dim] = tp
+        return P(*entries)
+
+    return jax.tree.map(one, cache_struct)
+
+
+def opt_state_specs(axes_tree, mesh, shcfg: ShardingConfig, shapes_tree=None):
+    """ZeRO-1/3 optimizer-moment shardings (`train/optimizer.py`).
+
+    AdamW's ``m``/``v`` are pytree-shaped copies of the params, so they take
+    the *FSDP* layout even when the params themselves are TP-only
+    (``fsdp=False``): that is exactly ZeRO-1 (replicated params, dp-sharded
+    optimizer state).  With ``fsdp=True`` params and moments share one
+    layout — ZeRO-3.
+    """
+    zcfg = shcfg if shcfg.fsdp else dataclasses.replace(shcfg, fsdp=True)
+    return tree_shardings(axes_tree, mesh, zcfg, shapes_tree=shapes_tree)

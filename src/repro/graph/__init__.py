@@ -2,9 +2,9 @@
 synthetic generators, and update-stream workloads."""
 
 from repro.graph.csr import CSRGraph
-from repro.graph.pma import PMAGraph
-from repro.graph.streaming import EdgeUpdate, UpdateBatch, StreamWorkload, make_stream
 from repro.graph.generators import barabasi_albert, erdos_renyi, make_graph
+from repro.graph.pma import PMAGraph
+from repro.graph.streaming import EdgeUpdate, StreamWorkload, UpdateBatch, make_stream
 
 __all__ = [
     "CSRGraph",

@@ -18,11 +18,9 @@ Roofline terms recorded like the LM cells (experiments/dryrun/<mode>/gnn_*).
 """
 
 import argparse
-import dataclasses
 import json
 import time
 import traceback
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp

@@ -135,13 +135,10 @@ def _operands(rest: str) -> List[str]:
     m = re.search(r"\(([^)]*)\)", rest[rest.index(" ") :] if " " in rest else rest)
     if not m:
         return []
-    ops = []
-    for tok in m.group(1).split(","):
-        tok = tok.strip()
-        mm = re.match(r"%?([\w\.\-]+)$", tok)
-        if mm:
-            ops.append(mm.group(1))
-    return ops
+    # operand tokens are "%name" (old text format) or "f32[8,8]{1,0} %name"
+    # (xla ≥ 0.4.36 prints inline operand types); the type strings contain
+    # commas, so pull the %-prefixed names instead of splitting on ","
+    return re.findall(r"%([\w\.\-]+)", m.group(1))
 
 
 @dataclasses.dataclass

@@ -11,9 +11,23 @@ import jax
 import numpy as np
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def make_production_mesh(*, multi_pod: bool = False, pipeline_stages: int = 0):
+    """Single pod 16×16 ("data", "model"); multi-pod 2×16×16 ("pod", ...).
+
+    ``pipeline_stages > 1`` carves a leading "stage" axis out of the data
+    axis (16 must stay divisible) for `repro.dist.pipeline.pipeline_apply`.
+    """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if pipeline_stages > 1:
+        data_idx = len(shape) - 2
+        if shape[data_idx] % pipeline_stages:
+            raise ValueError(
+                f"pipeline_stages={pipeline_stages} must divide data axis {shape[data_idx]}"
+            )
+        shape = (*shape[:data_idx], pipeline_stages,
+                 shape[data_idx] // pipeline_stages, shape[-1])
+        axes = (*axes[:data_idx], "stage", "data", "model")
     n = int(np.prod(shape))
     devices = jax.devices()
     if len(devices) == n:

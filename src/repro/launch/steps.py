@@ -7,8 +7,7 @@ with shardings derived from the logical-axis rules.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +20,7 @@ from repro.dist.sharding import (
     auto_spec,
     batch_specs,
     cache_specs,
+    opt_state_specs,
     tree_shardings,
 )
 from repro.models import decode_step, init_model, loss_fn, prefill
@@ -132,21 +132,24 @@ def shardings_for_cell(
         "params_sharding": psharding,
     }
     bstruct = batch_struct(cfg, shape)
-    bspec = {k: auto_spec(v.shape, mesh, shcfg, batch_dim=0) for k, v in bstruct.items()}
+    bspec = batch_specs(bstruct, mesh, shcfg)
     out["batch_struct"] = bstruct
     out["batch_sharding"] = {k: NamedSharding(mesh, s) for k, s in bspec.items()}
 
     if shape.kind == "train":
         ostruct = jax.eval_shape(lambda: adamw_init(pstruct))
+        # ZeRO: moments always take the dp-sharded (FSDP) layout, even when
+        # the params themselves are TP-only (opt_state_specs docstring)
+        msharding = opt_state_specs(axes, mesh, shcfg, shapes_tree=pstruct)
         osharding = OptState(
-            m=psharding, v=psharding, count=NamedSharding(mesh, P())
+            m=msharding, v=msharding, count=NamedSharding(mesh, P())
         )
         out["opt_struct"] = ostruct
         out["opt_sharding"] = osharding
     else:
         s_max = shape.seq_len + (cfg.num_patches or 0)
         cstruct = serve_cache_struct(cfg, shape.global_batch, s_max)
-        cspecs = cache_specs(cstruct, mesh, shcfg)
+        cspecs = cache_specs(cstruct, mesh, shcfg, batch=shape.global_batch)
         out["cache_struct"] = cstruct
         out["cache_sharding"] = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
                                              is_leaf=lambda x: isinstance(x, P))

@@ -12,7 +12,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, get_arch, reduced_config
 from repro.train.optimizer import OptConfig

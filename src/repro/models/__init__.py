@@ -1,7 +1,7 @@
 """Model zoo API: unified init / loss / prefill / decode per architecture."""
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 

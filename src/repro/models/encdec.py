@@ -8,13 +8,13 @@ keeps the encoder memory's cross-K/V precomputed in the cache.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.models.lm import _dtype, _logits
+from repro.models.lm import _dtype, _init_mlp, _logits
 from repro.nn import param as pm
 from repro.nn.attention import (
     KVCache,
@@ -26,7 +26,6 @@ from repro.nn.attention import (
     init_cross_attention,
 )
 from repro.nn.layers import rms_norm, softmax_xent, swiglu
-from repro.models.lm import _init_mlp
 
 
 class EncDecCache(NamedTuple):

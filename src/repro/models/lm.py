@@ -15,8 +15,6 @@ scanned int32 array.  Params are `Param(value, logical_axes)` pairs — see
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

@@ -15,7 +15,6 @@ import jax.numpy as jnp
 
 from repro.dist.ctx import ashard
 from repro.kernels import ops as kops
-from repro.kernels import ref as kref
 from repro.nn import param as pm
 from repro.nn.layers import apply_rope, rms_norm, rope_freqs
 

@@ -12,12 +12,11 @@ optional log input gate li [B, S, H] (mLSTM).  State [B, H, dk, dv].
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.nn import param as pm
 
 
 # ====================================================================== #

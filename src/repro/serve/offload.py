@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 import jax.numpy as jnp
 import numpy as np

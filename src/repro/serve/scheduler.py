@@ -13,7 +13,7 @@ Transfer accounting exposes the reuse win (benchmarks/fig10).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

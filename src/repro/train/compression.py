@@ -14,7 +14,6 @@ optimizer sees the lossy gradient and tests can assert convergence.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, NamedTuple, Tuple
 
 import jax

@@ -20,10 +20,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.train.checkpoint import CheckpointManager

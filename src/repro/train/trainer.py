@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Iterator, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -15,9 +15,9 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import init_model, loss_fn
 from repro.train.checkpoint import CheckpointManager
-from repro.train.compression import CompressedState, compress_grads, init_state
+from repro.train.compression import compress_grads, init_state
 from repro.train.fault import FaultConfig, FaultTolerantRunner
-from repro.train.optimizer import OptConfig, OptState, adamw_init, adamw_update
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update
 
 
 @dataclasses.dataclass

@@ -6,11 +6,11 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    RTECUER,
     MTECPeriod,
     RTECEngine,
     RTECFull,
     RTECSample,
-    RTECUER,
     full_forward,
     make_model,
     odec_query,

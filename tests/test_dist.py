@@ -3,10 +3,10 @@
 import subprocess
 import sys
 import textwrap
+from pathlib import Path
 
 import jax
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.dist.sharding import ShardingConfig, auto_spec, spec_for_axes
@@ -54,7 +54,7 @@ def _run_sub(body: str) -> str:
     code = _SUBPROCESS_PRELUDE + textwrap.dedent(body)
     out = subprocess.run(
         [sys.executable, "-c", code], capture_output=True, text=True,
-        cwd="/root/repo", timeout=600,
+        cwd=Path(__file__).resolve().parents[1], timeout=600,
     )
     assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
     return out.stdout

@@ -4,6 +4,7 @@ device for SPMD collectives)."""
 import subprocess
 import sys
 import textwrap
+from pathlib import Path
 
 from repro.launch.hlo_analysis import (
     _shape_dims,
@@ -90,5 +91,6 @@ print("ratio ok", ratio)
 
 def test_scan_flops_match_analytic_subprocess():
     out = subprocess.run([sys.executable, "-c", _SUB], capture_output=True,
-                         text=True, cwd="/root/repo", timeout=600)
+                         text=True, cwd=Path(__file__).resolve().parents[1],
+                         timeout=600)
     assert out.returncode == 0, f"STDOUT:{out.stdout}\nSTDERR:{out.stderr}"

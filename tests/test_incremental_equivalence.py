@@ -9,8 +9,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings
-from hypothesis import strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property-based tests need hypothesis (pip install -e .[dev])"
+)
+from hypothesis import HealthCheck, given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
 
 from repro.core import ALL_MODELS, RTECEngine, full_forward, make_model
 from repro.graph import make_graph, make_stream

@@ -6,9 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    RTECUER,
     RTECEngine,
     RTECFull,
-    RTECUER,
     full_forward,
     make_model,
     odec_query,
