@@ -1,0 +1,88 @@
+"""Blocking CI perf-regression gate over the bench-smoke artifact.
+
+Usage (what .github/workflows/ci.yml runs after ``benchmarks.run --smoke``):
+
+    python -m benchmarks.check_regression \
+        --current BENCH_smoke.json --baseline BENCH_baseline.json
+
+Fails (exit 1) when the pipelined engine's headline metric
+``fig7/smoke/gcn/inc_speedup_vs_full``
+
+* drops below the absolute floor (default 1.2x — the paper's claim is a
+  *speedup*, so losing to full recompute is always a regression), or
+* regresses more than ``--tolerance`` (default 20%) relative to the
+  committed ``BENCH_baseline.json``.
+
+The baseline file is committed; refresh it deliberately (rerun
+``python -m benchmarks.run --smoke`` and copy the artifact) when a PR
+legitimately shifts the perf envelope.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+METRIC = "fig7/smoke/gcn/inc_speedup_vs_full"
+
+
+def read_speedup(path: str, metric: str = METRIC) -> float:
+    """Extract the speedup ('1.53x' derived column) from a smoke artifact."""
+    with open(path) as f:
+        data = json.load(f)
+    for row in data.get("rows", []):
+        name, _, derived = row.split(",", 2)
+        if name == metric:
+            if not derived.endswith("x"):
+                raise ValueError(f"{path}: metric {metric!r} has no speedup column: {row!r}")
+            return float(derived[:-1])
+    raise KeyError(f"{path}: metric {metric!r} not found")
+
+
+def check(current: float, baseline: float | None, floor: float, tolerance: float):
+    """Returns a list of failure messages (empty → gate passes)."""
+    failures = []
+    if current < floor:
+        failures.append(
+            f"{METRIC} = {current:.2f}x is below the absolute floor {floor:.2f}x"
+        )
+    if baseline is not None:
+        min_ok = baseline * (1.0 - tolerance)
+        if current < min_ok:
+            failures.append(
+                f"{METRIC} = {current:.2f}x regressed >{tolerance:.0%} vs "
+                f"baseline {baseline:.2f}x (min allowed {min_ok:.2f}x)"
+            )
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default="BENCH_smoke.json")
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--floor", type=float, default=1.2,
+                    help="absolute minimum inc_speedup_vs_full (default 1.2)")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="max fractional regression vs baseline (default 0.2)")
+    args = ap.parse_args()
+
+    current = read_speedup(args.current)
+    try:
+        baseline = read_speedup(args.baseline)
+    except FileNotFoundError:
+        print(f"note: no baseline at {args.baseline}; checking absolute floor only")
+        baseline = None
+
+    failures = check(current, baseline, args.floor, args.tolerance)
+    base_str = f"{baseline:.2f}x" if baseline is not None else "n/a"
+    print(f"perf gate: current={current:.2f}x baseline={base_str} "
+          f"floor={args.floor:.2f}x tolerance={args.tolerance:.0%}")
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    if not failures:
+        print("perf gate passed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

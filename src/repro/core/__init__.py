@@ -2,7 +2,7 @@
 
 from repro.core.baselines import RTECUER, MTECPeriod, RTECFull, RTECSample
 from repro.core.conditions import certify, validate_registration
-from repro.core.engine import BatchStats, RTECEngine
+from repro.core.engine import BatchStats, RTECEngine, StreamStats
 from repro.core.full import LayerState, full_forward
 from repro.core.models import ALL_MODELS, make_model
 from repro.core.odec import odec_query
@@ -14,6 +14,7 @@ __all__ = [
     "ALL_MODELS",
     "RTECEngine",
     "BatchStats",
+    "StreamStats",
     "full_forward",
     "LayerState",
     "RTECFull",

@@ -20,7 +20,8 @@ capacity slot, so they can never alias live data.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from functools import lru_cache
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -317,3 +318,187 @@ def build_plan(
     deg_old_x = np.concatenate([deg_old, np.zeros(1, np.float32)])
     deg_new_x = np.concatenate([deg_new, np.zeros(1, np.float32)])
     return BatchPlan(layers=plans, deg_old=deg_old_x, deg_new=deg_new_x, changed0=changed0)
+
+
+# ====================================================================== #
+# Packed plans — pipelined-engine transfer format (paper §V co-processing)
+# ====================================================================== #
+# Per-field capacity kind within a layer's cap tuple (e, r, f, fe, o).
+IDX_FIELDS: Tuple[Tuple[str, int], ...] = (
+    ("e_src", 0), ("e_dst", 0), ("e_rowidx", 0), ("e_t", 0),
+    ("touch_rows", 1), ("f_rows", 2), ("f_src", 3), ("f_rowidx", 3),
+    ("f_t", 3), ("out_rows", 4),
+)
+FLT_FIELDS: Tuple[Tuple[str, int], ...] = (("e_sign", 0), ("e_w", 0), ("f_w", 3))
+MSK_FIELDS: Tuple[Tuple[str, int], ...] = (
+    ("e_mask", 0), ("e_use_new", 0), ("touch_mask", 1), ("f_mask", 2),
+    ("f_emask", 3), ("out_mask", 4),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedLayout:
+    """Static (hashable) shape descriptor of a packed plan.
+
+    One distinct layout → one trace of the fused device step; the power-of-two
+    bucketing in :func:`build_plan` keeps the number of layouts O(log) over a
+    stream, exactly like the unfused per-layer functions."""
+
+    n: int  # vertex count (scratch row index)
+    feat_cap: int  # 0 → batch has no feature updates (static branch)
+    caps: Tuple[Tuple[int, int, int, int, int], ...]  # per layer (e, r, f, fe, o)
+
+
+@lru_cache(maxsize=None)
+def layout_slices(layout: PackedLayout):
+    """Static offset table: per-layer field → slice into the packed buffers.
+
+    Returns (idx_slices, flt_slices, msk_slices, totals) where each *_slices
+    is a tuple (one per layer) of name → slice dicts, and totals are the
+    buffer lengths (idx_len, flt_len, msk_len)."""
+    idx_off = layout.feat_cap  # [feat_rows | per-layer idx fields]
+    flt_off = 2 * (layout.n + 1)  # [deg_old | deg_new | per-layer flt fields]
+    msk_off = layout.feat_cap  # [feat_mask | per-layer msk fields]
+    idx_sl, flt_sl, msk_sl = [], [], []
+    for caps in layout.caps:
+        di: Dict[str, slice] = {}
+        for name, kind in IDX_FIELDS:
+            di[name] = slice(idx_off, idx_off + caps[kind])
+            idx_off += caps[kind]
+        df: Dict[str, slice] = {}
+        for name, kind in FLT_FIELDS:
+            df[name] = slice(flt_off, flt_off + caps[kind])
+            flt_off += caps[kind]
+        dm: Dict[str, slice] = {}
+        for name, kind in MSK_FIELDS:
+            dm[name] = slice(msk_off, msk_off + caps[kind])
+            msk_off += caps[kind]
+        idx_sl.append(di)
+        flt_sl.append(df)
+        msk_sl.append(dm)
+    return tuple(idx_sl), tuple(flt_sl), tuple(msk_sl), (idx_off, flt_off, msk_off)
+
+
+@dataclasses.dataclass
+class PackedPlan:
+    """A whole batch's plan flattened into three contiguous host buffers.
+
+    Shipping (idx, flt, msk[, feat_vals]) is one ``jax.device_put`` call per
+    batch instead of ~24×L small per-array transfers; the static offset table
+    (:func:`layout_slices`) lets the fused device step slice every field back
+    out at trace time."""
+
+    layout: PackedLayout
+    idx: np.ndarray  # int32  [idx_len]
+    flt: np.ndarray  # float32 [flt_len]  (leads with deg_old, deg_new)
+    msk: np.ndarray  # bool   [msk_len]
+    feat_vals: Optional[np.ndarray]  # float32 [feat_cap, d0] when feat_cap > 0
+    # optional host-precomputed block-CSR schedules for the Pallas delta
+    # scatter, one (perm, dloc, block_rows) triple per layer
+    pallas: Optional[Tuple[Tuple[np.ndarray, np.ndarray, np.ndarray], ...]]
+    # accounting (aggregated over layers; feeds BatchStats)
+    n_inc_edges: int
+    n_full_edges: int
+    n_out_rows: int
+
+
+def _pallas_delta_layout(lp: LayerPlan, tv: int, be: int):
+    """Host side of the co-processed Pallas delta scatter: sort this layer's
+    incremental records by touched-row tile and emit the block-aligned CSR
+    schedule (gather perm composed back into the *unsorted* record order).
+
+    The raw schedule length depends on how records distribute over row
+    tiles, so it is padded to a power-of-two block-count bucket — otherwise
+    every batch would present new shapes to the jitted fused step and force
+    a recompile.  Padding: perm/dloc = -1 (zeroed message, matches no row),
+    block_rows repeats its last tile (non-decreasing, so the kernel treats
+    the extra blocks as accumulating zeros into an already-visited tile)."""
+    from repro.kernels.segment_spmm import prepare_block_csr
+
+    r_cap = lp.touch_rows.shape[0]
+    dstk = np.where(lp.e_mask, lp.e_rowidx.astype(np.int64), -1)
+    order = np.argsort(dstk, kind="stable")  # -1 (masked) sorts first; dropped
+    perm_s, dloc, brows, e_pad = prepare_block_csr(dstk[order], r_cap, tv=tv, be=be)
+    perm = np.where(perm_s >= 0, order[np.clip(perm_s, 0, None)], -1).astype(np.int32)
+    cap = next_bucket(e_pad, minimum=be)  # pow2 ≥ be → stays a multiple of be
+    if cap != e_pad:
+        pad = cap - e_pad
+        perm = np.concatenate([perm, np.full(pad, -1, np.int32)])
+        dloc = np.concatenate([dloc, np.full(pad, -1, np.int32)])
+        brows = np.concatenate(
+            [brows, np.full(cap // be - brows.shape[0], brows[-1], np.int32)]
+        )
+    return perm, dloc, brows
+
+
+def pack_plan(
+    plan: BatchPlan,
+    feat_vertices: Optional[np.ndarray] = None,
+    feat_values: Optional[np.ndarray] = None,
+    pallas: bool = False,
+) -> PackedPlan:
+    """Flatten a :class:`BatchPlan` into the packed transfer format."""
+    n = plan.deg_old.shape[0] - 1
+    if feat_vertices is not None and np.asarray(feat_vertices).size:
+        fr = np.asarray(feat_vertices, np.int64)
+        fv = np.asarray(feat_values, np.float32)
+        feat_cap = next_bucket(fr.shape[0])
+    else:
+        fr = np.zeros(0, np.int64)
+        fv = None
+        feat_cap = 0
+    layout = PackedLayout(
+        n=n, feat_cap=feat_cap, caps=tuple(lp.shape_key for lp in plan.layers)
+    )
+    idx_sl, flt_sl, msk_sl, (idx_len, flt_len, msk_len) = layout_slices(layout)
+
+    idx = np.full(idx_len, n, np.int32)  # default pad → scratch row
+    flt = np.zeros(flt_len, np.float32)
+    msk = np.zeros(msk_len, bool)
+    flt[: n + 1] = plan.deg_old
+    flt[n + 1 : 2 * (n + 1)] = plan.deg_new
+    feat_vals = None
+    if feat_cap:
+        idx[: fr.shape[0]] = fr
+        msk[: fr.shape[0]] = True
+        feat_vals = np.zeros((feat_cap, fv.shape[1]), np.float32)
+        feat_vals[: fv.shape[0]] = fv
+    for l, lp in enumerate(plan.layers):
+        for name, _ in IDX_FIELDS:
+            idx[idx_sl[l][name]] = getattr(lp, name)
+        for name, _ in FLT_FIELDS:
+            flt[flt_sl[l][name]] = getattr(lp, name)
+        for name, _ in MSK_FIELDS:
+            msk[msk_sl[l][name]] = getattr(lp, name)
+
+    pallas_sched = None
+    if pallas:
+        from repro.kernels.delta_agg import DELTA_BE, DELTA_TV
+
+        pallas_sched = tuple(
+            _pallas_delta_layout(lp, DELTA_TV, DELTA_BE) for lp in plan.layers
+        )
+    return PackedPlan(
+        layout=layout,
+        idx=idx,
+        flt=flt,
+        msk=msk,
+        feat_vals=feat_vals,
+        pallas=pallas_sched,
+        n_inc_edges=plan.total_inc_edges(),
+        n_full_edges=plan.total_full_edges(),
+        n_out_rows=plan.total_vertices(),
+    )
+
+
+def build_packed_plan(
+    model: GNNModel,
+    g_old: CSRGraph,
+    g_new: CSRGraph,
+    batch: UpdateBatch,
+    num_layers: int,
+    pallas: bool = False,
+) -> PackedPlan:
+    """Alg.-4 planning straight into the packed transfer format."""
+    plan = build_plan(model, g_old, g_new, batch, num_layers)
+    return pack_plan(plan, batch.feat_vertices, batch.feat_values, pallas=pallas)

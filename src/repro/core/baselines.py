@@ -200,6 +200,7 @@ class RTECFull(_BaseRTEC):
         self.h, edges, verts = _run_subset_layers(
             self.model, self.params, self.h, layer_rows, g_new
         )
+        jax.block_until_ready(self.h[-1])  # timed boundary: completion, not dispatch
         t3 = time.perf_counter()
         self.graph = g_new
         return BatchStats(
@@ -240,6 +241,7 @@ class RTECSample(RTECFull):
             self.model, self.params, self.h, layer_rows, g_new,
             fanout=self.fanout, rng=self.rng, must_keep=must_keep,
         )
+        jax.block_until_ready(self.h[-1])  # timed boundary: completion, not dispatch
         t3 = time.perf_counter()
         self.graph = g_new
         return BatchStats(
@@ -262,6 +264,7 @@ class RTECUER(_BaseRTEC):
         self.h, edges, verts = _run_subset_layers(
             self.model, self.params, self.h, layer_rows, g_new
         )
+        jax.block_until_ready(self.h[-1])  # timed boundary: completion, not dispatch
         t3 = time.perf_counter()
         self.graph = g_new
         return BatchStats(

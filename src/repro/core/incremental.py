@@ -1,6 +1,19 @@
-"""Device-side reordered incremental RTEC layer — paper Alg. 1, batched.
+"""Device-side reordered incremental RTEC — paper Alg. 1, batched + fused.
 
-One call updates a whole layer's state for one update batch:
+Two entry points share one layer body (:func:`_layer_body`):
+
+* :func:`incremental_layer` — the seed per-layer function (one jit dispatch
+  per layer, state shipped without scratch rows).  Kept for the offloaded
+  engine, ODEC and the dry-run cost model, and as the unfused reference the
+  equivalence tests compare the pipelined engine against.
+* :func:`fused_stream_step` — the pipelined engine's single L-layer step:
+  consumes one :class:`~repro.core.affected.PackedPlan` (three contiguous
+  buffers, sliced per field at trace time via the static offset table),
+  threads ``(h, a, nct)`` through all layers, and **donates** the state
+  arguments so on TPU the cached state updates in place — O(affected) HBM
+  traffic instead of an O(V) copy in and out per layer.
+
+The layer body per layer:
 
   1. recompute local messages for affected edges (old side / new side chosen
      per record) and scatter the *signed* context deltas into the touched
@@ -12,10 +25,13 @@ One call updates a whole layer's state for one update batch:
      (paper §IV-C), overwriting their (a, nct);
   4. vertex-wise ``update`` on every row whose output changes (line 7).
 
-All arrays are padded (see :mod:`repro.core.affected`).  State arrays are
-extended with one scratch row at index ``n``; padded indices point there, so
-padding can never alias a live vertex regardless of scatter ordering.  The
-function is pure and jitted once per shape bucket.
+All arrays are padded (see :mod:`repro.core.affected`).  State arrays carry
+one scratch row at index ``n``; padded indices point there, so padding can
+never alias a live vertex regardless of scatter ordering.  The fused step
+re-zeroes the scratch row after each layer so the persistent state stays
+inert across batches.  Step 1's scatter optionally routes through the Pallas
+``delta_agg`` kernel (host-planned block-CSR schedule shipped with the
+packed plan; XLA ``segment_sum`` is the fallback).
 """
 from __future__ import annotations
 
@@ -25,6 +41,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.affected import PackedLayout, layout_slices
 from repro.core.full import edge_messages, subset_layer
 from repro.core.operators import GNNModel, Params
 
@@ -34,8 +51,34 @@ def with_scratch(x: jax.Array) -> jax.Array:
     return jnp.concatenate([x, jnp.zeros((1,) + x.shape[1:], x.dtype)], axis=0)
 
 
-@partial(jax.jit, static_argnums=(0,))
-def incremental_layer(
+def _pallas_delta_scatter(
+    ctx: jax.Array,  # [Ecap, C] signed, mask-scaled
+    raw: jax.Array,  # [Ecap, agg]
+    sched: Tuple[jax.Array, jax.Array, jax.Array],  # (perm, dloc, block_rows)
+    r_cap: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Step-1 scatter via the Pallas ``delta_agg`` kernel (one fused
+    [ctx | raw] scatter); schedule was planned host-side in pack_plan."""
+    from repro.kernels.delta_agg import DELTA_BD, DELTA_BE, DELTA_TV, delta_agg
+
+    perm, dloc, brows = sched
+    c = ctx.shape[1]
+    msg = jnp.concatenate([ctx, raw], axis=1)
+    safe = jnp.maximum(perm, 0)
+    m = msg[safe] * (perm >= 0).astype(msg.dtype)[:, None]  # block layout
+    d = m.shape[1]
+    dpad = -(-d // DELTA_BD) * DELTA_BD
+    if dpad != d:
+        m = jnp.pad(m, ((0, 0), (0, dpad - d)))
+    state = jnp.zeros((r_cap, dpad), m.dtype)  # r_cap is pow2 ≥ 16 → tv-aligned
+    out = delta_agg(
+        m, dloc, brows, state, tv=DELTA_TV, be=DELTA_BE, bd=DELTA_BD,
+        interpret=jax.default_backend() != "tpu",
+    )
+    return out[:, :c], out[:, c:d]
+
+
+def _layer_body(
     model: GNNModel,
     p: Params,
     # previous-layer embeddings (old and new views), WITH scratch row [N+1,·]
@@ -43,10 +86,10 @@ def incremental_layer(
     h_prev_new: jax.Array,
     deg_old: jax.Array,  # [N+1]
     deg_new: jax.Array,  # [N+1]
-    # cached layer state (no scratch row)
-    a: jax.Array,  # [N, agg]
-    nct: jax.Array,  # [N, C]
-    h_cur_old: jax.Array,  # [N, d_out]
+    # cached layer state, WITH scratch row [N+1,·]
+    a_ext: jax.Array,
+    nct_ext: jax.Array,
+    h_ext: jax.Array,
     # incremental records
     e_src: jax.Array,
     e_dst: jax.Array,
@@ -69,24 +112,17 @@ def incremental_layer(
     # output rows
     out_rows: jax.Array,
     out_mask: jax.Array,
-    # h-space views of f_rows/out_rows: identical to the state-space arrays
-    # in the in-memory engine, but differ under the compact offloaded engine
-    # where h^{l-1} rows and state rows have separate compactions (§V-B)
     f_rows_h: Optional[jax.Array] = None,
     out_rows_h: Optional[jax.Array] = None,
+    pallas_delta: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Returns (a_new [N,agg], nct_new [N,C], h_cur_new [N,d_out])."""
+    """One layer over scratch-extended state; returns extended arrays."""
     if f_rows_h is None:
         f_rows_h = f_rows
     if out_rows_h is None:
         out_rows_h = out_rows
-    n = a.shape[0]
     r_cap = touch_rows.shape[0]
     f_cap = f_rows.shape[0]
-
-    a_ext = with_scratch(a)
-    nct_ext = with_scratch(nct)
-    h_ext = with_scratch(h_cur_old)
 
     # ---------------- step 1: signed delta messages (Alg.1 l.1-3) -------
     use = e_use_new[:, None]
@@ -106,8 +142,11 @@ def incremental_layer(
     raw = raw * scale
 
     # compact scatter into touched-row space (O(affected), not O(V))
-    d_nct = jax.ops.segment_sum(ctx, e_rowidx, num_segments=r_cap + 1)[:r_cap]
-    d_s = jax.ops.segment_sum(raw, e_rowidx, num_segments=r_cap + 1)[:r_cap]
+    if pallas_delta is not None:
+        d_nct, d_s = _pallas_delta_scatter(ctx, raw, pallas_delta, r_cap)
+    else:
+        d_nct = jax.ops.segment_sum(ctx, e_rowidx, num_segments=r_cap + 1)[:r_cap]
+        d_s = jax.ops.segment_sum(raw, e_rowidx, num_segments=r_cap + 1)[:r_cap]
 
     # ---------------- step 2: cbn⁻¹ → delta-agg → cbn (Alg.1 l.4-6) -----
     nct_old_rows = nct_ext[touch_rows]
@@ -142,4 +181,119 @@ def incremental_layer(
     h_prev_rows = h_prev_new[out_rows_h]
     h_rows = model.update(p, h_prev_rows, a_ext[out_rows])
     h_ext = h_ext.at[out_rows].set(h_rows)
+    return a_ext, nct_ext, h_ext
+
+
+@partial(jax.jit, static_argnums=(0,))
+def incremental_layer(
+    model: GNNModel,
+    p: Params,
+    h_prev_old: jax.Array,  # WITH scratch row [N+1,·]
+    h_prev_new: jax.Array,
+    deg_old: jax.Array,  # [N+1]
+    deg_new: jax.Array,  # [N+1]
+    # cached layer state (no scratch row)
+    a: jax.Array,  # [N, agg]
+    nct: jax.Array,  # [N, C]
+    h_cur_old: jax.Array,  # [N, d_out]
+    e_src: jax.Array,
+    e_dst: jax.Array,
+    e_rowidx: jax.Array,
+    e_sign: jax.Array,
+    e_use_new: jax.Array,
+    e_w: jax.Array,
+    e_t: jax.Array,
+    e_mask: jax.Array,
+    touch_rows: jax.Array,
+    touch_mask: jax.Array,
+    f_rows: jax.Array,
+    f_mask: jax.Array,
+    f_src: jax.Array,
+    f_rowidx: jax.Array,
+    f_w: jax.Array,
+    f_t: jax.Array,
+    f_emask: jax.Array,
+    out_rows: jax.Array,
+    out_mask: jax.Array,
+    # h-space views of f_rows/out_rows: identical to the state-space arrays
+    # in the in-memory engine, but differ under the compact offloaded engine
+    # where h^{l-1} rows and state rows have separate compactions (§V-B)
+    f_rows_h: Optional[jax.Array] = None,
+    out_rows_h: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Seed per-layer API: returns (a_new [N,agg], nct_new [N,C], h_cur_new)."""
+    n = a.shape[0]
+    a_ext, nct_ext, h_ext = _layer_body(
+        model, p, h_prev_old, h_prev_new, deg_old, deg_new,
+        with_scratch(a), with_scratch(nct), with_scratch(h_cur_old),
+        e_src, e_dst, e_rowidx, e_sign, e_use_new, e_w, e_t, e_mask,
+        touch_rows, touch_mask,
+        f_rows, f_mask, f_src, f_rowidx, f_w, f_t, f_emask,
+        out_rows, out_mask,
+        f_rows_h=f_rows_h, out_rows_h=out_rows_h,
+    )
     return a_ext[:n], nct_ext[:n], h_ext[:n]
+
+
+@partial(jax.jit, static_argnums=(0, 1), donate_argnums=(3, 4, 5))
+def fused_stream_step(
+    model: GNNModel,
+    layout: PackedLayout,
+    params: Tuple[Params, ...],
+    h_exts: Tuple[jax.Array, ...],  # L+1 arrays [N+1,·] — donated
+    a_exts: Tuple[jax.Array, ...],  # L arrays [N+1,·] — donated
+    nct_exts: Tuple[jax.Array, ...],  # L arrays [N+1,·] — donated
+    idx: jax.Array,  # int32 packed buffer
+    flt: jax.Array,  # float32 packed buffer (leads with deg_old/deg_new)
+    msk: jax.Array,  # bool packed buffer
+    feat_vals: Optional[jax.Array],  # [feat_cap, d0] when layout.feat_cap
+    pallas: Optional[Tuple[Tuple[jax.Array, jax.Array, jax.Array], ...]],
+) -> Tuple[Tuple[jax.Array, ...], Tuple[jax.Array, ...], Tuple[jax.Array, ...]]:
+    """One fused L-layer incremental step over a packed plan.
+
+    Returns (h_exts', a_exts', nct_exts') — the next batch's cached state,
+    scratch rows re-zeroed.  One trace per PackedLayout; one dispatch per
+    batch."""
+    n = layout.n
+    idx_sl, flt_sl, msk_sl, _ = layout_slices(layout)
+    deg_old = flt[: n + 1]
+    deg_new = flt[n + 1 : 2 * (n + 1)]
+
+    h0_old = h_exts[0]
+    if layout.feat_cap:
+        frows = idx[: layout.feat_cap]
+        fmask = msk[: layout.feat_cap]
+        vals = jnp.where(fmask[:, None], feat_vals.astype(h0_old.dtype), h0_old[frows])
+        h0_new = h0_old.at[frows].set(vals)  # pads → scratch, masked to no-op
+    else:
+        h0_new = h0_old
+
+    h_prev_old, h_prev_new = h0_old, h0_new
+    hs = [h0_new]
+    as_, ncts = [], []
+    for l in range(len(layout.caps)):
+        gi = {name: idx[s] for name, s in idx_sl[l].items()}
+        gf = {name: flt[s] for name, s in flt_sl[l].items()}
+        gm = {name: msk[s] for name, s in msk_sl[l].items()}
+        an, nn, hn = _layer_body(
+            model, params[l], h_prev_old, h_prev_new, deg_old, deg_new,
+            a_exts[l], nct_exts[l], h_exts[l + 1],
+            gi["e_src"], gi["e_dst"], gi["e_rowidx"], gf["e_sign"],
+            gm["e_use_new"], gf["e_w"], gi["e_t"], gm["e_mask"],
+            gi["touch_rows"], gm["touch_mask"],
+            gi["f_rows"], gm["f_mask"], gi["f_src"], gi["f_rowidx"],
+            gf["f_w"], gi["f_t"], gm["f_emask"],
+            gi["out_rows"], gm["out_mask"],
+            pallas_delta=None if pallas is None else pallas[l],
+        )
+        # re-zero the scratch row: padded scatters may have written NaN-prone
+        # values (e.g. ms_cbn_inv(0, 0)) and the state persists across batches
+        an = an.at[n].set(0.0)
+        nn = nn.at[n].set(0.0)
+        hn = hn.at[n].set(0.0)
+        as_.append(an)
+        ncts.append(nn)
+        hs.append(hn)
+        h_prev_old = h_exts[l + 1]
+        h_prev_new = hn
+    return tuple(hs), tuple(as_), tuple(ncts)

@@ -19,6 +19,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Tile sizes shared by the fused-step delta scatter: the host planner
+# (affected.pack_plan) emits the block-CSR schedule with these, and the
+# device step (incremental.fused_stream_step) calls the kernel with the
+# same — they must agree or the BlockSpecs read the wrong tiles.
+DELTA_TV = 8  # state rows per tile
+DELTA_BE = 128  # records per edge block (streams are small; 512 overpads)
+DELTA_BD = 128  # feature lanes per block (Mosaic f32 tiling needs lane dim ≥128)
+
 
 def _kernel(block_rows_ref, dloc_ref, msg_ref, state_ref, out_ref):
     i = pl.program_id(1)

@@ -9,11 +9,19 @@ embeddings in chunks: per chunk it gathers only the source rows NOT already
 staged from the previous chunk (precomputed intersections — the paper's
 mechanism), runs the compact `subset_layer`, and writes results back.
 Transfer accounting exposes the reuse win (benchmarks/fig10).
+
+Chunk execution is pipelined like the streaming engine's plan/execute
+overlap: each chunk's host tables (CSR gather, remap LUT, padding, the
+fresh-row split against the staging set) ship in **one** ``jax.device_put``,
+the compact kernel is dispatched asynchronously, and the *next* chunk's host
+tables are prepared before this chunk's results are pulled back — so host
+prep runs while the device computes.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from functools import partial
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,12 +45,32 @@ class ChunkStats:
         return self.rows_reused / tot if tot else 0.0
 
 
-from functools import partial
-
-
 @partial(jax.jit, static_argnums=(0, 11))
 def _subset_jit(model, p, h_prev, rows, rmask, e_src, e_ridx, e_w, e_t, e_mask, deg, r_cap):
     return subset_layer(model, p, h_prev, rows, rmask, e_src, e_ridx, e_w, e_t, e_mask, deg, r_cap)
+
+
+@dataclasses.dataclass
+class _ChunkPayload:
+    """Host-prepared transfer tables for one chunk (value gathers included)."""
+
+    chunk: np.ndarray
+    allrows: np.ndarray  # rows resident on device after this chunk (sorted)
+    shared_pos: np.ndarray  # positions of reused rows in the previous staging
+    order: np.ndarray  # sort permutation merging [shared | fresh] → allrows
+    h_fresh: np.ndarray  # host-gathered h rows not already staged
+    n_shared: int
+    n_edges: int
+    # compact padded kernel inputs
+    rows_c: np.ndarray
+    rmask: np.ndarray
+    e_src: np.ndarray
+    e_ridx: np.ndarray
+    e_w: np.ndarray
+    e_t: np.ndarray
+    e_mask: np.ndarray
+    deg_c: np.ndarray
+    r_cap: int
 
 
 class ChunkedLayerScheduler:
@@ -52,6 +80,73 @@ class ChunkedLayerScheduler:
         self.reuse = reuse
         self.stats = ChunkStats()
 
+    # ------------------------------------------------------------------ #
+    def _host_payload(
+        self,
+        chunk: np.ndarray,
+        g: CSRGraph,
+        h_prev_host: np.ndarray,
+        deg: np.ndarray,
+        staged_rows: np.ndarray,
+    ) -> _ChunkPayload:
+        """All host work for one chunk: CSR gather, staging intersection,
+        remap, padding, and the fresh-row value gather."""
+        n = g.n
+        srcs, ridx, ws, ts = [], [], [], []
+        for i, v in enumerate(chunk):
+            nb, w, t = g.in_edge_data(int(v))
+            srcs.extend(nb.tolist())
+            ridx.extend([i] * nb.shape[0])
+            ws.extend(w.tolist())
+            ts.extend(t.tolist())
+        need = np.unique(np.concatenate([np.asarray(srcs, np.int64), chunk]))
+        if self.reuse and staged_rows.size:
+            shared = np.intersect1d(need, staged_rows, assume_unique=True)
+            fresh = np.setdiff1d(need, staged_rows, assume_unique=True)
+        else:
+            shared = np.zeros(0, np.int64)
+            fresh = need
+        if shared.size:
+            shared_pos = np.searchsorted(staged_rows, shared)
+            order = np.argsort(np.concatenate([shared, fresh]))
+            allrows = np.concatenate([shared, fresh])[order]
+        else:
+            shared_pos = np.zeros(0, np.int64)
+            order = np.arange(need.shape[0])
+            allrows = need
+
+        lut = np.full(n + 1, allrows.shape[0], np.int32)
+        lut[allrows] = np.arange(allrows.shape[0], dtype=np.int32)
+        r_cap = next_bucket(chunk.shape[0])
+        e_cap = next_bucket(len(srcs))
+
+        def pad(a, cap, fill, dt):
+            out = np.full(cap, fill, dtype=dt)
+            out[: len(a)] = a
+            return out
+
+        return _ChunkPayload(
+            chunk=chunk,
+            allrows=allrows,
+            shared_pos=shared_pos,
+            order=order,
+            h_fresh=h_prev_host[fresh],
+            n_shared=int(shared.size),
+            n_edges=len(srcs),
+            rows_c=pad(lut[chunk], r_cap, allrows.shape[0], np.int32),
+            rmask=pad(np.ones(chunk.shape[0], bool), r_cap, False, bool),
+            e_src=pad(lut[np.asarray(srcs, np.int64)] if srcs else [], e_cap,
+                      allrows.shape[0], np.int32),
+            e_ridx=pad(ridx, e_cap, r_cap, np.int32),
+            e_w=pad(ws, e_cap, 0.0, np.float32),
+            e_t=pad(ts, e_cap, 0, np.int32),
+            e_mask=pad(np.ones(len(srcs), bool), e_cap, False, bool),
+            deg_c=np.concatenate([deg[allrows].astype(np.float32),
+                                  np.zeros(1, np.float32)]),
+            r_cap=r_cap,
+        )
+
+    # ------------------------------------------------------------------ #
     def run_layer(
         self,
         p: Params,
@@ -60,75 +155,45 @@ class ChunkedLayerScheduler:
         rows: np.ndarray,  # destination rows to compute
         deg: np.ndarray,  # [N] float
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Returns (a_rows, nct_rows, h_rows) for `rows`, chunked."""
-        n = g.n
+        """Returns (a_rows, nct_rows, h_rows) for `rows`, chunked + pipelined."""
         outs_a, outs_n, outs_h = [], [], []
-        staged_rows = np.zeros(0, np.int64)  # rows resident on device
-        staged_vals: jnp.ndarray = None  # [len(staged), d]
-        deg_x = jnp.asarray(np.concatenate([deg.astype(np.float32), [0.0]]))
+        chunks = [rows[c0: c0 + self.chunk_size]
+                  for c0 in range(0, rows.shape[0], self.chunk_size)]
+        staged_vals: Optional[jnp.ndarray] = None  # [len(staged), d] on device
 
-        for c0 in range(0, rows.shape[0], self.chunk_size):
-            chunk = rows[c0 : c0 + self.chunk_size]
-            srcs, ridx, ws, ts = [], [], [], []
-            for i, v in enumerate(chunk):
-                nb, w, t = g.in_edge_data(int(v))
-                srcs.extend(nb.tolist())
-                ridx.extend([i] * nb.shape[0])
-                ws.extend(w.tolist())
-                ts.extend(t.tolist())
-            self.stats.edges_processed += len(srcs)
-            # rows needed on device for this chunk
-            need = np.unique(np.concatenate([np.asarray(srcs, np.int64), chunk]))
-            if self.reuse and staged_rows.size:
-                shared = np.intersect1d(need, staged_rows, assume_unique=True)
-                fresh = np.setdiff1d(need, staged_rows, assume_unique=True)
+        payload = (self._host_payload(chunks[0], g, h_prev_host, deg,
+                                      np.zeros(0, np.int64)) if chunks else None)
+        for ci in range(len(chunks)):
+            pl = payload
+            self.stats.edges_processed += pl.n_edges
+            self.stats.rows_reused += pl.n_shared
+            self.stats.rows_transferred += pl.allrows.shape[0] - pl.n_shared
+
+            # one batched H2D transfer per chunk
+            dev = jax.device_put((
+                pl.h_fresh, pl.shared_pos, pl.order, pl.rows_c, pl.rmask,
+                pl.e_src, pl.e_ridx, pl.e_w, pl.e_t, pl.e_mask, pl.deg_c,
+            ))
+            (h_fresh_d, shared_pos_d, order_d, rows_c, rmask,
+             e_src, e_ridx, e_w, e_t, e_mask, deg_c) = dev
+            if pl.n_shared and staged_vals is not None:
+                dev_shared = staged_vals[shared_pos_d]
+                buf = jnp.concatenate([dev_shared, h_fresh_d], axis=0)[order_d]
             else:
-                shared = np.zeros(0, np.int64)
-                fresh = need
-            self.stats.rows_reused += shared.size
-            self.stats.rows_transferred += fresh.size
-            # assemble device buffer: shared rows reused from staging
-            if shared.size and staged_vals is not None:
-                pos = np.searchsorted(staged_rows, shared)
-                dev_shared = staged_vals[jnp.asarray(pos)]
-                dev_fresh = jnp.asarray(h_prev_host[fresh])
-                order = np.argsort(np.concatenate([shared, fresh]))
-                allrows = np.concatenate([shared, fresh])[order]
-                dev = jnp.concatenate([dev_shared, dev_fresh], axis=0)[jnp.asarray(order)]
-            else:
-                allrows = need
-                dev = jnp.asarray(h_prev_host[need])
-            staged_rows, staged_vals = allrows, dev
+                buf = h_fresh_d
+            staged_vals = buf
 
-            # remap into compact space
-            lut = np.full(n + 1, allrows.shape[0], np.int32)
-            lut[allrows] = np.arange(allrows.shape[0], dtype=np.int32)
-            r_cap = next_bucket(chunk.shape[0])
-            e_cap = next_bucket(len(srcs))
-
-            def pad(a, cap, fill, dt):
-                out = np.full(cap, fill, dtype=dt)
-                out[: len(a)] = a
-                return out
-
-            rows_c = pad(lut[chunk], r_cap, allrows.shape[0], np.int32)
-            rmask = pad(np.ones(chunk.shape[0], bool), r_cap, False, bool)
-            e_src = pad(lut[np.asarray(srcs, np.int64)] if srcs else [], e_cap, allrows.shape[0], np.int32)
-            e_ridx = pad(ridx, e_cap, r_cap, np.int32)
-            e_w = pad(ws, e_cap, 0.0, np.float32)
-            e_t = pad(ts, e_cap, 0, np.int32)
-            e_mask = pad(np.ones(len(srcs), bool), e_cap, False, bool)
-            # compact degree table aligned with the staged rows
-            deg_c = jnp.concatenate([deg_x[jnp.asarray(allrows)], jnp.zeros(1)])
-
-            h_dev = jnp.concatenate([dev, jnp.zeros((1, dev.shape[1]), dev.dtype)])
+            h_dev = jnp.concatenate([buf, jnp.zeros((1, buf.shape[1]), buf.dtype)])
             a_c, nct_c, h_c = _subset_jit(
-                self.model, p, h_dev, jnp.asarray(rows_c), jnp.asarray(rmask),
-                jnp.asarray(e_src), jnp.asarray(e_ridx), jnp.asarray(e_w),
-                jnp.asarray(e_t), jnp.asarray(e_mask), deg_c, r_cap,
+                self.model, p, h_dev, rows_c, rmask, e_src, e_ridx, e_w, e_t,
+                e_mask, deg_c, pl.r_cap,
             )
-            k = chunk.shape[0]
-            outs_a.append(np.asarray(a_c)[:k])
+            # prefetch: next chunk's host tables build while device computes
+            if ci + 1 < len(chunks):
+                payload = self._host_payload(chunks[ci + 1], g, h_prev_host,
+                                             deg, pl.allrows)
+            k = pl.chunk.shape[0]
+            outs_a.append(np.asarray(a_c)[:k])  # sync point
             outs_n.append(np.asarray(nct_c)[:k])
             outs_h.append(np.asarray(h_c)[:k])
             self.stats.chunks += 1

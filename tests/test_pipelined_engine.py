@@ -1,0 +1,278 @@
+"""Pipelined-engine invariants: the packed-plan / fused / donated / overlapped
+hot path must be numerically indistinguishable from the unfused seed engine
+(and from full recomputation), and the CI perf gate logic must be sound.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.check_regression import check, read_speedup
+from repro.core import RTECEngine, full_forward, make_model
+from repro.core.affected import (
+    FLT_FIELDS,
+    IDX_FIELDS,
+    MSK_FIELDS,
+    build_plan,
+    layout_slices,
+    pack_plan,
+)
+from repro.graph import make_graph, make_stream
+from repro.graph.generators import random_features
+from repro.graph.streaming import UpdateBatch
+
+TOL = 2e-4
+
+
+def _mk_stream(n=150, num_batches=20, seed=0, feature_dim=None):
+    g = make_graph("powerlaw", n, avg_degree=5, seed=seed, weighted=True)
+    x, _ = random_features(n, 8, seed=seed)
+    kw = dict(feature_dim=feature_dim, feature_frac=0.02) if feature_dim else {}
+    wl = make_stream(g, num_batches=num_batches, batch_edges=8, delete_frac=0.35,
+                     seed=seed + 1, **kw)
+    return x, wl
+
+
+# ---------------------------------------------------------------------- #
+# packed plans
+# ---------------------------------------------------------------------- #
+def test_pack_plan_roundtrip():
+    """Every LayerPlan field must slice back bit-identically out of the
+    three packed buffers via the static offset table."""
+    x, wl = _mk_stream(n=100, num_batches=1, seed=3)
+    model = make_model("gcn")
+    b = wl.batches[0]
+    g_new = wl.base.apply_updates(b.ins_src, b.ins_dst, b.del_src, b.del_dst,
+                                  b.ins_weights, b.ins_etypes)
+    plan = build_plan(model, wl.base, g_new, b, 2)
+    packed = pack_plan(plan, b.feat_vertices, b.feat_values)
+    idx_sl, flt_sl, msk_sl, (ni, nf, nm) = layout_slices(packed.layout)
+    assert packed.idx.shape == (ni,) and packed.flt.shape == (nf,)
+    assert packed.msk.shape == (nm,)
+    n = wl.base.n
+    np.testing.assert_array_equal(packed.flt[: n + 1], plan.deg_old)
+    np.testing.assert_array_equal(packed.flt[n + 1 : 2 * (n + 1)], plan.deg_new)
+    for l, lp in enumerate(plan.layers):
+        for name, _ in IDX_FIELDS:
+            np.testing.assert_array_equal(packed.idx[idx_sl[l][name]], getattr(lp, name))
+        for name, _ in FLT_FIELDS:
+            np.testing.assert_array_equal(packed.flt[flt_sl[l][name]], getattr(lp, name))
+        for name, _ in MSK_FIELDS:
+            np.testing.assert_array_equal(packed.msk[msk_sl[l][name]], getattr(lp, name))
+
+
+def test_packed_layout_is_static_and_cached():
+    x, wl = _mk_stream(n=100, num_batches=1, seed=4)
+    model = make_model("gcn")
+    b = wl.batches[0]
+    g_new = wl.base.apply_updates(b.ins_src, b.ins_dst, b.del_src, b.del_dst,
+                                  b.ins_weights, b.ins_etypes)
+    plan = build_plan(model, wl.base, g_new, b, 2)
+    p1 = pack_plan(plan)
+    p2 = pack_plan(plan)
+    assert p1.layout == p2.layout and hash(p1.layout) == hash(p2.layout)
+    assert layout_slices(p1.layout) is layout_slices(p2.layout)  # lru_cache hit
+
+
+# ---------------------------------------------------------------------- #
+# fused engine ≡ unfused seed engine (the PR's acceptance invariant)
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", ["gcn", "gat"])  # unconstrained + constrained
+def test_fused_equals_unfused_20_batches(name):
+    x, wl = _mk_stream(n=150, num_batches=20, seed=7, feature_dim=8)
+    model = make_model(name)
+    params = model.init_layers(jax.random.PRNGKey(0), [8, 8, 8])
+    fused = RTECEngine(model, params, wl.base, jnp.asarray(x), fused=True)
+    seed_eng = RTECEngine(model, params, wl.base, jnp.asarray(x), fused=False)
+    for b in wl.batches:
+        fused.apply_batch(b)
+        seed_eng.apply_batch(b)
+    assert float(jnp.abs(fused.embeddings - seed_eng.embeddings).max()) < TOL
+    for l in range(2):
+        assert float(jnp.abs(fused.a[l] - seed_eng.a[l]).max()) < TOL
+        assert float(jnp.abs(fused.nct[l] - seed_eng.nct[l]).max()) < TOL
+
+
+def test_fused_matches_full_forward():
+    x, wl = _mk_stream(n=120, num_batches=6, seed=9)
+    model = make_model("sage")
+    params = model.init_layers(jax.random.PRNGKey(1), [8, 8, 8])
+    eng = RTECEngine(model, params, wl.base, jnp.asarray(x))
+    g_cur = wl.base
+    for b in wl.batches:
+        eng.apply_batch(b)
+        g_cur = g_cur.apply_updates(b.ins_src, b.ins_dst, b.del_src, b.del_dst,
+                                    b.ins_weights, b.ins_etypes)
+    ref = full_forward(model, params, jnp.asarray(x), g_cur)
+    assert float(jnp.abs(eng.embeddings - ref[-1].h).max()) < TOL
+
+
+def test_fused_store_h_false():
+    """§V-B recompute mode must survive the fused/donated path."""
+    x, wl = _mk_stream(n=100, num_batches=5, seed=11)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(2), [8, 8, 8])
+    e1 = RTECEngine(model, params, wl.base, jnp.asarray(x), store_h=True)
+    e2 = RTECEngine(model, params, wl.base, jnp.asarray(x), store_h=False)
+    for b in wl.batches:
+        e1.apply_batch(b)
+        e2.apply_batch(b)
+    assert float(jnp.abs(e1.embeddings - e2.embeddings).max()) < TOL
+
+
+def test_fused_empty_batch_noop():
+    g = make_graph("uniform", 60, avg_degree=4, seed=0)
+    x, _ = random_features(60, 6, seed=0)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(0), [6, 6, 6])
+    eng = RTECEngine(model, params, g, jnp.asarray(x))
+    before = np.array(eng.embeddings)
+    empty = UpdateBatch(
+        ins_src=np.zeros(0, np.int64), ins_dst=np.zeros(0, np.int64),
+        del_src=np.zeros(0, np.int64), del_dst=np.zeros(0, np.int64),
+        ins_weights=np.zeros(0, np.float32), ins_etypes=np.zeros(0, np.int32),
+    )
+    stats = eng.apply_batch(empty)
+    assert stats.edges_processed == 0
+    np.testing.assert_allclose(np.array(eng.embeddings), before, atol=1e-6)
+
+
+# ---------------------------------------------------------------------- #
+# Pallas delta-scatter flag (interpret mode on CPU)
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", ["gcn", "gat"])
+def test_pallas_delta_flag_equivalence(name):
+    """The fused step with the host-planned delta_agg kernel schedule must
+    match the XLA segment-sum fallback exactly (CPU: interpret=True)."""
+    x, wl = _mk_stream(n=100, num_batches=4, seed=13)
+    model = make_model(name)
+    params = model.init_layers(jax.random.PRNGKey(3), [8, 8, 8])
+    xla = RTECEngine(model, params, wl.base, jnp.asarray(x), use_pallas_delta=False)
+    pal = RTECEngine(model, params, wl.base, jnp.asarray(x), use_pallas_delta=True)
+    for b in wl.batches:
+        xla.apply_batch(b)
+        pal.apply_batch(b)
+    assert float(jnp.abs(xla.embeddings - pal.embeddings).max()) < TOL
+    for l in range(2):
+        assert float(jnp.abs(xla.a[l] - pal.a[l]).max()) < TOL
+
+
+def test_pallas_schedule_shapes_bucketed():
+    """The block-CSR schedule must come out in pow-2 block-count buckets —
+    data-dependent schedule shapes would force a fused-step recompile on
+    nearly every batch (one trace per PackedLayout is the contract)."""
+    from repro.kernels.delta_agg import DELTA_BE
+
+    x, wl = _mk_stream(n=150, num_batches=8, seed=31)
+    model = make_model("gcn")
+    g_cur = wl.base
+    shapes = set()
+    for b in wl.batches:
+        g_new = g_cur.apply_updates(b.ins_src, b.ins_dst, b.del_src, b.del_dst,
+                                    b.ins_weights, b.ins_etypes)
+        plan = build_plan(model, g_cur, g_new, b, 2)
+        packed = pack_plan(plan, pallas=True)
+        for perm, dloc, brows in packed.pallas:
+            assert perm.shape[0] % DELTA_BE == 0
+            assert perm.shape[0] & (perm.shape[0] - 1) == 0  # power of two
+            assert brows.shape[0] == perm.shape[0] // DELTA_BE
+            assert np.all(np.diff(brows) >= 0)
+            shapes.add((perm.shape[0], packed.layout.caps))
+        g_cur = g_new
+    # pow-2 bucketing keeps the distinct (schedule, layout) shape count low
+    assert len(shapes) <= 2 * len(wl.batches)
+
+
+# ---------------------------------------------------------------------- #
+# plan/execute overlap
+# ---------------------------------------------------------------------- #
+def test_apply_stream_equals_apply_batch():
+    x, wl = _mk_stream(n=150, num_batches=10, seed=17, feature_dim=8)
+    model = make_model("gat")
+    params = model.init_layers(jax.random.PRNGKey(4), [8, 8, 8])
+    seq = RTECEngine(model, params, wl.base, jnp.asarray(x))
+    pipe = RTECEngine(model, params, wl.base, jnp.asarray(x))
+    for b in wl.batches:
+        seq.apply_batch(b)
+    ss = pipe.apply_stream(wl.batches)
+    np.testing.assert_allclose(np.array(seq.embeddings), np.array(pipe.embeddings),
+                               atol=1e-6)
+    assert len(ss.batches) == len(wl.batches)
+    assert ss.wall_s > 0 and ss.plan_s > 0
+    assert all(b.edges_processed >= 0 for b in ss.batches)
+    assert ss.mean_batch_s > 0
+
+
+def test_apply_stream_with_refresh():
+    x, wl = _mk_stream(n=100, num_batches=6, seed=19)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(5), [8, 8, 8])
+    seq = RTECEngine(model, params, wl.base, jnp.asarray(x), refresh_every=3)
+    pipe = RTECEngine(model, params, wl.base, jnp.asarray(x), refresh_every=3)
+    for b in wl.batches:
+        seq.apply_batch(b)
+    pipe.apply_stream(wl.batches)
+    np.testing.assert_allclose(np.array(seq.embeddings), np.array(pipe.embeddings),
+                               atol=1e-6)
+
+
+def test_offload_apply_stream_equivalence():
+    """The offload engine's overlapped stream path (deferred final
+    write-back) must match both its own sequential path and the in-memory
+    engine bit-for-bit."""
+    from repro.serve.offload import OffloadedRTECEngine
+
+    x, wl = _mk_stream(n=120, num_batches=5, seed=29, feature_dim=8)
+    model = make_model("gat")
+    params = model.init_layers(jax.random.PRNGKey(7), [8, 8, 8])
+    mem = RTECEngine(model, params, wl.base, jnp.asarray(x))
+    off_seq = OffloadedRTECEngine(model, params, wl.base, x)
+    off_pipe = OffloadedRTECEngine(model, params, wl.base, x)
+    for b in wl.batches:
+        mem.apply_batch(b)
+        off_seq.apply_batch(b)
+    stats = off_pipe.apply_stream(wl.batches)
+    assert len(stats) == len(wl.batches)
+    np.testing.assert_array_equal(off_seq.embeddings, off_pipe.embeddings)
+    np.testing.assert_allclose(np.asarray(mem.embeddings), off_pipe.embeddings,
+                               atol=1e-6)
+
+
+def test_batch_stats_honest_timing():
+    """apply_batch(block=True) syncs at the boundary: exec_time_s of a real
+    batch must be positive and the stats fields populated."""
+    x, wl = _mk_stream(n=100, num_batches=2, seed=23)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(6), [8, 8, 8])
+    eng = RTECEngine(model, params, wl.base, jnp.asarray(x))
+    st = eng.apply_batch(wl.batches[0])
+    assert st.exec_time_s > 0 and st.plan_time_s > 0 and st.graph_time_s > 0
+    assert st.out_vertices > 0
+
+
+# ---------------------------------------------------------------------- #
+# CI perf gate logic
+# ---------------------------------------------------------------------- #
+def test_check_regression_logic():
+    assert check(1.5, 1.5, floor=1.2, tolerance=0.2) == []
+    assert check(1.3, 1.5, floor=1.2, tolerance=0.2) == []  # within tolerance
+    assert len(check(1.0, 1.5, floor=1.2, tolerance=0.2)) == 2  # floor + rel
+    assert len(check(1.21, 2.0, floor=1.2, tolerance=0.2)) == 1  # rel only
+    assert check(1.3, None, floor=1.2, tolerance=0.2) == []  # no baseline
+
+
+def test_check_regression_reads_artifact(tmp_path):
+    import json
+
+    art = tmp_path / "BENCH_smoke.json"
+    art.write_text(json.dumps({
+        "rows": [
+            "fig7/smoke/gcn/full,5000.0,",
+            "fig7/smoke/gcn/inc,2500.0,",
+            "fig7/smoke/gcn/inc_speedup_vs_full,2500.0,2.00x",
+        ],
+        "wall_s": 1.0,
+    }))
+    assert read_speedup(str(art)) == 2.0
+    with pytest.raises(KeyError):
+        read_speedup(str(art), metric="missing/metric")
