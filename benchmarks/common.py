@@ -73,7 +73,12 @@ def run_stream(engine, wl) -> Tuple[float, Dict[str, float]]:
     for b in wl.batches:
         t0 = time.perf_counter()
         st = engine.apply_batch(b)
-        jax.block_until_ready(engine.embeddings)
+        # sync device-side where the engine exposes its state arrays:
+        # ShardedRTECEngine's .embeddings is a full D2H gather + reshape,
+        # which would charge an O(N·d) host copy to every timed batch
+        sync = (engine._sync_arrays() if hasattr(engine, "_sync_arrays")
+                else engine.embeddings)
+        jax.block_until_ready(sync)
         times.append(time.perf_counter() - t0)
         agg["inc_edges"] += st.inc_edges
         agg["full_edges"] += st.full_edges

@@ -17,28 +17,88 @@ METHODS = ["full", "ns10", "ns5", "uer", "inc"]
 
 
 def smoke():
-    """One tiny cell (gcn × {full, inc}) for the CI benchmark-smoke job —
-    finishes in well under a minute on one CPU (EXPERIMENTS.md §Perf).
-    The ``inc_speedup_vs_full`` row is the blocking perf-gate metric
-    (benchmarks/check_regression.py)."""
+    """Tiny cells for the CI benchmark-smoke job — well under a minute on
+    one CPU (EXPERIMENTS.md §Perf).  Emits the blocking perf-gate metric
+    matrix (benchmarks/check_regression.py): gcn speedup (unconstrained
+    path), gat speedup (§IV-C constrained path), and the offload engine's
+    deterministic transfer-row volume."""
     # 6 batches → the steady-state min is over 5 post-warmup samples, which
-    # keeps the gated ratio stable against one-off scheduler/GC spikes
+    # keeps the gated ratios stable against one-off scheduler/GC spikes
+    _, x, wl = setup("powerlaw", n=300, avg_degree=4.0, num_batches=6, batch_edges=8)
+    for mname in ("gcn", "gat"):
+        model = make_model(mname)
+        params = gnn_params(model, [16, 16])
+        times = {}
+        for method in ("full", "inc"):
+            eng = make_engine(method, model, params, wl.base, x)
+            t, _ = run_stream(eng, wl)
+            times[method] = t
+            emit(f"fig7/smoke/{mname}/{method}", t * 1e6, "")
+        emit(f"fig7/smoke/{mname}/inc_speedup_vs_full", times["inc"] * 1e6,
+             f"{times['full'] / times['inc']:.2f}x")
+        if mname == "gcn":
+            # plan/execute overlap (non-gating).  apply_stream reports one
+            # wall time for the whole overlapped run, so unlike run_stream's
+            # per-batch min a single scheduler/GC spike or mid-stream retrace
+            # is charged to the entire measurement: take the best of a few
+            # fresh-engine repeats instead.
+            t_pipe = min(
+                run_stream_pipelined(
+                    make_engine("inc", model, params, wl.base, x), wl)
+                for _ in range(3)
+            )
+            emit("fig7/smoke/gcn/inc_pipelined", t_pipe * 1e6,
+                 f"{times['full'] / t_pipe:.2f}x")
+    # offload transfer volume: deterministic row counts, tight gate bound
+    from repro.serve.offload import OffloadedRTECEngine
+
+    model = make_model("gcn")
+    params = gnn_params(model, [16, 16])
+    off = OffloadedRTECEngine(model, params, wl.base, x)
+    for b in wl.batches:
+        off.apply_batch(b)
+    emit("fig7/smoke/gcn/offload_transfer_rows",
+         float(off.transfers.total_rows), f"{off.transfers.total_rows}rows")
+
+
+def smoke_sharded(num_shards: int):
+    """Sharded-engine smoke cell (the CI multi-device job's artifact):
+    single-device pipelined engine vs :class:`ShardedRTECEngine` on the same
+    stream, plus the per-batch frontier (halo) row count the psum exchange
+    is bounded to, and the sharded-vs-single max |Δ| as an equivalence
+    telemetry row."""
+    import numpy as np
+
+    from repro.core import ShardedRTECEngine
+
     _, x, wl = setup("powerlaw", n=300, avg_degree=4.0, num_batches=6, batch_edges=8)
     model = make_model("gcn")
     params = gnn_params(model, [16, 16])
-    times = {}
-    for method in ("full", "inc"):
-        eng = make_engine(method, model, params, wl.base, x)
-        t, _ = run_stream(eng, wl)
-        times[method] = t
-        emit(f"fig7/smoke/gcn/{method}", t * 1e6, "")
-    emit("fig7/smoke/gcn/inc_speedup_vs_full", times["inc"] * 1e6,
-         f"{times['full'] / times['inc']:.2f}x")
-    # plan/execute overlap (non-gating: includes any mid-stream retraces)
-    eng = make_engine("inc", model, params, wl.base, x)
-    t_pipe = run_stream_pipelined(eng, wl)
-    emit("fig7/smoke/gcn/inc_pipelined", t_pipe * 1e6,
-         f"{times['full'] / t_pipe:.2f}x")
+    single = make_engine("inc", model, params, wl.base, x)
+    t_single, _ = run_stream(single, wl)
+    emit("fig7/sharded/gcn/single", t_single * 1e6, "")
+    sharded = ShardedRTECEngine(model, params, wl.base, x, num_shards=num_shards)
+    t_sharded, _ = run_stream(sharded, wl)
+    emit(f"fig7/sharded/gcn/sharded{num_shards}", t_sharded * 1e6,
+         f"{t_single / t_sharded:.2f}x")
+    halo_per_batch = sharded.halo_rows_total / len(wl.batches)
+    emit("fig7/sharded/gcn/halo_rows_per_batch", halo_per_batch,
+         f"S={num_shards}")
+    diff = float(np.abs(np.asarray(single.embeddings) - sharded.embeddings).max())
+    emit("fig7/sharded/gcn/max_abs_diff_vs_single", diff, "")
+    # the cell gates correctness + halo volume, not wall time (on CPU CI the
+    # forced "devices" oversubscribe the cores): fail the CI step outright on
+    # divergence (the gcn path is exact) or on halo traffic past the
+    # frontier-only bound (~12 rows/batch measured; 64 leaves headroom for
+    # workload drift while still catching a broadcast-everything regression
+    # against the 300-vertex graph)
+    failures = []
+    if diff != 0.0:
+        failures.append(f"sharded-vs-single max|diff|={diff:g} (expected 0)")
+    if halo_per_batch > 64:
+        failures.append(f"halo_rows_per_batch={halo_per_batch:.1f} exceeds 64")
+    if failures:
+        raise SystemExit("sharded smoke gate FAILED: " + "; ".join(failures))
 
 
 def run(quick: bool = True):

@@ -7,12 +7,14 @@ from repro.core.full import LayerState, full_forward
 from repro.core.models import ALL_MODELS, make_model
 from repro.core.odec import odec_query
 from repro.core.operators import GNNModel
+from repro.core.sharded_engine import ShardedRTECEngine
 
 __all__ = [
     "GNNModel",
     "make_model",
     "ALL_MODELS",
     "RTECEngine",
+    "ShardedRTECEngine",
     "BatchStats",
     "StreamStats",
     "full_forward",

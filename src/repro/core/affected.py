@@ -321,6 +321,36 @@ def build_plan(
 
 
 # ====================================================================== #
+# Capacity hysteresis — high-water-mark pow-2 buckets (retrace damping)
+# ====================================================================== #
+class BucketHysteresis:
+    """Per-field high-water-mark floors over :func:`next_bucket` capacities.
+
+    Pow-2 bucketing alone still retraces whenever a stream's per-batch work
+    oscillates across a bucket boundary (the mid-stream compile visible in
+    ``BENCH_smoke`` batch 2): a large batch grows the bucket, the next small
+    batch shrinks it back, and both shapes compile.  Holding every field at
+    its stream-high-water bucket makes capacities monotone, so the number of
+    distinct layouts over a stream is bounded by the number of *growth*
+    events only.  One instance per engine (capacities are stream state, not
+    plan state)."""
+
+    def __init__(self) -> None:
+        self._caps: Dict[object, int] = {}
+
+    def bucket(self, key, size: int, minimum: int = 16) -> int:
+        cap = max(next_bucket(size, minimum=minimum), self._caps.get(key, 0))
+        self._caps[key] = cap
+        return cap
+
+
+def _cap_of(hwm: Optional[BucketHysteresis], key, size: int, minimum: int = 16) -> int:
+    if hwm is None:
+        return next_bucket(size, minimum=minimum)
+    return hwm.bucket(key, size, minimum=minimum)
+
+
+# ====================================================================== #
 # Packed plans — pipelined-engine transfer format (paper §V co-processing)
 # ====================================================================== #
 # Per-field capacity kind within a layer's cap tuple (e, r, f, fe, o).
@@ -402,7 +432,13 @@ class PackedPlan:
     n_out_rows: int
 
 
-def _pallas_delta_layout(lp: LayerPlan, tv: int, be: int):
+def _pallas_delta_layout(
+    lp: LayerPlan,
+    tv: int,
+    be: int,
+    hwm: Optional[BucketHysteresis] = None,
+    key: object = None,
+):
     """Host side of the co-processed Pallas delta scatter: sort this layer's
     incremental records by touched-row tile and emit the block-aligned CSR
     schedule (gather perm composed back into the *unsorted* record order).
@@ -420,7 +456,7 @@ def _pallas_delta_layout(lp: LayerPlan, tv: int, be: int):
     order = np.argsort(dstk, kind="stable")  # -1 (masked) sorts first; dropped
     perm_s, dloc, brows, e_pad = prepare_block_csr(dstk[order], r_cap, tv=tv, be=be)
     perm = np.where(perm_s >= 0, order[np.clip(perm_s, 0, None)], -1).astype(np.int32)
-    cap = next_bucket(e_pad, minimum=be)  # pow2 ≥ be → stays a multiple of be
+    cap = _cap_of(hwm, key, e_pad, minimum=be)  # pow2 ≥ be → stays a multiple of be
     if cap != e_pad:
         pad = cap - e_pad
         perm = np.concatenate([perm, np.full(pad, -1, np.int32)])
@@ -431,25 +467,50 @@ def _pallas_delta_layout(lp: LayerPlan, tv: int, be: int):
     return perm, dloc, brows
 
 
+def _idx_pad_value(name: str, n: int, caps: Tuple[int, ...]) -> int:
+    """Pad value a hysteresis-grown idx field must be extended with (matches
+    the :func:`build_plan` padding conventions)."""
+    if name == "e_rowidx":
+        return caps[1]
+    if name == "f_rowidx":
+        return caps[2]
+    if name in ("e_t", "f_t"):
+        return 0
+    return n
+
+
 def pack_plan(
     plan: BatchPlan,
     feat_vertices: Optional[np.ndarray] = None,
     feat_values: Optional[np.ndarray] = None,
     pallas: bool = False,
+    hwm: Optional[BucketHysteresis] = None,
 ) -> PackedPlan:
-    """Flatten a :class:`BatchPlan` into the packed transfer format."""
+    """Flatten a :class:`BatchPlan` into the packed transfer format.
+
+    With ``hwm`` every capacity is padded up to the stream's high-water-mark
+    bucket (:class:`BucketHysteresis`), so shrinking batches reuse the
+    previous layout instead of retracing the fused step mid-stream."""
     n = plan.deg_old.shape[0] - 1
     if feat_vertices is not None and np.asarray(feat_vertices).size:
         fr = np.asarray(feat_vertices, np.int64)
         fv = np.asarray(feat_values, np.float32)
-        feat_cap = next_bucket(fr.shape[0])
+        feat_cap = _cap_of(hwm, "feat", fr.shape[0])
     else:
         fr = np.zeros(0, np.int64)
         fv = None
         feat_cap = 0
-    layout = PackedLayout(
-        n=n, feat_cap=feat_cap, caps=tuple(lp.shape_key for lp in plan.layers)
+    caps = tuple(
+        (
+            _cap_of(hwm, (l, 0), lp.e_src.shape[0]),
+            _cap_of(hwm, (l, 1), lp.touch_rows.shape[0]),
+            _cap_of(hwm, (l, 2), lp.f_rows.shape[0]),
+            _cap_of(hwm, (l, 3), lp.f_src.shape[0]),
+            _cap_of(hwm, (l, 4), lp.out_rows.shape[0]),
+        )
+        for l, lp in enumerate(plan.layers)
     )
+    layout = PackedLayout(n=n, feat_cap=feat_cap, caps=caps)
     idx_sl, flt_sl, msk_sl, (idx_len, flt_len, msk_len) = layout_slices(layout)
 
     idx = np.full(idx_len, n, np.int32)  # default pad → scratch row
@@ -465,18 +526,26 @@ def pack_plan(
         feat_vals[: fv.shape[0]] = fv
     for l, lp in enumerate(plan.layers):
         for name, _ in IDX_FIELDS:
-            idx[idx_sl[l][name]] = getattr(lp, name)
+            sl, arr = idx_sl[l][name], getattr(lp, name)
+            idx[sl.start : sl.start + arr.shape[0]] = arr
+            if sl.start + arr.shape[0] < sl.stop:  # hysteresis-grown tail
+                idx[sl.start + arr.shape[0] : sl.stop] = _idx_pad_value(
+                    name, n, layout.caps[l]
+                )
         for name, _ in FLT_FIELDS:
-            flt[flt_sl[l][name]] = getattr(lp, name)
+            sl, arr = flt_sl[l][name], getattr(lp, name)
+            flt[sl.start : sl.start + arr.shape[0]] = arr  # tail stays 0.0
         for name, _ in MSK_FIELDS:
-            msk[msk_sl[l][name]] = getattr(lp, name)
+            sl, arr = msk_sl[l][name], getattr(lp, name)
+            msk[sl.start : sl.start + arr.shape[0]] = arr  # tail stays False
 
     pallas_sched = None
     if pallas:
         from repro.kernels.delta_agg import DELTA_BE, DELTA_TV
 
         pallas_sched = tuple(
-            _pallas_delta_layout(lp, DELTA_TV, DELTA_BE) for lp in plan.layers
+            _pallas_delta_layout(lp, DELTA_TV, DELTA_BE, hwm=hwm, key=(l, "pallas"))
+            for l, lp in enumerate(plan.layers)
         )
     return PackedPlan(
         layout=layout,
@@ -491,6 +560,298 @@ def pack_plan(
     )
 
 
+# ====================================================================== #
+# Sharded plans — row-partitioned transfer format for the multi-device
+# streaming engine (paper §V co-processing scaled over the repro.dist mesh)
+# ====================================================================== #
+# Every global row r < n is owned by exactly one shard: owner(r) = r // rows_per
+# with rows_per = ceil(n / n_shards).  All *destination* work (touched rows,
+# constrained full-recompute rows, output rows — and therefore every scatter)
+# is local to the owning shard; only previous-layer *source* embeddings can be
+# remote.  Per layer the plan carries one replicated ``halo_rows`` list — the
+# union over shards of source rows each shard needs but does not own — and
+# every h-space index is remapped into the per-shard **workspace**
+#
+#     [ halo rows (exchanged, 0..halo_cap) | local block (rows_per + 1) ]
+#
+# so the device step gathers owned rows locally and remote rows from the
+# exchanged halo buffer.  For unconstrained models the dest-independent
+# halo-skip (EXPERIMENTS.md §Perf) already removes the h[dst] gather, and dst
+# rows are owned anyway, so the collective is bounded to frontier source rows
+# only.  Degree lookups ship as per-shard workspace-space tables (host knows
+# all degrees at plan time), so no global [N+1] array ever reaches a device.
+
+# Per-layer cap tuple kinds: (e, r, f, fe, o, halo, ws) with
+# ws = halo + rows_per + 1 (the workspace length, scratch slot last).
+SH_IDX_FIELDS: Tuple[Tuple[str, int], ...] = (
+    ("e_src", 0), ("e_dst", 0), ("e_rowidx", 0), ("e_t", 0),
+    ("touch_rows", 1), ("f_rows", 2), ("f_src", 3), ("f_rowidx", 3),
+    ("f_t", 3), ("out_rows", 4), ("f_rows_h", 2), ("out_rows_h", 4),
+)
+SH_FLT_FIELDS: Tuple[Tuple[str, int], ...] = (
+    ("e_sign", 0), ("e_w", 0), ("f_w", 3), ("deg_old", 6), ("deg_new", 6),
+)
+SH_MSK_FIELDS: Tuple[Tuple[str, int], ...] = MSK_FIELDS
+
+
+def shard_rows(n: int, n_shards: int) -> int:
+    """Rows per shard (block row-partition of the n live vertices)."""
+    return -(-n // n_shards)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedLayout:
+    """Static (hashable) shape descriptor of a sharded plan — one distinct
+    layout → one trace of the shard_map'd device step."""
+
+    n: int
+    n_shards: int
+    rows_per: int
+    feat_cap: int  # 0 → no feature updates (static branch)
+    caps: Tuple[Tuple[int, int, int, int, int, int, int], ...]
+
+
+@lru_cache(maxsize=None)
+def sharded_layout_slices(layout: ShardedLayout):
+    """Static offset tables for the sharded buffers.
+
+    Returns (idx_sl, flt_sl, msk_sl, halo_sl, totals): per-layer field →
+    slice dicts into one shard's row of the stacked (idx, flt, msk) buffers,
+    per-layer halo-row slices into the replicated idx buffer, and the buffer
+    lengths (idx_len, flt_len, msk_len, rep_len)."""
+    idx_off = flt_off = msk_off = 0
+    rep_off = layout.feat_cap  # idx_rep = [feat rows | per-layer halo rows]
+    idx_sl, flt_sl, msk_sl, halo_sl = [], [], [], []
+    for caps in layout.caps:
+        di: Dict[str, slice] = {}
+        for name, kind in SH_IDX_FIELDS:
+            di[name] = slice(idx_off, idx_off + caps[kind])
+            idx_off += caps[kind]
+        df: Dict[str, slice] = {}
+        for name, kind in SH_FLT_FIELDS:
+            df[name] = slice(flt_off, flt_off + caps[kind])
+            flt_off += caps[kind]
+        dm: Dict[str, slice] = {}
+        for name, kind in SH_MSK_FIELDS:
+            dm[name] = slice(msk_off, msk_off + caps[kind])
+            msk_off += caps[kind]
+        halo_sl.append(slice(rep_off, rep_off + caps[5]))
+        rep_off += caps[5]
+        idx_sl.append(di)
+        flt_sl.append(df)
+        msk_sl.append(dm)
+    return (
+        tuple(idx_sl), tuple(flt_sl), tuple(msk_sl), tuple(halo_sl),
+        (idx_off, flt_off, msk_off, rep_off),
+    )
+
+
+@dataclasses.dataclass
+class ShardedPlan:
+    """A batch plan partitioned per shard and packed for one sharded
+    ``device_put``: stacked ``[n_shards, ·]`` buffers (each device receives
+    only its slice — only the rows it touches) plus small replicated side
+    tables (halo row lists, feature rows)."""
+
+    layout: ShardedLayout
+    idx_sh: np.ndarray  # int32  [S, idx_len] per-shard index fields
+    flt_sh: np.ndarray  # float32 [S, flt_len] (incl. per-layer ws deg tables)
+    msk_sh: np.ndarray  # bool   [S, msk_len]
+    idx_rep: np.ndarray  # int32 [rep_len] replicated: feat rows | halo rows
+    msk_rep: np.ndarray  # bool  [feat_cap] feature-row mask
+    feat_vals: Optional[np.ndarray]  # float32 [feat_cap, d0] when feat_cap > 0
+    # accounting
+    n_inc_edges: int
+    n_full_edges: int
+    n_out_rows: int
+    n_halo_rows: int  # live frontier rows exchanged, summed over layers
+
+
+def shard_plan(
+    plan: BatchPlan,
+    n_shards: int,
+    feat_vertices: Optional[np.ndarray] = None,
+    feat_values: Optional[np.ndarray] = None,
+    hwm: Optional[BucketHysteresis] = None,
+) -> ShardedPlan:
+    """Partition a :class:`BatchPlan` row-wise over ``n_shards`` and pack it
+    into the sharded transfer format (see module section comment)."""
+    n = plan.deg_old.shape[0] - 1
+    rows_per = shard_rows(n, n_shards)
+    S = n_shards
+
+    if feat_vertices is not None and np.asarray(feat_vertices).size:
+        fr = np.asarray(feat_vertices, np.int64)
+        fv = np.asarray(feat_values, np.float32)
+        feat_cap = _cap_of(hwm, "feat", fr.shape[0])
+    else:
+        fr = np.zeros(0, np.int64)
+        fv = None
+        feat_cap = 0
+
+    # ---- pass 1: per-layer live partitions + capacities ----
+    layers = []
+    caps_all = []
+    halo_total = 0
+    for l, lp in enumerate(plan.layers):
+        live = lp.e_mask
+        es = lp.e_src[live].astype(np.int64)
+        ed = lp.e_dst[live].astype(np.int64)
+        d_own = ed // rows_per
+        tr = lp.touch_rows[lp.touch_mask].astype(np.int64)
+        tr_own = tr // rows_per
+        f_rows = lp.f_rows[lp.f_mask].astype(np.int64)
+        f_own = f_rows // rows_per
+        fe_live = lp.f_emask
+        f_cap_old = lp.f_rows.shape[0]
+        fe_rowg = lp.f_rows[np.minimum(lp.f_rowidx, f_cap_old - 1)].astype(np.int64)
+        fs = lp.f_src[fe_live].astype(np.int64)
+        fe_row = fe_rowg[fe_live]
+        fe_own = fe_row // rows_per
+        outr = lp.out_rows[lp.out_mask].astype(np.int64)
+        o_own = outr // rows_per
+
+        # frontier rows: sources some consuming shard does not own
+        halo_rows = np.unique(np.concatenate([
+            es[es // rows_per != d_own], fs[fs // rows_per != fe_own],
+        ]))
+        halo_total += int(halo_rows.shape[0])
+        halo_cap = _cap_of(hwm, (l, "halo"), halo_rows.shape[0])
+
+        def per_shard_max(owners) -> int:
+            return int(np.bincount(owners, minlength=S).max()) if owners.size else 0
+
+        e_cap = _cap_of(hwm, (l, 0), per_shard_max(d_own))
+        r_cap = _cap_of(hwm, (l, 1), per_shard_max(tr_own))
+        f_cap = _cap_of(hwm, (l, 2), per_shard_max(f_own))
+        fe_cap = _cap_of(hwm, (l, 3), per_shard_max(fe_own))
+        o_cap = _cap_of(hwm, (l, 4), per_shard_max(o_own))
+        ws = halo_cap + rows_per + 1
+        caps_all.append((e_cap, r_cap, f_cap, fe_cap, o_cap, halo_cap, ws))
+        layers.append(dict(
+            es=es, ed=ed, d_own=d_own,
+            e_sign=lp.e_sign[live], e_use_new=lp.e_use_new[live],
+            e_w=lp.e_w[live], e_t=lp.e_t[live],
+            tr=tr, tr_own=tr_own, f_rows=f_rows, f_own=f_own,
+            fs=fs, fe_row=fe_row, fe_own=fe_own,
+            f_w=lp.f_w[fe_live], f_t=lp.f_t[fe_live],
+            outr=outr, o_own=o_own, halo_rows=halo_rows,
+        ))
+
+    layout = ShardedLayout(
+        n=n, n_shards=S, rows_per=rows_per, feat_cap=feat_cap,
+        caps=tuple(caps_all),
+    )
+    idx_sl, flt_sl, msk_sl, halo_sl, (idx_len, flt_len, msk_len, rep_len) = (
+        sharded_layout_slices(layout)
+    )
+
+    # ---- pass 2: fill the stacked + replicated buffers ----
+    idx_sh = np.zeros((S, idx_len), np.int32)
+    flt_sh = np.zeros((S, flt_len), np.float32)
+    msk_sh = np.zeros((S, msk_len), bool)
+    idx_rep = np.full(rep_len, -1, np.int32)
+    msk_rep = np.zeros(feat_cap, bool)
+    feat_vals = None
+    if feat_cap:
+        idx_rep[: fr.shape[0]] = fr
+        msk_rep[: fr.shape[0]] = True
+        feat_vals = np.zeros((feat_cap, fv.shape[1]), np.float32)
+        feat_vals[: fv.shape[0]] = fv
+
+    def fill_idx(s: int, sl: slice, vals: np.ndarray, pad: int) -> None:
+        idx_sh[s, sl] = pad
+        idx_sh[s, sl.start : sl.start + vals.shape[0]] = vals
+
+    for l, (art, caps) in enumerate(zip(layers, layout.caps)):
+        e_cap, r_cap, f_cap, fe_cap, o_cap, halo_cap, ws = caps
+        ws_scratch = halo_cap + rows_per
+        halo_rows = art["halo_rows"]
+        idx_rep[halo_sl[l].start : halo_sl[l].start + halo_rows.shape[0]] = halo_rows
+
+        deg_halo_old = np.zeros(halo_cap, np.float32)
+        deg_halo_new = np.zeros(halo_cap, np.float32)
+        deg_halo_old[: halo_rows.shape[0]] = plan.deg_old[halo_rows]
+        deg_halo_new[: halo_rows.shape[0]] = plan.deg_new[halo_rows]
+
+        for s in range(S):
+            lo = s * rows_per
+
+            def ws_of(rows: np.ndarray) -> np.ndarray:
+                own = (rows >= lo) & (rows < lo + rows_per)
+                hpos = np.searchsorted(halo_rows, rows)
+                hpos = np.clip(hpos, 0, max(0, halo_rows.shape[0] - 1))
+                return np.where(own, halo_cap + (rows - lo), hpos).astype(np.int32)
+
+            sel = art["d_own"] == s
+            ne = int(sel.sum())
+            ed_s = art["ed"][sel]
+            tr_s = art["tr"][art["tr_own"] == s]
+            fr_s = art["f_rows"][art["f_own"] == s]
+            fe_sel = art["fe_own"] == s
+            fs_s = art["fs"][fe_sel]
+            out_s = art["outr"][art["o_own"] == s]
+
+            di, df, dm = idx_sl[l], flt_sl[l], msk_sl[l]
+            fill_idx(s, di["e_src"], ws_of(art["es"][sel]), ws_scratch)
+            fill_idx(s, di["e_dst"], ws_of(ed_s), ws_scratch)
+            fill_idx(s, di["e_rowidx"],
+                     np.searchsorted(tr_s, ed_s).astype(np.int32), r_cap)
+            fill_idx(s, di["e_t"], art["e_t"][sel], 0)
+            fill_idx(s, di["touch_rows"], (tr_s - lo).astype(np.int32), rows_per)
+            fill_idx(s, di["f_rows"], (fr_s - lo).astype(np.int32), rows_per)
+            fill_idx(s, di["f_src"], ws_of(fs_s), ws_scratch)
+            fill_idx(s, di["f_rowidx"],
+                     np.searchsorted(fr_s, art["fe_row"][fe_sel]).astype(np.int32),
+                     f_cap)
+            fill_idx(s, di["f_t"], art["f_t"][fe_sel], 0)
+            fill_idx(s, di["out_rows"], (out_s - lo).astype(np.int32), rows_per)
+            fill_idx(s, di["f_rows_h"], ws_of(fr_s), ws_scratch)
+            fill_idx(s, di["out_rows_h"], ws_of(out_s), ws_scratch)
+
+            flt_sh[s, df["e_sign"].start : df["e_sign"].start + ne] = (
+                art["e_sign"][sel]
+            )
+            flt_sh[s, df["e_w"].start : df["e_w"].start + ne] = (
+                art["e_w"][sel]
+            )
+            flt_sh[s, df["f_w"].start : df["f_w"].start + fs_s.shape[0]] = (
+                art["f_w"][fe_sel]
+            )
+            li = np.arange(lo, lo + rows_per)
+            dl_old = np.where(li < n, plan.deg_old[np.minimum(li, n)], 0.0)
+            dl_new = np.where(li < n, plan.deg_new[np.minimum(li, n)], 0.0)
+            flt_sh[s, df["deg_old"]] = np.concatenate(
+                [deg_halo_old, dl_old, [0.0]]).astype(np.float32)
+            flt_sh[s, df["deg_new"]] = np.concatenate(
+                [deg_halo_new, dl_new, [0.0]]).astype(np.float32)
+
+            nr, nf, nfe, no = (tr_s.shape[0], fr_s.shape[0],
+                               fs_s.shape[0], out_s.shape[0])
+            msk_sh[s, dm["e_mask"].start : dm["e_mask"].start + ne] = True
+            msk_sh[s, dm["e_use_new"].start : dm["e_use_new"].start + ne] = (
+                art["e_use_new"][sel]
+            )
+            msk_sh[s, dm["touch_mask"].start : dm["touch_mask"].start + nr] = True
+            msk_sh[s, dm["f_mask"].start : dm["f_mask"].start + nf] = True
+            msk_sh[s, dm["f_emask"].start : dm["f_emask"].start + nfe] = True
+            msk_sh[s, dm["out_mask"].start : dm["out_mask"].start + no] = True
+
+    return ShardedPlan(
+        layout=layout,
+        idx_sh=idx_sh,
+        flt_sh=flt_sh,
+        msk_sh=msk_sh,
+        idx_rep=idx_rep,
+        msk_rep=msk_rep,
+        feat_vals=feat_vals,
+        n_inc_edges=plan.total_inc_edges(),
+        n_full_edges=plan.total_full_edges(),
+        n_out_rows=plan.total_vertices(),
+        n_halo_rows=halo_total,
+    )
+
+
 def build_packed_plan(
     model: GNNModel,
     g_old: CSRGraph,
@@ -498,7 +859,9 @@ def build_packed_plan(
     batch: UpdateBatch,
     num_layers: int,
     pallas: bool = False,
+    hwm: Optional[BucketHysteresis] = None,
 ) -> PackedPlan:
     """Alg.-4 planning straight into the packed transfer format."""
     plan = build_plan(model, g_old, g_new, batch, num_layers)
-    return pack_plan(plan, batch.feat_vertices, batch.feat_values, pallas=pallas)
+    return pack_plan(plan, batch.feat_vertices, batch.feat_values, pallas=pallas,
+                     hwm=hwm)

@@ -35,7 +35,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.affected import BatchPlan, PackedPlan, build_packed_plan, build_plan
+from repro.core.affected import (
+    BatchPlan,
+    BucketHysteresis,
+    PackedPlan,
+    build_packed_plan,
+    build_plan,
+)
 from repro.core.full import full_forward
 from repro.core.incremental import fused_stream_step, incremental_layer, with_scratch
 from repro.core.operators import GNNModel, Params
@@ -95,6 +101,9 @@ class RTECEngine:
         self.refresh_every = refresh_every
         self.fused = fused
         self.use_pallas_delta = use_pallas_delta
+        # high-water-mark capacity buckets: shrinking batches reuse the
+        # previous PackedLayout instead of retracing the fused step
+        self._hwm = BucketHysteresis()
         self._batches_seen = 0
         self._upd = jax.jit(model.update)
         self._init_state(jnp.asarray(x))
@@ -190,7 +199,7 @@ class RTECEngine:
         if self.fused:
             packed = build_packed_plan(
                 self.model, self.graph, g_new, batch, self.L,
-                pallas=self.use_pallas_delta,
+                pallas=self.use_pallas_delta, hwm=self._hwm,
             )
             t2 = time.perf_counter()
             self._dispatch_packed(packed)
@@ -269,7 +278,8 @@ class RTECEngine:
             batch.ins_weights, batch.ins_etypes,
         )
         packed = build_packed_plan(
-            self.model, self.graph, g_new, batch, self.L, pallas=self.use_pallas_delta
+            self.model, self.graph, g_new, batch, self.L,
+            pallas=self.use_pallas_delta, hwm=self._hwm,
         )
         return g_new, packed
 

@@ -35,13 +35,21 @@ packed plan; XLA ``segment_sum`` is the fallback).
 """
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
-from repro.core.affected import PackedLayout, layout_slices
+from repro.core.affected import (
+    PackedLayout,
+    ShardedLayout,
+    layout_slices,
+    sharded_layout_slices,
+)
 from repro.core.full import edge_messages, subset_layer
 from repro.core.operators import GNNModel, Params
 
@@ -297,3 +305,119 @@ def fused_stream_step(
         h_prev_old = h_exts[l + 1]
         h_prev_new = hn
     return tuple(hs), tuple(as_), tuple(ncts)
+
+
+# ====================================================================== #
+# Sharded fused step — the multi-device analogue of fused_stream_step
+# ====================================================================== #
+@lru_cache(maxsize=None)
+def sharded_step_fn(model: GNNModel, mesh, axis: str):
+    """Build (and cache per (model, mesh)) the jitted shard_map'd L-layer
+    step over row-sharded state.
+
+    State lives as stacked ``[S, rows_per + 1, ·]`` blocks (one scratch row
+    per shard, donated).  Per layer each shard
+
+      1. serves its slice of the replicated frontier row list out of its
+         local previous-layer block and ``lax.psum``s the ``[halo_cap, 2·d]``
+         buffer — the only collective, bounded to frontier rows (remote
+         sources; the dest-independent halo-skip keeps destinations out of
+         it entirely for unconstrained models);
+      2. concatenates ``[halo | local]`` into the workspace the plan's
+         remapped indices address and runs the unmodified
+         :func:`_layer_body` — all scatters are owner-local by construction
+         (destination rows are never remote);
+      3. re-zeroes its local scratch row.
+
+    One trace per :class:`~repro.core.affected.ShardedLayout`; plan-side
+    capacity hysteresis keeps the layout count bounded over a stream."""
+
+    @partial(jax.jit, static_argnums=(0,), donate_argnums=(2, 3, 4))
+    def step(
+        slayout: ShardedLayout,
+        params: Tuple[Params, ...],
+        h_blocks: Tuple[jax.Array, ...],  # L+1 arrays [S, rows_per+1, ·]
+        a_blocks: Tuple[jax.Array, ...],  # L arrays [S, rows_per+1, ·]
+        nct_blocks: Tuple[jax.Array, ...],  # L arrays [S, rows_per+1, ·]
+        idx_sh: jax.Array,  # int32  [S, idx_len]
+        flt_sh: jax.Array,  # float32 [S, flt_len]
+        msk_sh: jax.Array,  # bool   [S, msk_len]
+        idx_rep: jax.Array,  # int32 [rep_len] replicated
+        msk_rep: jax.Array,  # bool  [feat_cap] replicated
+        feat_vals: jax.Array,  # [feat_cap, d0] replicated ([0, d0] if unused)
+    ):
+        idx_sl, flt_sl, msk_sl, halo_sl, _ = sharded_layout_slices(slayout)
+        rows_per = slayout.rows_per
+
+        def local(prm, h_bl, a_bl, nct_bl, idx_s, flt_s, msk_s, idx_r, msk_r, fvals):
+            h_bl = [h[0] for h in h_bl]  # shard-local views [rows_per+1, ·]
+            a_bl = [a[0] for a in a_bl]
+            nct_bl = [c[0] for c in nct_bl]
+            idx_s, flt_s, msk_s = idx_s[0], flt_s[0], msk_s[0]
+            lo = lax.axis_index(axis) * rows_per
+
+            h0_old = h_bl[0]
+            if slayout.feat_cap:
+                fr = idx_r[: slayout.feat_cap]
+                fm = msk_r & (fr >= lo) & (fr < lo + rows_per)
+                li = jnp.where(fm, fr - lo, rows_per)  # not owned → scratch
+                vals = jnp.where(fm[:, None], fvals.astype(h0_old.dtype), h0_old[li])
+                h0_new = h0_old.at[li].set(vals)
+            else:
+                h0_new = h0_old
+
+            h_prev_old, h_prev_new = h0_old, h0_new
+            hs = [h0_new]
+            as_, ncts = [], []
+            for l in range(len(slayout.caps)):
+                # ---- halo exchange: frontier source rows only ----
+                halo_rows = idx_r[halo_sl[l]]  # global ids, pad → -1
+                own = (halo_rows >= lo) & (halo_rows < lo + rows_per)
+                pos = jnp.where(own, halo_rows - lo, rows_per)
+                cat = jnp.concatenate([h_prev_old[pos], h_prev_new[pos]], axis=1)
+                halo = lax.psum(jnp.where(own[:, None], cat, 0.0), axis)
+                d_prev = h_prev_old.shape[1]
+                ws_old = jnp.concatenate([halo[:, :d_prev], h_prev_old], axis=0)
+                ws_new = jnp.concatenate([halo[:, d_prev:], h_prev_new], axis=0)
+
+                gi = {k: idx_s[s] for k, s in idx_sl[l].items()}
+                gf = {k: flt_s[s] for k, s in flt_sl[l].items()}
+                gm = {k: msk_s[s] for k, s in msk_sl[l].items()}
+                an, nn, hn = _layer_body(
+                    model, prm[l], ws_old, ws_new, gf["deg_old"], gf["deg_new"],
+                    a_bl[l], nct_bl[l], h_bl[l + 1],
+                    gi["e_src"], gi["e_dst"], gi["e_rowidx"], gf["e_sign"],
+                    gm["e_use_new"], gf["e_w"], gi["e_t"], gm["e_mask"],
+                    gi["touch_rows"], gm["touch_mask"],
+                    gi["f_rows"], gm["f_mask"], gi["f_src"], gi["f_rowidx"],
+                    gf["f_w"], gi["f_t"], gm["f_emask"],
+                    gi["out_rows"], gm["out_mask"],
+                    f_rows_h=gi["f_rows_h"], out_rows_h=gi["out_rows_h"],
+                )
+                an = an.at[rows_per].set(0.0)  # re-zero local scratch row
+                nn = nn.at[rows_per].set(0.0)
+                hn = hn.at[rows_per].set(0.0)
+                as_.append(an)
+                ncts.append(nn)
+                hs.append(hn)
+                h_prev_old = h_bl[l + 1]
+                h_prev_new = hn
+            return (
+                tuple(h[None] for h in hs),
+                tuple(a[None] for a in as_),
+                tuple(c[None] for c in ncts),
+            )
+
+        sh = P(axis)  # leading shard dim
+        rep = P()
+        fn = shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(rep, sh, sh, sh, sh, sh, sh, rep, rep, rep),
+            out_specs=(sh, sh, sh),
+            check_rep=False,
+        )
+        return fn(params, h_blocks, a_blocks, nct_blocks, idx_sh, flt_sh, msk_sh,
+                  idx_rep, msk_rep, feat_vals)
+
+    return step

@@ -46,6 +46,8 @@ from repro.dist.sharding import (
     cache_specs,
     opt_state_specs,
     spec_for_axes,
+    stream_mesh,
+    stream_state_specs,
     tree_shardings,
 )
 
@@ -60,5 +62,7 @@ __all__ = [
     "pipeline_apply",
     "sequential_reference",
     "spec_for_axes",
+    "stream_mesh",
+    "stream_state_specs",
     "tree_shardings",
 ]

@@ -62,6 +62,9 @@ class ShardingConfig:
             "stack": None,
             # experts are local to each TP group (no expert-parallel axis yet)
             "experts": None,
+            # streaming-graph state: vertex rows block-partitioned over the
+            # data axes (the sharded RTEC engine's [S, rows_per+1, ·] blocks)
+            "graph_rows": dp,
         }
 
 
@@ -224,6 +227,48 @@ def cache_specs(cache_struct, mesh, shcfg: ShardingConfig, batch: Optional[int] 
         return P(*entries)
 
     return jax.tree.map(one, cache_struct)
+
+
+def stream_mesh(
+    num_shards: Optional[int] = None,
+    shcfg: Optional[ShardingConfig] = None,
+):
+    """1-D mesh for the row-sharded streaming engine.
+
+    Uses the first data-parallel axis name from ``shcfg`` (so the engine's
+    specs come straight out of :func:`spec_for_axes` under the standard rule
+    table) over the first ``num_shards`` local devices (default: all)."""
+    shcfg = shcfg or ShardingConfig()
+    n = num_shards or jax.device_count()
+    if n > jax.device_count():
+        raise ValueError(
+            f"num_shards={n} exceeds the {jax.device_count()} available "
+            "devices (force host devices via XLA_FLAGS before jax imports)"
+        )
+    devs = np.array(jax.devices()[:n])
+    return jax.sharding.Mesh(devs, (shcfg.dp_axes[0],))
+
+
+def stream_state_specs(mesh, shcfg: Optional[ShardingConfig] = None) -> Dict[str, NamedSharding]:
+    """NamedShardings for the sharded streaming engine's buffers.
+
+    ``state``: stacked ``[S, rows_per+1, d]`` embedding/aggregate blocks —
+    ``graph_rows`` on the leading shard dim.  ``plan``: stacked ``[S, ·]``
+    packed plan buffers.  ``replicated``: halo row lists, degree-free side
+    tables, params."""
+    shcfg = shcfg or ShardingConfig()
+    sizes = _axis_sizes(mesh)
+    rules = dict(shcfg.rules())
+    # stream_mesh is 1-D over dp_axes[0]; a multi-pod config's full dp tuple
+    # would name axes this mesh doesn't have
+    rules["graph_rows"] = (
+        tuple(a for a in _as_tuple(rules["graph_rows"]) if a in sizes) or None
+    )
+    return {
+        "state": NamedSharding(mesh, spec_for_axes(("graph_rows", None, None), rules)),
+        "plan": NamedSharding(mesh, spec_for_axes(("graph_rows", None), rules)),
+        "replicated": NamedSharding(mesh, P()),
+    }
 
 
 def opt_state_specs(axes_tree, mesh, shcfg: ShardingConfig, shapes_tree=None):

@@ -48,6 +48,12 @@ class TransferStats:
     bytes_up: int = 0
     bytes_down: int = 0
 
+    @property
+    def total_rows(self) -> int:
+        """H2D+D2H row volume — deterministic (no timing noise), so the CI
+        perf gate can bound it tightly (benchmarks/check_regression.py)."""
+        return self.rows_up + self.rows_down
+
 
 def _remap(indices: np.ndarray, rows: np.ndarray, n_compact: int, scratch: int) -> np.ndarray:
     """Map global vertex ids → compact positions; scratch id → n_compact."""

@@ -7,7 +7,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from benchmarks.check_regression import check, read_speedup
+from benchmarks.check_regression import (
+    SPECS,
+    check,
+    check_spec,
+    check_volume,
+    read_metric,
+    read_speedup,
+)
 from repro.core import RTECEngine, full_forward, make_model
 from repro.core.affected import (
     FLT_FIELDS,
@@ -261,6 +268,30 @@ def test_check_regression_logic():
     assert check(1.3, None, floor=1.2, tolerance=0.2) == []  # no baseline
 
 
+def test_check_regression_volume_logic():
+    """Volume metrics gate in the opposite direction: growth is regression."""
+    m = "fig7/smoke/gcn/offload_transfer_rows"
+    assert check_volume(3000, 3000, ceiling=20000, tolerance=0.1, metric=m) == []
+    assert check_volume(3200, 3000, ceiling=20000, tolerance=0.1, metric=m) == []
+    assert len(check_volume(3400, 3000, ceiling=20000, tolerance=0.1, metric=m)) == 1
+    assert len(check_volume(25000, 3000, ceiling=20000, tolerance=0.1, metric=m)) == 2
+    assert check_volume(3400, None, ceiling=20000, tolerance=0.1, metric=m) == []
+
+
+def test_check_regression_metric_matrix_specs():
+    """Every spec must be internally consistent and dispatch correctly."""
+    assert len(SPECS) >= 3  # gcn + gat constrained path + offload volume
+    for spec in SPECS:
+        if spec.kind == "speedup":
+            assert spec.floor is not None
+            assert check_spec(spec, spec.floor + 1.0, None) == []
+            assert check_spec(spec, spec.floor - 0.5, None) != []
+        else:
+            assert spec.ceiling is not None
+            assert check_spec(spec, spec.ceiling - 1.0, None) == []
+            assert check_spec(spec, spec.ceiling + 1.0, None) != []
+
+
 def test_check_regression_reads_artifact(tmp_path):
     import json
 
@@ -270,9 +301,22 @@ def test_check_regression_reads_artifact(tmp_path):
             "fig7/smoke/gcn/full,5000.0,",
             "fig7/smoke/gcn/inc,2500.0,",
             "fig7/smoke/gcn/inc_speedup_vs_full,2500.0,2.00x",
+            "fig7/smoke/gcn/offload_transfer_rows,2970.0,2970rows",
         ],
         "wall_s": 1.0,
     }))
     assert read_speedup(str(art)) == 2.0
+    assert read_metric(str(art), "fig7/smoke/gcn/offload_transfer_rows",
+                       "volume") == 2970.0
     with pytest.raises(KeyError):
         read_speedup(str(art), metric="missing/metric")
+
+
+def test_committed_baseline_covers_all_gate_metrics():
+    """BENCH_baseline.json must contain every gated metric — a spec without
+    a committed baseline silently degrades to absolute-bound-only."""
+    from pathlib import Path
+
+    base = Path(__file__).resolve().parents[1] / "BENCH_baseline.json"
+    for spec in SPECS:
+        read_metric(str(base), spec.name, spec.kind)
