@@ -54,6 +54,18 @@ SPECS = (
                ceiling=20000.0, tolerance=0.10),
 )
 
+# Gated against BENCH_sharded.json by the multi-device CI job
+# (``--suite sharded``): the hybrid's per-shard H2D+D2H row volume is
+# deterministic, so growth means the per-shard compact staging or remap
+# tables regressed toward O(V) transfers (an O(V)-per-shard regression on
+# the 300-vertex smoke graph would exceed 9000 rows).
+SHARDED_SPECS = (
+    MetricSpec(name="fig7/sharded/gcn/hybrid_transfer_rows_per_shard",
+               kind="volume", ceiling=2500.0, tolerance=0.15),
+)
+
+SUITES = {"smoke": SPECS, "sharded": SHARDED_SPECS}
+
 
 def read_metric(path: str, metric: str, kind: str = "speedup") -> float:
     """Extract one metric from a smoke artifact: the '1.53x' derived column
@@ -124,10 +136,14 @@ def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", default="BENCH_smoke.json")
     ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--suite", choices=sorted(SUITES), default="smoke",
+                    help="metric matrix to gate: 'smoke' for the "
+                         "single-device artifact, 'sharded' for the "
+                         "multi-device BENCH_sharded.json artifact")
     args = ap.parse_args()
 
     failures: List[str] = []
-    for spec in SPECS:
+    for spec in SUITES[args.suite]:
         current = read_metric(args.current, spec.name, spec.kind)
         try:
             baseline = read_metric(args.baseline, spec.name, spec.kind)

@@ -49,14 +49,18 @@ def smoke():
             )
             emit("fig7/smoke/gcn/inc_pipelined", t_pipe * 1e6,
                  f"{times['full'] / t_pipe:.2f}x")
-    # offload transfer volume: deterministic row counts, tight gate bound
+    # offload transfer volume: deterministic row counts, tight gate bound.
+    # Runs through the unified apply_stream (ISSUE 4: the offload engine
+    # returns the same StreamStats as every other engine) — staging and
+    # write-back volume is identical to the per-batch path.
     from repro.serve.offload import OffloadedRTECEngine
 
     model = make_model("gcn")
     params = gnn_params(model, [16, 16])
     off = OffloadedRTECEngine(model, params, wl.base, x)
-    for b in wl.batches:
-        off.apply_batch(b)
+    ss = off.apply_stream(wl.batches)
+    emit("fig7/smoke/gcn/offload_stream_wall", ss.wall_s * 1e6,
+         f"plan_{ss.plan_s * 1e6:.0f}us")
     emit("fig7/smoke/gcn/offload_transfer_rows",
          float(off.transfers.total_rows), f"{off.transfers.total_rows}rows")
 
@@ -86,15 +90,36 @@ def smoke_sharded(num_shards: int):
          f"S={num_shards}")
     diff = float(np.abs(np.asarray(single.embeddings) - sharded.embeddings).max())
     emit("fig7/sharded/gcn/max_abs_diff_vs_single", diff, "")
-    # the cell gates correctness + halo volume, not wall time (on CPU CI the
-    # forced "devices" oversubscribe the cores): fail the CI step outright on
-    # divergence (the gcn path is exact) or on halo traffic past the
-    # frontier-only bound (~12 rows/batch measured; 64 leaves headroom for
-    # workload drift while still catching a broadcast-everything regression
-    # against the 300-vertex graph)
+    # ---- sharded-offload hybrid cell (ISSUE 4) ----
+    from repro.serve.offload import ShardedOffloadRTECEngine
+
+    hybrid = ShardedOffloadRTECEngine(model, params, wl.base, x,
+                                      num_shards=num_shards)
+    t_hybrid, _ = run_stream(hybrid, wl)
+    emit(f"fig7/sharded/gcn/hybrid{num_shards}", t_hybrid * 1e6,
+         f"{t_single / t_hybrid:.2f}x")
+    diff_h = float(np.abs(np.asarray(single.embeddings) - hybrid.embeddings).max())
+    emit("fig7/sharded/gcn/hybrid_max_abs_diff_vs_single", diff_h, "")
+    # per-shard H2D+D2H row volume: deterministic (no timing noise), gated
+    # by check_regression's sharded suite — growth means the per-shard
+    # compact staging or remap tables regressed toward O(V) transfers
+    rows_per_shard = int(hybrid.per_shard_rows.max())
+    emit("fig7/sharded/gcn/hybrid_transfer_rows_per_shard",
+         float(rows_per_shard), f"S={num_shards}")
+    emit("fig7/sharded/gcn/hybrid_peak_device_bytes",
+         float(hybrid.peak_device_bytes),
+         f"state_{hybrid.state_bytes()}B")
+    # the cell gates correctness + halo/transfer volume, not wall time (on
+    # CPU CI the forced "devices" oversubscribe the cores): fail the CI step
+    # outright on divergence (the gcn path is exact for both engines) or on
+    # halo traffic past the frontier-only bound (~12 rows/batch measured; 64
+    # leaves headroom for workload drift while still catching a
+    # broadcast-everything regression against the 300-vertex graph)
     failures = []
     if diff != 0.0:
         failures.append(f"sharded-vs-single max|diff|={diff:g} (expected 0)")
+    if diff_h != 0.0:
+        failures.append(f"hybrid-vs-single max|diff|={diff_h:g} (expected 0)")
     if halo_per_batch > 64:
         failures.append(f"halo_rows_per_batch={halo_per_batch:.1f} exceeds 64")
     if failures:

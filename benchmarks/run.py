@@ -12,8 +12,11 @@ larger graph sizes; default (quick) finishes on one CPU in minutes.
 benchmark-smoke job gates on it (benchmarks/check_regression.py).
 `--devices N` forces N host devices (XLA flag set **before** jax imports,
 which is why all heavy imports live inside the entry points) and, with
-`--smoke`, runs the sharded-engine cell instead, writing `BENCH_sharded.json`
-— uploaded as an artifact by the CI multi-device job.
+`--smoke`, runs the sharded-engine + sharded-offload-hybrid cells instead,
+writing `BENCH_sharded.json` — uploaded as an artifact by the CI
+multi-device job and gated there via
+`benchmarks.check_regression --suite sharded` (deterministic per-shard
+transfer-row volume).
 """
 from __future__ import annotations
 

@@ -1,5 +1,13 @@
 """Core incremental-RTEC framework — the paper's contribution in JAX."""
 
+from repro.core.backend import (
+    DeviceBackend,
+    OffloadBackend,
+    ShardBackend,
+    ShardedOffloadBackend,
+    StateBackend,
+    StreamOrchestrator,
+)
 from repro.core.baselines import RTECUER, MTECPeriod, RTECFull, RTECSample
 from repro.core.conditions import certify, validate_registration
 from repro.core.engine import BatchStats, RTECEngine, StreamStats
@@ -17,6 +25,12 @@ __all__ = [
     "ShardedRTECEngine",
     "BatchStats",
     "StreamStats",
+    "StateBackend",
+    "StreamOrchestrator",
+    "DeviceBackend",
+    "OffloadBackend",
+    "ShardBackend",
+    "ShardedOffloadBackend",
     "full_forward",
     "LayerState",
     "RTECFull",

@@ -432,6 +432,37 @@ class PackedPlan:
     n_out_rows: int
 
 
+def _schedule_from_dstk(dstk: np.ndarray, r_cap: int, tv: int, be: int):
+    """Block-CSR schedule for one record array: sort the (masked → -1)
+    row keys by destination tile and compose the gather perm back into the
+    *unsorted* record order.  Returns (perm, dloc, brows, e_pad)."""
+    from repro.kernels.segment_spmm import prepare_block_csr
+
+    order = np.argsort(dstk, kind="stable")  # -1 (masked) sorts first; dropped
+    perm_s, dloc, brows, e_pad = prepare_block_csr(dstk[order], r_cap, tv=tv, be=be)
+    perm = np.where(perm_s >= 0, order[np.clip(perm_s, 0, None)], -1).astype(np.int32)
+    return perm, dloc, brows, e_pad
+
+
+def _pad_schedule(perm: np.ndarray, dloc: np.ndarray, brows: np.ndarray,
+                  cap: int, be: int):
+    """Pad a raw schedule to a power-of-two block-count bucket — otherwise
+    every batch would present new shapes to the jitted fused step and force
+    a recompile.  Padding: perm/dloc = -1 (zeroed message, matches no row),
+    block_rows repeats its last tile (non-decreasing, so the kernel treats
+    the extra blocks as accumulating zeros into an already-visited tile)."""
+    e_pad = perm.shape[0]
+    if cap != e_pad:
+        pad = cap - e_pad
+        last = int(brows[-1]) if brows.size else 0
+        perm = np.concatenate([perm, np.full(pad, -1, np.int32)])
+        dloc = np.concatenate([dloc, np.full(pad, -1, np.int32)])
+        brows = np.concatenate(
+            [brows, np.full(cap // be - brows.shape[0], last, np.int32)]
+        )
+    return perm, dloc, brows
+
+
 def _pallas_delta_layout(
     lp: LayerPlan,
     tv: int,
@@ -439,32 +470,13 @@ def _pallas_delta_layout(
     hwm: Optional[BucketHysteresis] = None,
     key: object = None,
 ):
-    """Host side of the co-processed Pallas delta scatter: sort this layer's
-    incremental records by touched-row tile and emit the block-aligned CSR
-    schedule (gather perm composed back into the *unsorted* record order).
-
-    The raw schedule length depends on how records distribute over row
-    tiles, so it is padded to a power-of-two block-count bucket — otherwise
-    every batch would present new shapes to the jitted fused step and force
-    a recompile.  Padding: perm/dloc = -1 (zeroed message, matches no row),
-    block_rows repeats its last tile (non-decreasing, so the kernel treats
-    the extra blocks as accumulating zeros into an already-visited tile)."""
-    from repro.kernels.segment_spmm import prepare_block_csr
-
+    """Host side of the co-processed Pallas delta scatter for one packed
+    layer (single-device path)."""
     r_cap = lp.touch_rows.shape[0]
     dstk = np.where(lp.e_mask, lp.e_rowidx.astype(np.int64), -1)
-    order = np.argsort(dstk, kind="stable")  # -1 (masked) sorts first; dropped
-    perm_s, dloc, brows, e_pad = prepare_block_csr(dstk[order], r_cap, tv=tv, be=be)
-    perm = np.where(perm_s >= 0, order[np.clip(perm_s, 0, None)], -1).astype(np.int32)
+    perm, dloc, brows, e_pad = _schedule_from_dstk(dstk, r_cap, tv=tv, be=be)
     cap = _cap_of(hwm, key, e_pad, minimum=be)  # pow2 ≥ be → stays a multiple of be
-    if cap != e_pad:
-        pad = cap - e_pad
-        perm = np.concatenate([perm, np.full(pad, -1, np.int32)])
-        dloc = np.concatenate([dloc, np.full(pad, -1, np.int32)])
-        brows = np.concatenate(
-            [brows, np.full(cap // be - brows.shape[0], brows[-1], np.int32)]
-        )
-    return perm, dloc, brows
+    return _pad_schedule(perm, dloc, brows, cap, be)
 
 
 def _idx_pad_value(name: str, n: int, caps: Tuple[int, ...]) -> int:
@@ -609,6 +621,8 @@ class ShardedLayout:
     rows_per: int
     feat_cap: int  # 0 → no feature updates (static branch)
     caps: Tuple[Tuple[int, int, int, int, int, int, int], ...]
+    # per-layer Pallas block-CSR schedule capacity (None → XLA segment-sum)
+    pallas_ecaps: Optional[Tuple[int, ...]] = None
 
 
 @lru_cache(maxsize=None)
@@ -665,6 +679,45 @@ class ShardedPlan:
     n_full_edges: int
     n_out_rows: int
     n_halo_rows: int  # live frontier rows exchanged, summed over layers
+    # optional per-shard Pallas block-CSR schedules: one stacked
+    # (perm [S, cap], dloc [S, cap], brows [S, cap//be]) triple per layer
+    pallas_sh: Optional[Tuple[Tuple[np.ndarray, np.ndarray, np.ndarray], ...]] = None
+
+
+def _owner_runs(owners: np.ndarray, n_shards: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Single-pass owner partition: one stable argsort, then contiguous-run
+    boundaries.  ``order[starts[s]:starts[s+1]]`` are the indices owned by
+    shard ``s``, in original record order (stable sort)."""
+    order = np.argsort(owners, kind="stable")
+    starts = np.searchsorted(owners[order], np.arange(n_shards + 1))
+    return order, starts
+
+
+def _live_owner_partition(lp: LayerPlan, rows_per: int) -> Dict[str, np.ndarray]:
+    """Strip one layer plan to its live records/rows and tag each with the
+    shard that owns its destination row — the common first pass of both the
+    sharded (`shard_plan`) and the hybrid (`hybrid_plan`) partitioners."""
+    live = lp.e_mask
+    fe_live = lp.f_emask
+    f_cap_old = lp.f_rows.shape[0]
+    fe_rowg = lp.f_rows[np.minimum(lp.f_rowidx, f_cap_old - 1)].astype(np.int64)
+    es = lp.e_src[live].astype(np.int64)
+    ed = lp.e_dst[live].astype(np.int64)
+    tr = lp.touch_rows[lp.touch_mask].astype(np.int64)
+    f_rows = lp.f_rows[lp.f_mask].astype(np.int64)
+    fs = lp.f_src[fe_live].astype(np.int64)
+    fe_row = fe_rowg[fe_live]
+    outr = lp.out_rows[lp.out_mask].astype(np.int64)
+    return dict(
+        es=es, ed=ed, d_own=ed // rows_per,
+        e_sign=lp.e_sign[live], e_use_new=lp.e_use_new[live],
+        e_w=lp.e_w[live], e_t=lp.e_t[live],
+        tr=tr, tr_own=tr // rows_per,
+        f_rows=f_rows, f_own=f_rows // rows_per,
+        fs=fs, fe_row=fe_row, fe_own=fe_row // rows_per,
+        f_w=lp.f_w[fe_live], f_t=lp.f_t[fe_live],
+        outr=outr, o_own=outr // rows_per,
+    )
 
 
 def shard_plan(
@@ -673,9 +726,18 @@ def shard_plan(
     feat_vertices: Optional[np.ndarray] = None,
     feat_values: Optional[np.ndarray] = None,
     hwm: Optional[BucketHysteresis] = None,
+    pallas: bool = False,
+    single_pass: bool = True,
 ) -> ShardedPlan:
     """Partition a :class:`BatchPlan` row-wise over ``n_shards`` and pack it
-    into the sharded transfer format (see module section comment)."""
+    into the sharded transfer format (see module section comment).
+
+    ``single_pass=True`` (default) fills the stacked buffers by argsorting
+    each live-record field by owner shard once and slicing contiguous runs —
+    O(E log E + S·caps) host time, flat in shard count.  ``False`` keeps the
+    original per-shard re-scan (O(S·E)) as the equality reference.
+    ``pallas=True`` additionally emits per-shard block-CSR schedules for the
+    Pallas delta scatter (one stacked triple per layer)."""
     n = plan.deg_old.shape[0] - 1
     rows_per = shard_rows(n, n_shards)
     S = n_shards
@@ -694,26 +756,13 @@ def shard_plan(
     caps_all = []
     halo_total = 0
     for l, lp in enumerate(plan.layers):
-        live = lp.e_mask
-        es = lp.e_src[live].astype(np.int64)
-        ed = lp.e_dst[live].astype(np.int64)
-        d_own = ed // rows_per
-        tr = lp.touch_rows[lp.touch_mask].astype(np.int64)
-        tr_own = tr // rows_per
-        f_rows = lp.f_rows[lp.f_mask].astype(np.int64)
-        f_own = f_rows // rows_per
-        fe_live = lp.f_emask
-        f_cap_old = lp.f_rows.shape[0]
-        fe_rowg = lp.f_rows[np.minimum(lp.f_rowidx, f_cap_old - 1)].astype(np.int64)
-        fs = lp.f_src[fe_live].astype(np.int64)
-        fe_row = fe_rowg[fe_live]
-        fe_own = fe_row // rows_per
-        outr = lp.out_rows[lp.out_mask].astype(np.int64)
-        o_own = outr // rows_per
+        art = _live_owner_partition(lp, rows_per)
+        es, ed, fs = art["es"], art["ed"], art["fs"]
 
         # frontier rows: sources some consuming shard does not own
         halo_rows = np.unique(np.concatenate([
-            es[es // rows_per != d_own], fs[fs // rows_per != fe_own],
+            es[es // rows_per != art["d_own"]],
+            fs[fs // rows_per != art["fe_own"]],
         ]))
         halo_total += int(halo_rows.shape[0])
         halo_cap = _cap_of(hwm, (l, "halo"), halo_rows.shape[0])
@@ -721,22 +770,15 @@ def shard_plan(
         def per_shard_max(owners) -> int:
             return int(np.bincount(owners, minlength=S).max()) if owners.size else 0
 
-        e_cap = _cap_of(hwm, (l, 0), per_shard_max(d_own))
-        r_cap = _cap_of(hwm, (l, 1), per_shard_max(tr_own))
-        f_cap = _cap_of(hwm, (l, 2), per_shard_max(f_own))
-        fe_cap = _cap_of(hwm, (l, 3), per_shard_max(fe_own))
-        o_cap = _cap_of(hwm, (l, 4), per_shard_max(o_own))
+        e_cap = _cap_of(hwm, (l, 0), per_shard_max(art["d_own"]))
+        r_cap = _cap_of(hwm, (l, 1), per_shard_max(art["tr_own"]))
+        f_cap = _cap_of(hwm, (l, 2), per_shard_max(art["f_own"]))
+        fe_cap = _cap_of(hwm, (l, 3), per_shard_max(art["fe_own"]))
+        o_cap = _cap_of(hwm, (l, 4), per_shard_max(art["o_own"]))
         ws = halo_cap + rows_per + 1
         caps_all.append((e_cap, r_cap, f_cap, fe_cap, o_cap, halo_cap, ws))
-        layers.append(dict(
-            es=es, ed=ed, d_own=d_own,
-            e_sign=lp.e_sign[live], e_use_new=lp.e_use_new[live],
-            e_w=lp.e_w[live], e_t=lp.e_t[live],
-            tr=tr, tr_own=tr_own, f_rows=f_rows, f_own=f_own,
-            fs=fs, fe_row=fe_row, fe_own=fe_own,
-            f_w=lp.f_w[fe_live], f_t=lp.f_t[fe_live],
-            outr=outr, o_own=o_own, halo_rows=halo_rows,
-        ))
+        art["halo_rows"] = halo_rows
+        layers.append(art)
 
     layout = ShardedLayout(
         n=n, n_shards=S, rows_per=rows_per, feat_cap=feat_cap,
@@ -758,6 +800,40 @@ def shard_plan(
         msk_rep[: fr.shape[0]] = True
         feat_vals = np.zeros((feat_cap, fv.shape[1]), np.float32)
         feat_vals[: fv.shape[0]] = fv
+
+    fill = _fill_sharded_single_pass if single_pass else _fill_sharded_reference
+    fill(plan, layout, layers, idx_sl, flt_sl, msk_sl, halo_sl,
+         idx_sh, flt_sh, msk_sh, idx_rep)
+
+    pallas_sh = None
+    if pallas:
+        pallas_sh, pcaps = _sharded_pallas_schedules(
+            layout, idx_sl, msk_sl, idx_sh, msk_sh, hwm
+        )
+        layout = dataclasses.replace(layout, pallas_ecaps=pcaps)
+
+    return ShardedPlan(
+        layout=layout,
+        idx_sh=idx_sh,
+        flt_sh=flt_sh,
+        msk_sh=msk_sh,
+        idx_rep=idx_rep,
+        msk_rep=msk_rep,
+        feat_vals=feat_vals,
+        n_inc_edges=plan.total_inc_edges(),
+        n_full_edges=plan.total_full_edges(),
+        n_out_rows=plan.total_vertices(),
+        n_halo_rows=halo_total,
+        pallas_sh=pallas_sh,
+    )
+
+
+def _fill_sharded_reference(plan, layout, layers, idx_sl, flt_sl, msk_sl,
+                            halo_sl, idx_sh, flt_sh, msk_sh, idx_rep) -> None:
+    """Original per-shard fill: each of the S iterations re-scans the full
+    live-record arrays (O(S·E)) and re-runs ``searchsorted`` per field.
+    Kept verbatim as the equality reference for the single-pass fill."""
+    S, rows_per, n = layout.n_shards, layout.rows_per, layout.n
 
     def fill_idx(s: int, sl: slice, vals: np.ndarray, pad: int) -> None:
         idx_sh[s, sl] = pad
@@ -837,19 +913,141 @@ def shard_plan(
             msk_sh[s, dm["f_emask"].start : dm["f_emask"].start + nfe] = True
             msk_sh[s, dm["out_mask"].start : dm["out_mask"].start + no] = True
 
-    return ShardedPlan(
-        layout=layout,
-        idx_sh=idx_sh,
-        flt_sh=flt_sh,
-        msk_sh=msk_sh,
-        idx_rep=idx_rep,
-        msk_rep=msk_rep,
-        feat_vals=feat_vals,
-        n_inc_edges=plan.total_inc_edges(),
-        n_full_edges=plan.total_full_edges(),
-        n_out_rows=plan.total_vertices(),
-        n_halo_rows=halo_total,
-    )
+
+def _fill_sharded_single_pass(plan, layout, layers, idx_sl, flt_sl, msk_sl,
+                              halo_sl, idx_sh, flt_sh, msk_sh, idx_rep) -> None:
+    """Single-pass fill (ROADMAP): every owner partition is one stable
+    argsort + contiguous-run slicing (:func:`_owner_runs`), and every
+    ``searchsorted`` runs once per field over the *full* array instead of
+    once per shard — host plan time stays flat in shard count, so planning
+    keeps hiding behind device execution at S=64+.  Produces buffers
+    bit-identical to :func:`_fill_sharded_reference` (asserted in
+    tests/test_sharded_engine.py)."""
+    S, rows_per, n = layout.n_shards, layout.rows_per, layout.n
+
+    def fill_idx(s: int, sl: slice, vals: np.ndarray, pad: int) -> None:
+        idx_sh[s, sl] = pad
+        idx_sh[s, sl.start : sl.start + vals.shape[0]] = vals
+
+    for l, (art, caps) in enumerate(zip(layers, layout.caps)):
+        e_cap, r_cap, f_cap, fe_cap, o_cap, halo_cap, ws = caps
+        ws_scratch = halo_cap + rows_per
+        halo_rows = art["halo_rows"]
+        idx_rep[halo_sl[l].start : halo_sl[l].start + halo_rows.shape[0]] = halo_rows
+
+        deg_halo_old = np.zeros(halo_cap, np.float32)
+        deg_halo_new = np.zeros(halo_cap, np.float32)
+        deg_halo_old[: halo_rows.shape[0]] = plan.deg_old[halo_rows]
+        deg_halo_new[: halo_rows.shape[0]] = plan.deg_new[halo_rows]
+
+        # ---- once per layer: owner runs + global lookups ----
+        e_ord, e_st = _owner_runs(art["d_own"], S)
+        fe_ord, fe_st = _owner_runs(art["fe_own"], S)
+        # tr / f_rows / outr are sorted, so owner runs are already contiguous
+        tr_st = np.searchsorted(art["tr_own"], np.arange(S + 1))
+        f_st = np.searchsorted(art["f_own"], np.arange(S + 1))
+        o_st = np.searchsorted(art["o_own"], np.arange(S + 1))
+
+        # h-space fields: owned rows use a local offset, remote rows the
+        # halo slot — resolved per shard below from these global tables
+        def ws_split(rows: np.ndarray):
+            hpos = np.searchsorted(halo_rows, rows)
+            hpos = np.clip(hpos, 0, max(0, halo_rows.shape[0] - 1)).astype(np.int64)
+            return hpos, rows // rows_per
+
+        es_h, es_own = ws_split(art["es"])
+        fs_h, fs_own = ws_split(art["fs"])
+        e_row_g = np.searchsorted(art["tr"], art["ed"])
+        fe_row_g = np.searchsorted(art["f_rows"], art["fe_row"])
+
+        for s in range(S):
+            lo = s * rows_per
+            esel = e_ord[e_st[s] : e_st[s + 1]]
+            fesel = fe_ord[fe_st[s] : fe_st[s + 1]]
+            ne, nfe = esel.shape[0], fesel.shape[0]
+            ed_s = art["ed"][esel]
+            tr_s = art["tr"][tr_st[s] : tr_st[s + 1]]
+            fr_s = art["f_rows"][f_st[s] : f_st[s + 1]]
+            fs_s = art["fs"][fesel]
+            out_s = art["outr"][o_st[s] : o_st[s + 1]]
+
+            def ws_of(rows, hpos, own):
+                return np.where(own == s, halo_cap + (rows - lo), hpos).astype(
+                    np.int32)
+
+            di, df, dm = idx_sl[l], flt_sl[l], msk_sl[l]
+            fill_idx(s, di["e_src"],
+                     ws_of(art["es"][esel], es_h[esel], es_own[esel]), ws_scratch)
+            # destination rows are owner-local by construction
+            fill_idx(s, di["e_dst"], (halo_cap + ed_s - lo).astype(np.int32),
+                     ws_scratch)
+            fill_idx(s, di["e_rowidx"],
+                     (e_row_g[esel] - tr_st[s]).astype(np.int32), r_cap)
+            fill_idx(s, di["e_t"], art["e_t"][esel], 0)
+            fill_idx(s, di["touch_rows"], (tr_s - lo).astype(np.int32), rows_per)
+            fill_idx(s, di["f_rows"], (fr_s - lo).astype(np.int32), rows_per)
+            fill_idx(s, di["f_src"],
+                     ws_of(fs_s, fs_h[fesel], fs_own[fesel]), ws_scratch)
+            fill_idx(s, di["f_rowidx"],
+                     (fe_row_g[fesel] - f_st[s]).astype(np.int32), f_cap)
+            fill_idx(s, di["f_t"], art["f_t"][fesel], 0)
+            fill_idx(s, di["out_rows"], (out_s - lo).astype(np.int32), rows_per)
+            fill_idx(s, di["f_rows_h"], (halo_cap + fr_s - lo).astype(np.int32),
+                     ws_scratch)
+            fill_idx(s, di["out_rows_h"], (halo_cap + out_s - lo).astype(np.int32),
+                     ws_scratch)
+
+            flt_sh[s, df["e_sign"].start : df["e_sign"].start + ne] = (
+                art["e_sign"][esel]
+            )
+            flt_sh[s, df["e_w"].start : df["e_w"].start + ne] = art["e_w"][esel]
+            flt_sh[s, df["f_w"].start : df["f_w"].start + nfe] = art["f_w"][fesel]
+            li = np.arange(lo, lo + rows_per)
+            dl_old = np.where(li < n, plan.deg_old[np.minimum(li, n)], 0.0)
+            dl_new = np.where(li < n, plan.deg_new[np.minimum(li, n)], 0.0)
+            flt_sh[s, df["deg_old"]] = np.concatenate(
+                [deg_halo_old, dl_old, [0.0]]).astype(np.float32)
+            flt_sh[s, df["deg_new"]] = np.concatenate(
+                [deg_halo_new, dl_new, [0.0]]).astype(np.float32)
+
+            nr, nf, no = tr_s.shape[0], fr_s.shape[0], out_s.shape[0]
+            msk_sh[s, dm["e_mask"].start : dm["e_mask"].start + ne] = True
+            msk_sh[s, dm["e_use_new"].start : dm["e_use_new"].start + ne] = (
+                art["e_use_new"][esel]
+            )
+            msk_sh[s, dm["touch_mask"].start : dm["touch_mask"].start + nr] = True
+            msk_sh[s, dm["f_mask"].start : dm["f_mask"].start + nf] = True
+            msk_sh[s, dm["f_emask"].start : dm["f_emask"].start + nfe] = True
+            msk_sh[s, dm["out_mask"].start : dm["out_mask"].start + no] = True
+
+
+def _sharded_pallas_schedules(layout, idx_sl, msk_sl, idx_sh, msk_sh,
+                              hwm: Optional[BucketHysteresis]):
+    """Per-shard block-CSR schedules for the Pallas delta scatter, one
+    stacked (perm, dloc, brows) triple per layer.  All shards of a layer
+    share one (hysteresis-held) capacity so the stacked arrays ship under
+    the plan sharding like every other per-shard buffer."""
+    from repro.kernels.delta_agg import DELTA_BE, DELTA_TV
+
+    S = layout.n_shards
+    out = []
+    pcaps = []
+    for l, caps in enumerate(layout.caps):
+        r_cap = caps[1]
+        raw = []
+        for s in range(S):
+            rowidx = idx_sh[s, idx_sl[l]["e_rowidx"]].astype(np.int64)
+            emask = msk_sh[s, msk_sl[l]["e_mask"]]
+            dstk = np.where(emask, rowidx, -1)
+            raw.append(_schedule_from_dstk(dstk, r_cap, tv=DELTA_TV, be=DELTA_BE))
+        cap = _cap_of(hwm, (l, "pallas"), max(r[3] for r in raw),
+                      minimum=DELTA_BE)
+        padded = [_pad_schedule(p, d, b, cap, DELTA_BE) for p, d, b, _ in raw]
+        out.append(tuple(
+            np.stack([pd[k] for pd in padded]) for k in range(3)
+        ))
+        pcaps.append(cap)
+    return tuple(out), tuple(pcaps)
 
 
 def build_packed_plan(
@@ -865,3 +1063,248 @@ def build_packed_plan(
     plan = build_plan(model, g_old, g_new, batch, num_layers)
     return pack_plan(plan, batch.feat_vertices, batch.feat_values, pallas=pallas,
                      hwm=hwm)
+
+
+# ====================================================================== #
+# Hybrid plans — sharded offload transfer format: per-shard *compact*
+# [halo|local] workspaces (paper §V-B at mesh scale).  Unlike ShardedPlan,
+# whose per-shard workspace embeds the full local block (rows_per + 1 rows),
+# the hybrid stages only the rows each shard's plan actually touches, so a
+# device's footprint is O(its affected subgraph) — the persistent state
+# stays host-resident in per-shard row blocks.  No device collective is
+# needed: halo rows are gathered from the owning shards' *host* blocks at
+# staging time (the host is the exchange medium between layers).
+# ====================================================================== #
+def remap_compact(indices: np.ndarray, rows: np.ndarray, n_compact: int,
+                  scratch: int) -> np.ndarray:
+    """Map global vertex ids → compact positions; unmatched → n_compact."""
+    lut = np.full(scratch + 1, n_compact, np.int32)
+    if rows.size:
+        lut[rows] = np.arange(rows.shape[0], dtype=np.int32)
+    return lut[np.asarray(indices, np.int64)]
+
+
+def _remap_sorted(indices: np.ndarray, rows: np.ndarray, cap: int) -> np.ndarray:
+    """:func:`remap_compact` for *sorted* ``rows``: O(k log k) searchsorted
+    instead of an O(V) lookup-table allocation — hybrid planning calls this
+    per shard per layer, so an O(V) table per call would put O(S·L·V) host
+    work on the plan critical path.  Unmatched values map to ``cap``."""
+    v = np.asarray(indices, np.int64)
+    if rows.size == 0:
+        return np.full(v.shape, cap, np.int32)
+    pos = np.clip(np.searchsorted(rows, v), 0, rows.shape[0] - 1)
+    return np.where(rows[pos] == v, pos, cap).astype(np.int32)
+
+
+# Per-layer cap tuple: (e, r, f, fe, o, nh, ns) — nh is the compact h^{l-1}
+# workspace (gather space), ns the compact state workspace (scatter space);
+# both get one scratch slot at index cap when staged.  Field kinds index the
+# cap that gives the field's *length*; -1 means the nh+1 degree table.
+HYB_IDX_FIELDS: Tuple[Tuple[str, int], ...] = (
+    ("e_src", 0), ("e_dst", 0), ("e_rowidx", 0), ("e_t", 0),
+    ("touch_rows", 1), ("f_rows", 2), ("f_src", 3), ("f_rowidx", 3),
+    ("f_t", 3), ("out_rows", 4), ("f_rows_h", 2), ("out_rows_h", 4),
+)
+HYB_FLT_FIELDS: Tuple[Tuple[str, int], ...] = (
+    ("e_sign", 0), ("e_w", 0), ("f_w", 3), ("deg_old", -1), ("deg_new", -1),
+)
+HYB_MSK_FIELDS: Tuple[Tuple[str, int], ...] = MSK_FIELDS
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridLayerLayout:
+    """Static (hashable) shape descriptor of one hybrid layer's staging —
+    one distinct layout → one trace of the shard_map'd compact layer step."""
+
+    n: int
+    n_shards: int
+    caps: Tuple[int, int, int, int, int, int, int]  # (e, r, f, fe, o, nh, ns)
+
+
+@lru_cache(maxsize=None)
+def hybrid_layout_slices(ll: HybridLayerLayout):
+    """Static offset tables into one shard's row of the stacked hybrid
+    buffers; returns (idx_sl, flt_sl, msk_sl, (idx_len, flt_len, msk_len))."""
+    idx_off = flt_off = msk_off = 0
+    di: Dict[str, slice] = {}
+    for name, kind in HYB_IDX_FIELDS:
+        di[name] = slice(idx_off, idx_off + ll.caps[kind])
+        idx_off += ll.caps[kind]
+    df: Dict[str, slice] = {}
+    for name, kind in HYB_FLT_FIELDS:
+        ln = ll.caps[5] + 1 if kind == -1 else ll.caps[kind]
+        df[name] = slice(flt_off, flt_off + ln)
+        flt_off += ln
+    dm: Dict[str, slice] = {}
+    for name, kind in HYB_MSK_FIELDS:
+        dm[name] = slice(msk_off, msk_off + ll.caps[kind])
+        msk_off += ll.caps[kind]
+    return di, df, dm, (idx_off, flt_off, msk_off)
+
+
+@dataclasses.dataclass
+class HybridLayerPlan:
+    """One layer's per-shard compact staging tables, stacked ``[S, ·]``.
+
+    ``need_h``/``srows`` name the *global* rows each shard stages (gather /
+    scatter sets); every plan index inside ``idx_sh`` is remapped into the
+    matching compact space (pad → the space's scratch slot)."""
+
+    layout: HybridLayerLayout
+    need_h: np.ndarray  # int64 [S, nh_cap] global ids (pad rows → 0, masked)
+    need_mask: np.ndarray  # bool [S, nh_cap]
+    srows: np.ndarray  # int64 [S, ns_cap] global ids (pad rows → 0, masked)
+    srows_mask: np.ndarray  # bool [S, ns_cap]
+    idx_sh: np.ndarray  # int32 [S, idx_len]
+    flt_sh: np.ndarray  # float32 [S, flt_len] (incl. compact deg tables)
+    msk_sh: np.ndarray  # bool [S, msk_len]
+
+    @property
+    def nh_cap(self) -> int:
+        return self.layout.caps[5]
+
+    @property
+    def ns_cap(self) -> int:
+        return self.layout.caps[6]
+
+
+@dataclasses.dataclass
+class HybridPlan:
+    layers: List[HybridLayerPlan]
+
+
+def hybrid_plan(
+    plan: BatchPlan,
+    n_shards: int,
+    hwm: Optional[BucketHysteresis] = None,
+) -> HybridPlan:
+    """Partition a :class:`BatchPlan` by destination-row owner and emit the
+    per-shard compact staging tables (see section comment).  All scatters
+    are owner-local by construction; the gather set (``need_h``) may span
+    other shards' rows — those are served from host blocks at staging time."""
+    n = plan.deg_old.shape[0] - 1
+    rows_per = shard_rows(n, n_shards)
+    S = n_shards
+    out_layers: List[HybridLayerPlan] = []
+
+    for l, lp in enumerate(plan.layers):
+        art = _live_owner_partition(lp, rows_per)
+        es, ed, fs = art["es"], art["ed"], art["fs"]
+        tr, f_rows, outr = art["tr"], art["f_rows"], art["outr"]
+        fe_row = art["fe_row"]
+
+        e_ord, e_st = _owner_runs(art["d_own"], S)
+        fe_ord, fe_st = _owner_runs(art["fe_own"], S)
+        tr_st = np.searchsorted(art["tr_own"], np.arange(S + 1))
+        f_st = np.searchsorted(art["f_own"], np.arange(S + 1))
+        o_st = np.searchsorted(art["o_own"], np.arange(S + 1))
+
+        # per-shard gather/scatter row sets
+        need_list, srow_list = [], []
+        for s in range(S):
+            esel = e_ord[e_st[s] : e_st[s + 1]]
+            fesel = fe_ord[fe_st[s] : fe_st[s + 1]]
+            out_s = outr[o_st[s] : o_st[s + 1]]
+            need_list.append(np.unique(np.concatenate([
+                es[esel], ed[esel], fs[fesel],
+                f_rows[f_st[s] : f_st[s + 1]], out_s,
+            ])))
+            srow_list.append(out_s)
+
+        def runmax(starts) -> int:
+            return int(np.diff(starts).max()) if S else 0
+
+        e_cap = _cap_of(hwm, (l, 0), runmax(e_st))
+        r_cap = _cap_of(hwm, (l, 1), runmax(tr_st))
+        f_cap = _cap_of(hwm, (l, 2), runmax(f_st))
+        fe_cap = _cap_of(hwm, (l, 3), runmax(fe_st))
+        o_cap = _cap_of(hwm, (l, 4), runmax(o_st))
+        nh_cap = _cap_of(hwm, (l, "nh"), max(v.shape[0] for v in need_list))
+        ns_cap = o_cap  # srows == live out rows, so the buckets coincide
+        llayout = HybridLayerLayout(
+            n=n, n_shards=S,
+            caps=(e_cap, r_cap, f_cap, fe_cap, o_cap, nh_cap, ns_cap),
+        )
+        di, df, dm, (idx_len, flt_len, msk_len) = hybrid_layout_slices(llayout)
+
+        need_h = np.zeros((S, nh_cap), np.int64)
+        need_mask = np.zeros((S, nh_cap), bool)
+        srows = np.zeros((S, ns_cap), np.int64)
+        srows_mask = np.zeros((S, ns_cap), bool)
+        idx_sh = np.zeros((S, idx_len), np.int32)
+        flt_sh = np.zeros((S, flt_len), np.float32)
+        msk_sh = np.zeros((S, msk_len), bool)
+
+        def fill_idx(s: int, sl: slice, vals: np.ndarray, pad: int) -> None:
+            idx_sh[s, sl] = pad
+            idx_sh[s, sl.start : sl.start + vals.shape[0]] = vals
+
+        for s in range(S):
+            esel = e_ord[e_st[s] : e_st[s + 1]]
+            fesel = fe_ord[fe_st[s] : fe_st[s + 1]]
+            ne, nfe = esel.shape[0], fesel.shape[0]
+            need = need_list[s]
+            sr = srow_list[s]
+            nh, ns_ = need.shape[0], sr.shape[0]
+            tr_s = tr[tr_st[s] : tr_st[s + 1]]
+            fr_s = f_rows[f_st[s] : f_st[s + 1]]
+            need_h[s, :nh] = need
+            need_mask[s, :nh] = True
+            srows[s, :ns_] = sr
+            srows_mask[s, :ns_] = True
+
+            def rmap_h(v):
+                return _remap_sorted(v, need, nh_cap)
+
+            def rmap_s(v):
+                return _remap_sorted(v, sr, ns_cap)
+
+            fill_idx(s, di["e_src"], rmap_h(es[esel]), nh_cap)
+            fill_idx(s, di["e_dst"], rmap_h(ed[esel]), nh_cap)
+            fill_idx(s, di["e_rowidx"],
+                     np.searchsorted(tr_s, ed[esel]).astype(np.int32), r_cap)
+            fill_idx(s, di["e_t"], art["e_t"][esel], 0)
+            fill_idx(s, di["touch_rows"], rmap_s(tr_s), ns_cap)
+            fill_idx(s, di["f_rows"], rmap_s(fr_s), ns_cap)
+            fill_idx(s, di["f_src"], rmap_h(fs[fesel]), nh_cap)
+            fill_idx(s, di["f_rowidx"],
+                     np.searchsorted(fr_s, fe_row[fesel]).astype(np.int32), f_cap)
+            fill_idx(s, di["f_t"], art["f_t"][fesel], 0)
+            fill_idx(s, di["out_rows"], rmap_s(sr), ns_cap)
+            fill_idx(s, di["f_rows_h"], rmap_h(fr_s), nh_cap)
+            fill_idx(s, di["out_rows_h"], rmap_h(sr), nh_cap)
+
+            flt_sh[s, df["e_sign"].start : df["e_sign"].start + ne] = (
+                art["e_sign"][esel]
+            )
+            flt_sh[s, df["e_w"].start : df["e_w"].start + ne] = (
+                art["e_w"][esel]
+            )
+            flt_sh[s, df["f_w"].start : df["f_w"].start + nfe] = (
+                art["f_w"][fesel]
+            )
+            deg_o = np.zeros(nh_cap + 1, np.float32)
+            deg_n = np.zeros(nh_cap + 1, np.float32)
+            deg_o[:nh] = plan.deg_old[need]
+            deg_n[:nh] = plan.deg_new[need]
+            flt_sh[s, df["deg_old"]] = deg_o
+            flt_sh[s, df["deg_new"]] = deg_n
+
+            nr, nf, no = tr_s.shape[0], fr_s.shape[0], sr.shape[0]
+            msk_sh[s, dm["e_mask"].start : dm["e_mask"].start + ne] = True
+            msk_sh[s, dm["e_use_new"].start : dm["e_use_new"].start + ne] = (
+                art["e_use_new"][esel]
+            )
+            msk_sh[s, dm["touch_mask"].start : dm["touch_mask"].start + nr] = True
+            msk_sh[s, dm["f_mask"].start : dm["f_mask"].start + nf] = True
+            msk_sh[s, dm["f_emask"].start : dm["f_emask"].start + nfe] = True
+            msk_sh[s, dm["out_mask"].start : dm["out_mask"].start + no] = True
+
+        out_layers.append(HybridLayerPlan(
+            layout=llayout,
+            need_h=need_h, need_mask=need_mask,
+            srows=srows, srows_mask=srows_mask,
+            idx_sh=idx_sh, flt_sh=flt_sh, msk_sh=msk_sh,
+        ))
+
+    return HybridPlan(layers=out_layers)

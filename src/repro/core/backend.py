@@ -1,0 +1,1145 @@
+"""Residency-backend architecture: one orchestrator, four state substrates.
+
+The paper's §V GPU-CPU co-processing story has a single control flow —
+plan each update batch on the host (Alg. 4), pack it into a transfer
+format, ship it, execute the reordered incremental workflow (Alg. 1), and
+overlap batch-t+1 planning with batch-t execution — but the *residency* of
+the historical state (which memory tier holds h/a/nct, and how rows reach
+the compute) is a deployment decision.  This module separates the two:
+
+                          ┌──────────────────────────┐
+     UpdateBatch stream → │    StreamOrchestrator    │  plan/pack/hysteresis,
+                          │  plan(t+1) on host while │  honest StreamStats
+                          │  the device executes (t) │  timing, refresh cadence
+                          └────────────┬─────────────┘
+                                       │  StateBackend protocol
+                                       │  (plan / dispatch / flush / sync)
+        ┌──────────────────┬───────────┴──────┬─────────────────────┐
+  DeviceBackend      OffloadBackend     ShardBackend      ShardedOffloadBackend
+  state in HBM,      state host-        state row-sharded  per-shard host row
+  one fused donated  resident; compact  [S, rows_per+1,·]  blocks; per layer a
+  L-layer step per   affected rows      blocks; one psum   compact [halo|local]
+  batch (PackedPlan) staged per layer   of frontier rows   workspace staged per
+                     (paper §V-B)       per layer          shard (HBM footprint
+                                                           O(affected), not O(V))
+
+All four backends execute the *same* layer implementation
+(:func:`repro.core.incremental._layer_body`) and are fed by the same Alg.-4
+planner (:func:`repro.core.affected.build_plan`) through one packing layer
+(:mod:`repro.core.affected`'s ``PackedPlan``/``ShardedPlan``/remap tables).
+The public engine classes (``RTECEngine``, ``OffloadedRTECEngine``,
+``ShardedRTECEngine``, ``ShardedOffloadRTECEngine``) are thin facades over
+``StreamOrchestrator`` + one backend — no engine owns a plan/overlap loop.
+
+Protocol contract (what ``StreamOrchestrator`` relies on):
+
+* ``plan(g_old, g_new, batch)`` is host-only and **value-independent** (it
+  may read graph structure and batch indices, never state values), so it can
+  run while the devices still execute the previous batch;
+* ``dispatch(prep)`` is as asynchronous as the substrate allows; any work it
+  must defer to keep the next plan off the critical path is completed by
+  ``flush()`` (a no-op for fully-async device substrates);
+* ``flush()`` + ``jax.block_until_ready(sync_arrays())`` is a full barrier:
+  after it, ``embeddings`` reflects every dispatched batch.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import time
+import warnings
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.affected import (
+    BatchPlan,
+    BucketHysteresis,
+    HybridLayerPlan,
+    LayerPlan,
+    PackedPlan,
+    ShardedPlan,
+    build_packed_plan,
+    build_plan,
+    hybrid_plan,
+    remap_compact,
+    shard_plan,
+    shard_rows,
+)
+from repro.core.full import full_forward
+from repro.core.incremental import (
+    fused_stream_step,
+    hybrid_layer_step_fn,
+    incremental_layer,
+    sharded_step_fn,
+    with_scratch,
+)
+from repro.core.operators import GNNModel, Params
+from repro.graph.csr import CSRGraph
+from repro.graph.streaming import UpdateBatch
+
+
+# ====================================================================== #
+# Stats (shared by every engine facade)
+# ====================================================================== #
+@dataclasses.dataclass
+class BatchStats:
+    inc_edges: int
+    full_edges: int
+    out_vertices: int
+    plan_time_s: float
+    exec_time_s: float
+    graph_time_s: float
+
+    @property
+    def edges_processed(self) -> int:
+        return self.inc_edges + self.full_edges
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Aggregate result of a pipelined ``apply_stream`` run.
+
+    ``wall_s`` is honest end-to-end time including the final flush + device
+    sync; per-batch ``exec_time_s`` entries are dispatch-only (execution
+    overlaps the next batch's planning, so per-batch completion is
+    unobservable without breaking the pipeline)."""
+
+    batches: List[BatchStats]
+    wall_s: float
+    plan_s: float  # total host planning time (hidden behind device exec)
+
+    @property
+    def mean_batch_s(self) -> float:
+        return self.wall_s / max(1, len(self.batches))
+
+
+# ====================================================================== #
+# StateBackend protocol
+# ====================================================================== #
+class StateBackend(abc.ABC):
+    """Execution substrate under a :class:`StreamOrchestrator`.
+
+    A backend owns the residency of the per-layer historical state
+    (h, a, nct) and knows how to (1) turn a batch into a substrate-specific
+    prepared plan (host-only, value-independent), (2) dispatch that plan,
+    and (3) surface the state back (``embeddings``/``sync_arrays``).  The
+    returned prep object must expose ``n_inc_edges``/``n_full_edges``/
+    ``n_out_rows`` counters for :class:`BatchStats` accounting."""
+
+    model: GNNModel
+    L: int
+
+    @property
+    def overlap_capable(self) -> bool:
+        """Whether ``apply_stream``'s plan/execute overlap is supported."""
+        return True
+
+    @abc.abstractmethod
+    def plan(self, g_old: CSRGraph, g_new: CSRGraph, batch: UpdateBatch) -> Any:
+        """Host-only, value-independent planning (may overlap execution)."""
+
+    @abc.abstractmethod
+    def dispatch(self, prep: Any) -> None:
+        """Execute a prepared plan (as asynchronously as the substrate allows)."""
+
+    def flush(self) -> None:
+        """Complete any work ``dispatch`` deferred (no-op by default)."""
+
+    @abc.abstractmethod
+    def sync_arrays(self) -> list:
+        """Arrays to ``jax.block_until_ready`` at timed boundaries."""
+
+    @abc.abstractmethod
+    def refresh(self, graph: CSRGraph) -> None:
+        """Full recomputation over ``graph`` and the *current* features."""
+
+    @property
+    @abc.abstractmethod
+    def embeddings(self):
+        """Final-layer embeddings for all n vertices."""
+
+    @abc.abstractmethod
+    def state_bytes(self) -> int:
+        """Bytes of persistent cached state (all tiers)."""
+
+
+# ====================================================================== #
+# StreamOrchestrator — the single plan/pack/overlap loop
+# ====================================================================== #
+class StreamOrchestrator:
+    """Drives one :class:`StateBackend` over an update stream.
+
+    Owns the evolving graph snapshot, the refresh cadence, and the paper's
+    §V co-processing schedule: ``apply_stream`` dispatches batch t and then
+    runs host planning of batch t+1 while the substrate executes, syncing
+    only at the end of the stream (and around refreshes).  ``apply_batch``
+    keeps the per-batch API with honest timing (``block=True`` syncs at the
+    timed boundary so ``exec_time_s`` measures completion, not dispatch)."""
+
+    def __init__(self, backend: StateBackend, graph: CSRGraph,
+                 refresh_every: int = 0):
+        self.backend = backend
+        self.graph = graph
+        self.refresh_every = refresh_every
+        self._batches_seen = 0
+
+    # ------------------------------------------------------------------ #
+    def refresh(self) -> None:
+        """Full recomputation (drift reset / MTEC-style refresh)."""
+        self.backend.refresh(self.graph)
+
+    def _apply_graph(self, batch: UpdateBatch) -> CSRGraph:
+        return self.graph.apply_updates(
+            batch.ins_src, batch.ins_dst, batch.del_src, batch.del_dst,
+            batch.ins_weights, batch.ins_etypes,
+        )
+
+    def _after_batch(self, sync_before_refresh: bool = False) -> None:
+        self._batches_seen += 1
+        if self.refresh_every and self._batches_seen % self.refresh_every == 0:
+            self.backend.flush()
+            if sync_before_refresh:
+                jax.block_until_ready(self.backend.sync_arrays())
+            self.refresh()
+
+    # ------------------------------------------------------------------ #
+    # per-batch API (honest timing: block=True syncs at the boundary)
+    # ------------------------------------------------------------------ #
+    def apply_batch(self, batch: UpdateBatch, block: bool = True) -> BatchStats:
+        t0 = time.perf_counter()
+        g_new = self._apply_graph(batch)
+        t1 = time.perf_counter()
+        prep = self.backend.plan(self.graph, g_new, batch)
+        t2 = time.perf_counter()
+        self.backend.dispatch(prep)
+        if block:
+            self.backend.flush()
+            jax.block_until_ready(self.backend.sync_arrays())
+        t3 = time.perf_counter()
+        self.graph = g_new
+        self._after_batch()
+        return BatchStats(
+            inc_edges=prep.n_inc_edges,
+            full_edges=prep.n_full_edges,
+            out_vertices=prep.n_out_rows,
+            plan_time_s=t2 - t1,
+            exec_time_s=t3 - t2,
+            graph_time_s=t1 - t0,
+        )
+
+    # ------------------------------------------------------------------ #
+    # pipelined stream API: plan t+1 on host while the substrate runs t
+    # ------------------------------------------------------------------ #
+    def apply_stream(self, batches: Sequence[UpdateBatch]) -> StreamStats:
+        """Double-buffered batch application (paper §V co-processing).
+
+        Batch t is dispatched; Alg.-4 planning of batch t+1 (host numpy)
+        then runs while the substrate executes.  The only full barrier is
+        the end of the stream (and around refreshes)."""
+        assert self.backend.overlap_capable, "apply_stream requires the fused engine"
+        batches = list(batches)
+        if not batches:
+            return StreamStats([], 0.0, 0.0)
+        t_start = time.perf_counter()
+        stats: List[BatchStats] = []
+        plan_total = 0.0
+
+        tp = time.perf_counter()
+        g_new = self._apply_graph(batches[0])
+        prep = self.backend.plan(self.graph, g_new, batches[0])
+        plan_total += time.perf_counter() - tp
+
+        for i in range(len(batches)):
+            td = time.perf_counter()
+            self.backend.dispatch(prep)  # async: the substrate starts batch i
+            dispatch_s = time.perf_counter() - td
+            self.graph = g_new
+            stats.append(
+                BatchStats(
+                    inc_edges=prep.n_inc_edges,
+                    full_edges=prep.n_full_edges,
+                    out_vertices=prep.n_out_rows,
+                    plan_time_s=0.0,
+                    exec_time_s=dispatch_s,  # dispatch-only; see StreamStats
+                    graph_time_s=0.0,
+                )
+            )
+            if i + 1 < len(batches):
+                tp = time.perf_counter()  # overlapped with device execution
+                nxt = self._apply_graph(batches[i + 1])
+                prep = self.backend.plan(self.graph, nxt, batches[i + 1])
+                g_new = nxt
+                plan_total += time.perf_counter() - tp
+            self._after_batch(sync_before_refresh=True)
+        self.backend.flush()
+        jax.block_until_ready(self.backend.sync_arrays())
+        return StreamStats(stats, time.perf_counter() - t_start, plan_total)
+
+
+# ====================================================================== #
+# DeviceBackend — fused donated in-HBM state (the PR-2 pipelined path)
+# ====================================================================== #
+@dataclasses.dataclass
+class _UnfusedPrep:
+    """Per-layer seed execution path's prepared plan (equivalence reference)."""
+
+    plan: BatchPlan
+    batch: UpdateBatch
+
+    @property
+    def n_inc_edges(self) -> int:
+        return self.plan.total_inc_edges()
+
+    @property
+    def n_full_edges(self) -> int:
+        return self.plan.total_full_edges()
+
+    @property
+    def n_out_rows(self) -> int:
+        return self.plan.total_vertices()
+
+
+class DeviceBackend(StateBackend):
+    """All state device-resident as scratch-extended ``[N+1, ·]`` arrays;
+    each batch runs as one fused, donated L-layer step over a packed plan
+    (:func:`repro.core.incremental.fused_stream_step`).  ``fused=False``
+    preserves the seed per-layer dispatch as the unfused reference."""
+
+    def __init__(
+        self,
+        model: GNNModel,
+        params: Sequence[Params],
+        graph: CSRGraph,
+        x: jax.Array,
+        store_h: bool = True,
+        fused: bool = True,
+        use_pallas_delta: bool = False,
+    ):
+        self.model = model
+        self.params = list(params)
+        self.L = len(self.params)
+        self.store_h = store_h
+        self.fused = fused
+        self.use_pallas_delta = use_pallas_delta
+        # high-water-mark capacity buckets: shrinking batches reuse the
+        # previous PackedLayout instead of retracing the fused step
+        self.hwm = BucketHysteresis()
+        self._upd = jax.jit(model.update)
+        self._init_state(graph, jnp.asarray(x))
+
+    @property
+    def overlap_capable(self) -> bool:
+        return self.fused
+
+    # ------------------------------------------------------------------ #
+    # state: scratch-extended [N+1, ·] device arrays (index n = scratch)
+    # ------------------------------------------------------------------ #
+    def _init_state(self, graph: CSRGraph, x: Optional[jax.Array] = None) -> None:
+        if x is None:
+            x = self.x
+        states = full_forward(self.model, self.params, x, graph)
+        self._h: List[Optional[jax.Array]] = [with_scratch(x)] + [
+            with_scratch(s.h) for s in states
+        ]
+        self._a: List[jax.Array] = [with_scratch(s.a) for s in states]
+        self._nct: List[jax.Array] = [with_scratch(s.nct) for s in states]
+        if not self.store_h:
+            self._drop_h()
+
+    def refresh(self, graph: CSRGraph) -> None:
+        self._init_state(graph)
+
+    def _drop_h(self) -> None:
+        self._h = [self._h[0]] + [None] * self.L
+
+    @property
+    def x(self) -> jax.Array:
+        return self._h[0][:-1]
+
+    @property
+    def h(self) -> List[Optional[jax.Array]]:
+        """Seed-compatible view: per-layer embeddings without scratch rows."""
+        return [None if v is None else v[:-1] for v in self._h]
+
+    @h.setter
+    def h(self, vals: Sequence[Optional[jax.Array]]) -> None:
+        self._h = [None if v is None else with_scratch(v) for v in vals]
+
+    @property
+    def a(self) -> List[jax.Array]:
+        return [v[:-1] for v in self._a]
+
+    @a.setter
+    def a(self, vals: Sequence[jax.Array]) -> None:
+        self._a = [with_scratch(v) for v in vals]
+
+    @property
+    def nct(self) -> List[jax.Array]:
+        return [v[:-1] for v in self._nct]
+
+    @nct.setter
+    def nct(self, vals: Sequence[jax.Array]) -> None:
+        self._nct = [with_scratch(v) for v in vals]
+
+    def reconstruct_h(self) -> List[jax.Array]:
+        """Recomputation-based storage optimization (paper §V-B): rebuild
+        h^l = update(h^{l-1}, a^l) from the cached aggregation states."""
+        h = [self.x]
+        for l in range(self.L):
+            h.append(self._upd(self.params[l], h[l], self._a[l][:-1]))
+        return h
+
+    @property
+    def embeddings(self) -> jax.Array:
+        if self._h[-1] is None:
+            return self.reconstruct_h()[-1]
+        return self._h[-1][:-1]
+
+    def state_bytes(self) -> int:
+        def nb(arr: jax.Array) -> int:
+            return (arr.shape[0] - 1) * int(np.prod(arr.shape[1:] or (1,))) * arr.dtype.itemsize
+
+        total = sum(nb(a) for a in self._a) + sum(nb(c) for c in self._nct)
+        if self.store_h:
+            total += sum(nb(h) for h in self._h[1:] if h is not None)
+        total += nb(self._h[0])
+        return total
+
+    def sync_arrays(self) -> list:
+        return [v for v in (*self._h, *self._a, *self._nct) if v is not None]
+
+    # ------------------------------------------------------------------ #
+    def plan(self, g_old: CSRGraph, g_new: CSRGraph, batch: UpdateBatch):
+        if self.fused:
+            return build_packed_plan(
+                self.model, g_old, g_new, batch, self.L,
+                pallas=self.use_pallas_delta, hwm=self.hwm,
+            )
+        return _UnfusedPrep(build_plan(self.model, g_old, g_new, batch, self.L),
+                            batch)
+
+    def dispatch(self, prep) -> None:
+        if isinstance(prep, _UnfusedPrep):
+            self._execute_unfused(prep.plan, prep.batch)
+        else:
+            self._dispatch_packed(prep)
+
+    # ------------------------------------------------------------------ #
+    def _dispatch_packed(self, packed: PackedPlan) -> None:
+        """One device_put for the whole plan, one fused-step dispatch."""
+        if not self.store_h and self._h[1] is None:
+            h = self.reconstruct_h()
+            self._h = [self._h[0]] + [with_scratch(v) for v in h[1:]]
+        idx, flt, msk, feat_vals, pallas = jax.device_put(
+            (packed.idx, packed.flt, packed.msk, packed.feat_vals, packed.pallas)
+        )
+        with warnings.catch_warnings():
+            # donation is a TPU/GPU aliasing optimization; CPU jit ignores it
+            # with a UserWarning per compile — suppress it here (scoped) so
+            # the CPU hot path stays quiet without touching global filters
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable"
+            )
+            hs, as_, ncts = fused_stream_step(
+                self.model, packed.layout, tuple(self.params),
+                tuple(self._h), tuple(self._a), tuple(self._nct),
+                idx, flt, msk, feat_vals, pallas,
+            )
+        self._h = list(hs)
+        self._a = list(as_)
+        self._nct = list(ncts)
+        if not self.store_h:
+            self._drop_h()
+
+    # ------------------------------------------------------------------ #
+    # unfused seed path (per-layer dispatch) — equivalence reference
+    # ------------------------------------------------------------------ #
+    def _execute_unfused(self, plan: BatchPlan, batch: UpdateBatch) -> None:
+        deg_old = jnp.asarray(plan.deg_old)
+        deg_new = jnp.asarray(plan.deg_new)
+
+        if not self.store_h:
+            self.h = self.reconstruct_h()
+
+        # layer-0 feature updates
+        h0_old = self.h[0]
+        if batch.feat_vertices is not None and batch.feat_vertices.size:
+            h0_new = h0_old.at[jnp.asarray(batch.feat_vertices)].set(
+                jnp.asarray(batch.feat_values, h0_old.dtype)
+            )
+        else:
+            h0_new = h0_old
+
+        h_old = [h0_old] + list(self.h[1:])
+        h_new: List[jax.Array] = [h0_new]
+        a_new: List[jax.Array] = []
+        nct_new: List[jax.Array] = []
+
+        for l, lp in enumerate(plan.layers):
+            an, nn, hn = incremental_layer(
+                self.model,
+                self.params[l],
+                with_scratch(h_old[l]),
+                with_scratch(h_new[l]),
+                deg_old,
+                deg_new,
+                self.a[l],
+                self.nct[l],
+                h_old[l + 1],
+                jnp.asarray(lp.e_src),
+                jnp.asarray(lp.e_dst),
+                jnp.asarray(lp.e_rowidx),
+                jnp.asarray(lp.e_sign),
+                jnp.asarray(lp.e_use_new),
+                jnp.asarray(lp.e_w),
+                jnp.asarray(lp.e_t),
+                jnp.asarray(lp.e_mask),
+                jnp.asarray(lp.touch_rows),
+                jnp.asarray(lp.touch_mask),
+                jnp.asarray(lp.f_rows),
+                jnp.asarray(lp.f_mask),
+                jnp.asarray(lp.f_src),
+                jnp.asarray(lp.f_rowidx),
+                jnp.asarray(lp.f_w),
+                jnp.asarray(lp.f_t),
+                jnp.asarray(lp.f_emask),
+                jnp.asarray(lp.out_rows),
+                jnp.asarray(lp.out_mask),
+            )
+            a_new.append(an)
+            nct_new.append(nn)
+            h_new.append(hn)
+
+        self.h = h_new
+        self.a = a_new
+        self.nct = nct_new
+        if not self.store_h:
+            self._drop_h()
+
+
+# ====================================================================== #
+# OffloadBackend — host-resident state, compact per-layer staging (§V-B)
+# ====================================================================== #
+@dataclasses.dataclass
+class TransferStats:
+    rows_up: int = 0
+    rows_down: int = 0
+    bytes_up: int = 0
+    bytes_down: int = 0
+
+    @property
+    def total_rows(self) -> int:
+        """H2D+D2H row volume — deterministic (no timing noise), so the CI
+        perf gate can bound it tightly (benchmarks/check_regression.py)."""
+        return self.rows_up + self.rows_down
+
+
+_remap = remap_compact  # global vertex ids → compact positions (affected.py)
+
+
+def _override_rows(dst_vals: np.ndarray, dst_rows: np.ndarray,
+                   src_rows: np.ndarray, src_vals: np.ndarray) -> None:
+    """dst_vals[i] ← src_vals[j] where dst_rows[i] == src_rows[j] (vectorized)."""
+    if not src_rows.size or not dst_rows.size:
+        return
+    order = np.argsort(src_rows)
+    pos = np.searchsorted(src_rows[order], dst_rows)
+    pos = np.clip(pos, 0, src_rows.size - 1)
+    hit = src_rows[order][pos] == dst_rows
+    dst_vals[hit] = src_vals[order][pos[hit]]
+
+
+@dataclasses.dataclass
+class _LayerTransfer:
+    """Plan-time (value-independent) compact transfer tables for one layer."""
+
+    need_h: np.ndarray  # global ids of h^{l-1} rows the device needs
+    srows: np.ndarray  # global ids of state rows updated (= out_rows live)
+    e_src: np.ndarray  # remapped into need_h space
+    e_dst: np.ndarray
+    f_src: np.ndarray
+    touch_rows_s: np.ndarray  # remapped into srows space
+    f_rows_s: np.ndarray
+    out_rows_s: np.ndarray
+    f_rows_h: np.ndarray  # remapped into need_h space
+    out_rows_h: np.ndarray
+    deg_old_rows: np.ndarray  # [nh+1] compact degree tables (scratch slot)
+    deg_new_rows: np.ndarray
+
+
+@dataclasses.dataclass
+class _OffloadPrep:
+    """Host-side output of the planning phase for one batch."""
+
+    plan: BatchPlan
+    batch: UpdateBatch
+    transfers: List[_LayerTransfer]
+
+    @property
+    def n_inc_edges(self) -> int:
+        return self.plan.total_inc_edges()
+
+    @property
+    def n_full_edges(self) -> int:
+        return self.plan.total_full_edges()
+
+    @property
+    def n_out_rows(self) -> int:
+        return self.plan.total_vertices()
+
+
+class _DeferredWritebackMixin:
+    """Deferred final-layer write-back shared by the host-resident backends:
+    ``dispatch`` stores the last layer's pending (device → host) write-back
+    and ``flush`` completes it — the orchestrator's next plan runs while the
+    device still executes that layer."""
+
+    _pending = None
+
+    def flush(self) -> None:
+        if self._pending is not None:
+            pending, self._pending = self._pending, None
+            self._writeback(pending)
+
+
+class OffloadBackend(_DeferredWritebackMixin, StateBackend):
+    """NeutronRT-style out-of-memory embedding management (paper §V-B).
+
+    The per-layer state (h, a, nct) lives as **host numpy**; per batch only
+    the compact row sets the plan touches transfer to the device, the same
+    `incremental_layer` kernel runs over compact arrays (the kernel is
+    index-based, so a compact view with remapped indices is exactly
+    equivalent), and all write-backs are grouped.  The final layer's
+    write-back is deferred (``flush``) so batch-t+1 planning overlaps the
+    device's execution of batch t's last layer."""
+
+    def __init__(self, model: GNNModel, params: Sequence[Params],
+                 graph: CSRGraph, x: np.ndarray):
+        self.model = model
+        self.params = list(params)
+        self.L = len(self.params)
+        self.x = np.asarray(x, np.float32)
+        self.transfers = TransferStats()
+        states = full_forward(model, params, jnp.asarray(self.x), graph)
+        self.h: List[np.ndarray] = [self.x.copy()] + [np.array(s.h) for s in states]
+        self.a: List[np.ndarray] = [np.array(s.a) for s in states]
+        self.nct: List[np.ndarray] = [np.array(s.nct) for s in states]
+
+    @property
+    def embeddings(self) -> np.ndarray:
+        self.flush()
+        return self.h[-1]
+
+    def state_bytes(self) -> int:
+        return (sum(a.nbytes for a in self.a) + sum(c.nbytes for c in self.nct)
+                + sum(h.nbytes for h in self.h))
+
+    def sync_arrays(self) -> list:
+        return []  # flush() is the real barrier; state is host numpy
+
+    def refresh(self, graph: CSRGraph) -> None:
+        self.flush()
+        states = full_forward(self.model, self.params, jnp.asarray(self.h[0]),
+                              graph)
+        self.h = [self.h[0]] + [np.array(s.h) for s in states]
+        self.a = [np.array(s.a) for s in states]
+        self.nct = [np.array(s.nct) for s in states]
+
+    # ------------------------------------------------------------------ #
+    # planning phase (host only, value-independent)
+    # ------------------------------------------------------------------ #
+    def plan(self, g_old: CSRGraph, g_new: CSRGraph, batch: UpdateBatch) -> _OffloadPrep:
+        plan = build_plan(self.model, g_old, g_new, batch, self.L)
+        n = g_old.n
+        prev_rows = (
+            np.asarray(batch.feat_vertices, np.int64)
+            if batch.feat_vertices is not None and batch.feat_vertices.size
+            else np.zeros(0, np.int64)
+        )
+        transfers: List[_LayerTransfer] = []
+        for lp in plan.layers:
+            need_h = np.unique(np.concatenate([
+                lp.e_src[lp.e_mask].astype(np.int64),
+                lp.e_dst[lp.e_mask].astype(np.int64),
+                lp.f_src[lp.f_emask].astype(np.int64),
+                lp.f_rows[lp.f_mask].astype(np.int64),
+                lp.out_rows[lp.out_mask].astype(np.int64),
+                prev_rows,
+            ]))
+            srows = lp.out_rows[lp.out_mask].astype(np.int64)
+            nh, ns = need_h.shape[0], srows.shape[0]
+            transfers.append(_LayerTransfer(
+                need_h=need_h,
+                srows=srows,
+                e_src=_remap(lp.e_src, need_h, nh, n),
+                e_dst=_remap(lp.e_dst, need_h, nh, n),
+                f_src=_remap(lp.f_src, need_h, nh, n),
+                touch_rows_s=_remap(lp.touch_rows, srows, ns, n),
+                f_rows_s=_remap(lp.f_rows, srows, ns, n),
+                out_rows_s=_remap(lp.out_rows, srows, ns, n),
+                f_rows_h=_remap(lp.f_rows, need_h, nh, n),
+                out_rows_h=_remap(lp.out_rows, need_h, nh, n),
+                deg_old_rows=np.concatenate(
+                    [plan.deg_old[need_h], [0.0]]).astype(np.float32),
+                deg_new_rows=np.concatenate(
+                    [plan.deg_new[need_h], [0.0]]).astype(np.float32),
+            ))
+            prev_rows = srows
+        return _OffloadPrep(plan=plan, batch=batch, transfers=transfers)
+
+    # ------------------------------------------------------------------ #
+    def dispatch(self, prep: _OffloadPrep) -> None:
+        """Run all layers; the final layer's grouped write-back is deferred
+        to ``flush`` (the paper's "group all updated embeddings and write
+        them back in parallel"), so the orchestrator's next plan overlaps
+        the device's last-layer execution."""
+        self.flush()
+        batch = prep.batch
+        # layer-0 feature updates: keep old values for the delta pass
+        if batch.feat_vertices is not None and batch.feat_vertices.size:
+            prev_rows = np.asarray(batch.feat_vertices, np.int64)
+            prev_old = self.h[0][prev_rows].copy()
+            self.h[0][prev_rows] = batch.feat_values
+        else:
+            prev_rows = np.zeros(0, np.int64)
+            prev_old = np.zeros((0, self.h[0].shape[1]), np.float32)
+
+        pending = None
+        for l, (lp, tr) in enumerate(zip(prep.plan.layers, prep.transfers)):
+            if pending is not None:
+                prev_rows, prev_old = self._writeback(pending)
+            pending = self._layer_dispatch(l, lp, tr, prev_rows, prev_old)
+        self._pending = pending
+
+    def _layer_dispatch(self, l: int, lp: LayerPlan, tr: _LayerTransfer,
+                        prev_rows: np.ndarray, prev_old: np.ndarray):
+        """Gather compact host rows, ship them in ONE device_put, dispatch."""
+        need_h, srows = tr.need_h, tr.srows
+        nh, ns = need_h.shape[0], srows.shape[0]
+        out_old = (self.h[l + 1][srows].copy() if ns
+                   else np.zeros((0, self.h[l + 1].shape[1]), np.float32))
+        if nh == 0 and ns == 0:
+            return (l, srows, out_old, None)
+
+        h_new_rows = self.h[l][need_h]  # host already holds the NEW h^{l-1}
+        h_old_rows = h_new_rows.copy()
+        _override_rows(h_old_rows, need_h, prev_rows, prev_old)
+
+        a_rows = self.a[l][srows]
+        nct_rows = self.nct[l][srows]
+        h_cur_rows = self.h[l + 1][srows]
+
+        self.transfers.rows_up += 2 * nh + 3 * ns
+        self.transfers.bytes_up += (2 * h_new_rows.nbytes + a_rows.nbytes
+                                    + nct_rows.nbytes + h_cur_rows.nbytes)
+
+        # one batched H2D transfer for the whole layer (packed-plan analogue)
+        dev = jax.device_put((
+            h_old_rows, h_new_rows, tr.deg_old_rows, tr.deg_new_rows,
+            a_rows, nct_rows, h_cur_rows,
+            tr.e_src, tr.e_dst, lp.e_rowidx, lp.e_sign, lp.e_use_new,
+            lp.e_w, lp.e_t, lp.e_mask,
+            tr.touch_rows_s, lp.touch_mask,
+            tr.f_rows_s, lp.f_mask, tr.f_src, lp.f_rowidx, lp.f_w,
+            lp.f_t, lp.f_emask,
+            tr.out_rows_s, lp.out_mask, tr.f_rows_h, tr.out_rows_h,
+        ))
+        (h_old_d, h_new_d, deg_old_d, deg_new_d, a_d, nct_d, h_cur_d,
+         e_src, e_dst, e_rowidx, e_sign, e_use_new, e_w, e_t, e_mask,
+         touch_rows_s, touch_mask, f_rows_s, f_mask, f_src, f_rowidx, f_w,
+         f_t, f_emask, out_rows_s, out_mask, f_rows_h, out_rows_h) = dev
+
+        outs = incremental_layer(
+            self.model, self.params[l],
+            with_scratch(h_old_d), with_scratch(h_new_d),
+            deg_old_d, deg_new_d, a_d, nct_d, h_cur_d,
+            e_src, e_dst, e_rowidx, e_sign, e_use_new, e_w, e_t, e_mask,
+            touch_rows_s, touch_mask,
+            f_rows_s, f_mask, f_src, f_rowidx, f_w, f_t, f_emask,
+            out_rows_s, out_mask,
+            f_rows_h=f_rows_h, out_rows_h=out_rows_h,
+        )
+        return (l, srows, out_old, outs)
+
+    def _writeback(self, pending) -> Tuple[np.ndarray, np.ndarray]:
+        """Grouped parallel write-back (device sync point); returns the
+        (rows, old values) pair the next layer's delta pass needs."""
+        l, srows, out_old, outs = pending
+        if outs is None:
+            return srows, out_old
+        a_new, nct_new, h_new = (np.asarray(o) for o in outs)
+        self.a[l][srows] = a_new
+        self.nct[l][srows] = nct_new
+        self.h[l + 1][srows] = h_new
+        self.transfers.rows_down += 3 * srows.shape[0]
+        self.transfers.bytes_down += int(a_new.nbytes + nct_new.nbytes + h_new.nbytes)
+        return srows, out_old
+
+
+# ====================================================================== #
+# ShardBackend — row-sharded device state over the repro.dist mesh
+# ====================================================================== #
+class _StreamMeshMixin:
+    """Shared 1-D stream-mesh setup for the two row-sharded backends:
+    resolves (mesh, axis, S, rows_per) and the state/plan/replicated
+    NamedShardings from one ``ShardingConfig``."""
+
+    def _init_stream_mesh(self, graph: CSRGraph, mesh, num_shards, shcfg) -> None:
+        from repro.dist.sharding import ShardingConfig, stream_mesh, stream_state_specs
+
+        self.shcfg = shcfg or ShardingConfig()
+        self.mesh = mesh if mesh is not None else stream_mesh(num_shards, self.shcfg)
+        self.axis = tuple(self.mesh.axis_names)[0]
+        self.S = int(self.mesh.shape[self.axis])
+        self.rows_per = shard_rows(graph.n, self.S)
+        specs = stream_state_specs(self.mesh, self.shcfg)
+        self._state_sh = specs["state"]
+        self._plan_sh = specs["plan"]
+        self._rep_sh = specs["replicated"]
+
+
+class ShardBackend(_StreamMeshMixin, StateBackend):
+    """Scratch-extended per-layer state block row-partitioned over a 1-D
+    ``repro.dist`` mesh as stacked ``[S, rows_per+1, ·]`` arrays; each
+    batch's plan is partitioned per shard at plan time
+    (:func:`repro.core.affected.shard_plan`) and runs as one donated,
+    shard_map'd L-layer step (:func:`repro.core.incremental.sharded_step_fn`)
+    with one frontier-bounded ``psum`` per layer."""
+
+    def __init__(
+        self,
+        model: GNNModel,
+        params: Sequence[Params],
+        graph: CSRGraph,
+        x: np.ndarray,
+        mesh=None,
+        num_shards: Optional[int] = None,
+        shcfg=None,
+        use_pallas_delta: bool = False,
+    ):
+        self.model = model
+        self.L = len(list(params))
+        self.n = graph.n
+        self.use_pallas_delta = use_pallas_delta
+        self._init_stream_mesh(graph, mesh, num_shards, shcfg)
+        self._params_host = list(params)
+        # step inputs must all live on the mesh: replicate params once
+        self.params = jax.device_put(tuple(params), self._rep_sh)
+        self._step = sharded_step_fn(model, self.mesh, self.axis)
+        self.hwm = BucketHysteresis()
+        self.halo_rows_total = 0
+        self._x_host = np.asarray(x, np.float32)
+        self._init_state(graph)
+
+    # ------------------------------------------------------------------ #
+    # state: stacked [S, rows_per+1, ·] blocks (last local row = scratch)
+    # ------------------------------------------------------------------ #
+    def _to_blocks(self, arr) -> jax.Array:
+        flat = np.asarray(arr, np.float32)
+        out = np.zeros((self.S, self.rows_per + 1) + flat.shape[1:], np.float32)
+        for s in range(self.S):
+            lo = s * self.rows_per
+            hi = min(self.n, lo + self.rows_per)
+            if hi > lo:
+                out[s, : hi - lo] = flat[lo:hi]
+        return jax.device_put(out, self._state_sh)
+
+    def _from_blocks(self, blocks: jax.Array) -> np.ndarray:
+        arr = np.asarray(blocks)[:, : self.rows_per]
+        return arr.reshape(self.S * self.rows_per, *arr.shape[2:])[: self.n]
+
+    def _init_state(self, graph: CSRGraph, x: Optional[np.ndarray] = None) -> None:
+        if x is None:
+            x = self._x_host
+        states = full_forward(self.model, self._params_host,
+                              jnp.asarray(x), graph)
+        self._h: List[jax.Array] = [self._to_blocks(x)] + [
+            self._to_blocks(s.h) for s in states
+        ]
+        self._a: List[jax.Array] = [self._to_blocks(s.a) for s in states]
+        self._nct: List[jax.Array] = [self._to_blocks(s.nct) for s in states]
+
+    def refresh(self, graph: CSRGraph) -> None:
+        """Full recomputation (drift reset) over the current snapshot and the
+        *current* features — layer-0 feature updates applied during the
+        stream live in the h[0] blocks, not in the construction-time x."""
+        self._init_state(graph, self._from_blocks(self._h[0]))
+
+    @property
+    def embeddings(self) -> np.ndarray:
+        return self._from_blocks(self._h[-1])
+
+    @property
+    def h(self) -> List[np.ndarray]:
+        return [self._from_blocks(v) for v in self._h]
+
+    @property
+    def a(self) -> List[np.ndarray]:
+        return [self._from_blocks(v) for v in self._a]
+
+    @property
+    def nct(self) -> List[np.ndarray]:
+        return [self._from_blocks(v) for v in self._nct]
+
+    def state_bytes(self) -> int:
+        return sum(int(np.prod(v.shape)) * 4 for v in (*self._h, *self._a, *self._nct))
+
+    def sync_arrays(self) -> list:
+        return [*self._h, *self._a, *self._nct]
+
+    # ------------------------------------------------------------------ #
+    def plan(self, g_old: CSRGraph, g_new: CSRGraph, batch: UpdateBatch) -> ShardedPlan:
+        plan = build_plan(self.model, g_old, g_new, batch, self.L)
+        return shard_plan(plan, self.S, batch.feat_vertices, batch.feat_values,
+                          hwm=self.hwm, pallas=self.use_pallas_delta)
+
+    def dispatch(self, sp: ShardedPlan) -> None:
+        """One sharded device_put (each device gets only its plan slice),
+        one shard_map'd fused-step dispatch."""
+        idx_sh, flt_sh, msk_sh, pallas_sh = jax.device_put(
+            (sp.idx_sh, sp.flt_sh, sp.msk_sh, sp.pallas_sh or ()), self._plan_sh
+        )
+        fv = sp.feat_vals if sp.feat_vals is not None else np.zeros(
+            (0, self._x_host.shape[1]), np.float32
+        )
+        idx_rep, msk_rep, feat_vals = jax.device_put(
+            (sp.idx_rep, sp.msk_rep, fv), self._rep_sh
+        )
+        with warnings.catch_warnings():
+            # donation is a TPU/GPU aliasing optimization; CPU jit ignores it
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable"
+            )
+            hs, as_, ncts = self._step(
+                sp.layout, self.params,
+                tuple(self._h), tuple(self._a), tuple(self._nct),
+                idx_sh, flt_sh, msk_sh, idx_rep, msk_rep, feat_vals, pallas_sh,
+            )
+        self._h = list(hs)
+        self._a = list(as_)
+        self._nct = list(ncts)
+        self.halo_rows_total += sp.n_halo_rows
+
+
+# ====================================================================== #
+# ShardedOffloadBackend — the sharded offload hybrid (§V-B at mesh scale)
+# ====================================================================== #
+@dataclasses.dataclass
+class _HybridPrep:
+    """Host-side output of hybrid planning for one batch."""
+
+    plan: BatchPlan
+    batch: UpdateBatch
+    layers: List[HybridLayerPlan]
+
+    @property
+    def n_inc_edges(self) -> int:
+        return self.plan.total_inc_edges()
+
+    @property
+    def n_full_edges(self) -> int:
+        return self.plan.total_full_edges()
+
+    @property
+    def n_out_rows(self) -> int:
+        return self.plan.total_vertices()
+
+
+class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBackend):
+    """Row sharding × host-resident state: the full NeutronRT GPU-CPU
+    co-processing story at mesh scale (ROADMAP "Sharded offload hybrid").
+
+    Every shard keeps **only its own row block** of the per-layer state
+    host-resident (stacked ``[S, rows_per, ·]`` numpy).  Per batch and
+    layer, the plan is partitioned by destination-row owner (scatters stay
+    owner-local) and each shard stages a compact ``[halo | local]``
+    workspace to its device: the rows it needs but does not own (the halo)
+    are gathered from the other shards' *host* blocks — the host is the
+    exchange medium, so no device collective runs — together with its own
+    affected rows.  Device residency is therefore O(per-shard affected
+    subgraph), never O(V): the persistent state never touches HBM.
+
+    The device step is one shard_map'd compact layer over the stacked
+    staging buffers (:func:`repro.core.incremental.hybrid_layer_step_fn`),
+    L dispatches per batch, with the final layer's grouped write-back
+    deferred to ``flush`` for plan/execute overlap."""
+
+    def __init__(
+        self,
+        model: GNNModel,
+        params: Sequence[Params],
+        graph: CSRGraph,
+        x: np.ndarray,
+        mesh=None,
+        num_shards: Optional[int] = None,
+        shcfg=None,
+    ):
+        self.model = model
+        self.params = list(params)
+        self.L = len(self.params)
+        self.n = graph.n
+        self._init_stream_mesh(graph, mesh, num_shards, shcfg)
+        self._params_dev = jax.device_put(tuple(params), self._rep_sh)
+        self._step = hybrid_layer_step_fn(model, self.mesh, self.axis)
+        self.hwm = BucketHysteresis()
+        self.transfers = TransferStats()
+        # per-shard H2D+D2H row volume (the hybrid's scaling metric: each
+        # shard's traffic is bounded by its own affected subgraph)
+        self.per_shard_rows = np.zeros(self.S, np.int64)
+        # peak bytes simultaneously staged on the mesh for one layer step —
+        # the backend's entire HBM footprint (state is host-resident)
+        self.peak_device_bytes = 0
+        self._init_state(graph, np.asarray(x, np.float32))
+
+    # ------------------------------------------------------------------ #
+    # state: host-resident per-shard row blocks [S, rows_per, ·]
+    # ------------------------------------------------------------------ #
+    def _to_blocks(self, arr: np.ndarray) -> np.ndarray:
+        flat = np.asarray(arr, np.float32)
+        out = np.zeros((self.S, self.rows_per) + flat.shape[1:], np.float32)
+        for s in range(self.S):
+            lo = s * self.rows_per
+            hi = min(self.n, lo + self.rows_per)
+            if hi > lo:
+                out[s, : hi - lo] = flat[lo:hi]
+        return out
+
+    def _from_blocks(self, blocks: np.ndarray) -> np.ndarray:
+        return blocks.reshape(self.S * self.rows_per, *blocks.shape[2:])[: self.n]
+
+    def _gather_rows(self, blocks: np.ndarray, rows: np.ndarray) -> np.ndarray:
+        """Gather global rows out of the per-shard host blocks."""
+        return blocks[rows // self.rows_per, rows % self.rows_per]
+
+    def _scatter_rows(self, blocks: np.ndarray, rows: np.ndarray,
+                      vals: np.ndarray) -> None:
+        blocks[rows // self.rows_per, rows % self.rows_per] = vals
+
+    def _init_state(self, graph: CSRGraph, x: Optional[np.ndarray] = None) -> None:
+        if x is None:
+            x = self._from_blocks(self.h[0])
+        states = full_forward(self.model, self.params, jnp.asarray(x), graph)
+        self.h: List[np.ndarray] = [self._to_blocks(x)] + [
+            self._to_blocks(np.asarray(s.h)) for s in states
+        ]
+        self.a: List[np.ndarray] = [self._to_blocks(np.asarray(s.a)) for s in states]
+        self.nct: List[np.ndarray] = [self._to_blocks(np.asarray(s.nct)) for s in states]
+
+    def refresh(self, graph: CSRGraph) -> None:
+        self.flush()
+        self._init_state(graph)
+
+    @property
+    def embeddings(self) -> np.ndarray:
+        self.flush()
+        return self._from_blocks(self.h[-1])
+
+    def state_bytes(self) -> int:
+        return sum(v.nbytes for v in (*self.h, *self.a, *self.nct))
+
+    def sync_arrays(self) -> list:
+        return []  # flush() is the real barrier; state is host numpy
+
+    # ------------------------------------------------------------------ #
+    # planning phase (host only, value-independent)
+    # ------------------------------------------------------------------ #
+    def plan(self, g_old: CSRGraph, g_new: CSRGraph, batch: UpdateBatch) -> _HybridPrep:
+        plan = build_plan(self.model, g_old, g_new, batch, self.L)
+        hp = hybrid_plan(plan, self.S, hwm=self.hwm)
+        return _HybridPrep(plan=plan, batch=batch, layers=hp.layers)
+
+    # ------------------------------------------------------------------ #
+    def dispatch(self, prep: _HybridPrep) -> None:
+        self.flush()
+        batch = prep.batch
+        if batch.feat_vertices is not None and batch.feat_vertices.size:
+            prev_rows = np.asarray(batch.feat_vertices, np.int64)
+            prev_old = self._gather_rows(self.h[0], prev_rows).copy()
+            self._scatter_rows(self.h[0], prev_rows,
+                               np.asarray(batch.feat_values, np.float32))
+        else:
+            prev_rows = np.zeros(0, np.int64)
+            prev_old = np.zeros((0, self.h[0].shape[2]), np.float32)
+
+        pending = None
+        for l, tr in enumerate(prep.layers):
+            if pending is not None:
+                prev_rows, prev_old = self._writeback(pending)
+            pending = self._layer_dispatch(l, tr, prev_rows, prev_old)
+        self._pending = pending
+
+    def _layer_dispatch(self, l: int, tr: HybridLayerPlan,
+                        prev_rows: np.ndarray, prev_old: np.ndarray):
+        """Stage each shard's compact [halo|local] workspace, one sharded
+        device_put, one shard_map'd compact layer step."""
+        S, nh_cap, ns_cap = self.S, tr.nh_cap, tr.ns_cap
+        live_h = tr.need_mask
+        live_s = tr.srows_mask
+        srows_flat = tr.srows[live_s]
+        out_old = self._gather_rows(self.h[l + 1], srows_flat).copy()
+
+        # ---- host gathers: new h^{l-1} rows (+ old view), state rows ----
+        h_new_rows = self._gather_rows(self.h[l], tr.need_h.reshape(-1)).reshape(
+            S, nh_cap, -1)
+        h_new_rows[~live_h] = 0.0
+        h_old_rows = h_new_rows.copy()
+        flat_old = h_old_rows.reshape(S * nh_cap, -1)
+        _override_rows(flat_old, np.where(live_h, tr.need_h, -1).reshape(-1),
+                       prev_rows, prev_old)
+        h_old_rows = flat_old.reshape(S, nh_cap, -1)
+
+        def gather_state(blocks):
+            rows = self._gather_rows(blocks, tr.srows.reshape(-1))
+            rows = rows.reshape(S, ns_cap, -1)
+            rows[~live_s] = 0.0
+            return rows
+
+        a_rows = gather_state(self.a[l])
+        nct_rows = gather_state(self.nct[l])
+        h_cur_rows = gather_state(self.h[l + 1])
+
+        nh_live = live_h.sum(axis=1)
+        ns_live = live_s.sum(axis=1)
+        self.transfers.rows_up += int(2 * nh_live.sum() + 3 * ns_live.sum())
+        self.transfers.bytes_up += (2 * h_new_rows.nbytes + a_rows.nbytes
+                                    + nct_rows.nbytes + h_cur_rows.nbytes)
+        self.per_shard_rows += 2 * nh_live + 3 * ns_live
+
+        # one sharded H2D transfer: each device receives only its slice
+        dev = jax.device_put(
+            (h_old_rows, h_new_rows, a_rows, nct_rows, h_cur_rows,
+             tr.idx_sh, tr.flt_sh, tr.msk_sh),
+            self._plan_sh,
+        )
+        self.peak_device_bytes = max(
+            self.peak_device_bytes, sum(int(d.nbytes) for d in dev)
+        )
+        (h_old_d, h_new_d, a_d, nct_d, h_cur_d, idx_d, flt_d, msk_d) = dev
+        outs = self._step(tr.layout, self._params_dev[l],
+                          h_old_d, h_new_d, a_d, nct_d, h_cur_d,
+                          idx_d, flt_d, msk_d)
+        return (l, tr, srows_flat, out_old, outs)
+
+    def _writeback(self, pending) -> Tuple[np.ndarray, np.ndarray]:
+        """Grouped per-shard write-back (device sync point); returns the
+        (rows, old values) pair the next layer's delta pass needs — the
+        host blocks are the halo-exchange medium between layers."""
+        l, tr, srows_flat, out_old, outs = pending
+        if outs is None or srows_flat.size == 0:
+            if outs is not None:
+                jax.block_until_ready(outs)
+            return srows_flat, out_old
+        a_new, nct_new, h_new = (np.asarray(o) for o in outs)
+        live = tr.srows_mask
+        self._scatter_rows(self.a[l], srows_flat, a_new[live])
+        self._scatter_rows(self.nct[l], srows_flat, nct_new[live])
+        self._scatter_rows(self.h[l + 1], srows_flat, h_new[live])
+        n_down = int(srows_flat.shape[0])
+        self.transfers.rows_down += 3 * n_down
+        self.transfers.bytes_down += int(a_new[live].nbytes + nct_new[live].nbytes
+                                         + h_new[live].nbytes)
+        self.per_shard_rows += 3 * live.sum(axis=1)
+        return srows_flat, out_old

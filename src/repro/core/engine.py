@@ -1,10 +1,12 @@
 """Pipelined streaming incremental-RTEC engine (host/device co-processing).
 
-Holds the evolving graph snapshot and the per-layer historical results
-(h, a, nct) as scratch-extended device arrays, plans each update batch on
-the host (Alg. 4) into a packed transfer format, and executes the reordered
-incremental workflow (Alg. 1) on device as **one fused, donated L-layer
-step** per batch (:func:`repro.core.incremental.fused_stream_step`):
+Thin facade over the residency-backend architecture
+(:mod:`repro.core.backend`): a :class:`~repro.core.backend.StreamOrchestrator`
+owns the plan/pack/overlap loop (batch-t+1 host planning overlapped with
+batch-t device execution, honest :class:`StreamStats` timing, refresh
+cadence) and a :class:`~repro.core.backend.DeviceBackend` owns the state —
+scratch-extended ``[N+1, ·]`` device arrays updated by one fused, donated
+L-layer step per batch (:func:`repro.core.incremental.fused_stream_step`):
 
 * **Packed plans** — all per-layer index/mask/weight arrays ship as three
   contiguous buffers in a single ``jax.device_put`` per batch instead of
@@ -26,59 +28,20 @@ execution path as the unfused reference for equivalence tests.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-import warnings
 from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.affected import (
-    BatchPlan,
-    BucketHysteresis,
-    PackedPlan,
-    build_packed_plan,
-    build_plan,
+from repro.core.backend import (  # noqa: F401  (BatchStats/StreamStats re-export)
+    BatchStats,
+    DeviceBackend,
+    StreamOrchestrator,
+    StreamStats,
 )
-from repro.core.full import full_forward
-from repro.core.incremental import fused_stream_step, incremental_layer, with_scratch
 from repro.core.operators import GNNModel, Params
 from repro.graph.csr import CSRGraph
 from repro.graph.streaming import UpdateBatch
-
-
-@dataclasses.dataclass
-class BatchStats:
-    inc_edges: int
-    full_edges: int
-    out_vertices: int
-    plan_time_s: float
-    exec_time_s: float
-    graph_time_s: float
-
-    @property
-    def edges_processed(self) -> int:
-        return self.inc_edges + self.full_edges
-
-
-@dataclasses.dataclass
-class StreamStats:
-    """Aggregate result of a pipelined :meth:`RTECEngine.apply_stream` run.
-
-    ``wall_s`` is honest end-to-end time including the final device sync;
-    per-batch ``exec_time_s`` entries are dispatch-only (execution overlaps
-    the next batch's planning, so per-batch completion is unobservable
-    without breaking the pipeline)."""
-
-    batches: List[BatchStats]
-    wall_s: float
-    plan_s: float  # total host planning time (hidden behind device exec)
-
-    @property
-    def mean_batch_s(self) -> float:
-        return self.wall_s / max(1, len(self.batches))
 
 
 class RTECEngine:
@@ -93,284 +56,107 @@ class RTECEngine:
         fused: bool = True,
         use_pallas_delta: bool = False,
     ):
-        self.model = model
-        self.params = list(params)
-        self.L = len(self.params)
-        self.graph = graph
-        self.store_h = store_h
-        self.refresh_every = refresh_every
-        self.fused = fused
-        self.use_pallas_delta = use_pallas_delta
-        # high-water-mark capacity buckets: shrinking batches reuse the
-        # previous PackedLayout instead of retracing the fused step
-        self._hwm = BucketHysteresis()
-        self._batches_seen = 0
-        self._upd = jax.jit(model.update)
-        self._init_state(jnp.asarray(x))
+        self._backend = DeviceBackend(
+            model, params, graph, jnp.asarray(x),
+            store_h=store_h, fused=fused, use_pallas_delta=use_pallas_delta,
+        )
+        self._orch = StreamOrchestrator(self._backend, graph,
+                                        refresh_every=refresh_every)
 
     # ------------------------------------------------------------------ #
-    # state: scratch-extended [N+1, ·] device arrays (index n = scratch)
+    # public API: delegates to orchestrator (control) + backend (state)
     # ------------------------------------------------------------------ #
-    def _init_state(self, x: Optional[jax.Array] = None) -> None:
-        if x is None:
-            x = self.x
-        states = full_forward(self.model, self.params, x, self.graph)
-        self._h: List[Optional[jax.Array]] = [with_scratch(x)] + [
-            with_scratch(s.h) for s in states
-        ]
-        self._a: List[jax.Array] = [with_scratch(s.a) for s in states]
-        self._nct: List[jax.Array] = [with_scratch(s.nct) for s in states]
-        if not self.store_h:
-            self._drop_h()
+    def apply_batch(self, batch: UpdateBatch, block: bool = True) -> BatchStats:
+        return self._orch.apply_batch(batch, block=block)
+
+    def apply_stream(self, batches: Sequence[UpdateBatch]) -> StreamStats:
+        return self._orch.apply_stream(batches)
 
     def refresh(self) -> None:
         """Full recomputation (drift reset / MTEC-style refresh)."""
-        self._init_state()
+        self._orch.refresh()
 
-    def _drop_h(self) -> None:
-        self._h = [self._h[0]] + [None] * self.L
+    # ------------------------------------------------------------------ #
+    @property
+    def model(self) -> GNNModel:
+        return self._backend.model
 
     @property
+    def params(self) -> List[Params]:
+        return self._backend.params
+
+    @property
+    def L(self) -> int:
+        return self._backend.L
+
+    @property
+    def graph(self) -> CSRGraph:
+        return self._orch.graph
+
+    @graph.setter
+    def graph(self, g: CSRGraph) -> None:
+        self._orch.graph = g
+
+    @property
+    def refresh_every(self) -> int:
+        return self._orch.refresh_every
+
+    @property
+    def store_h(self) -> bool:
+        return self._backend.store_h
+
+    @property
+    def fused(self) -> bool:
+        return self._backend.fused
+
+    @property
+    def use_pallas_delta(self) -> bool:
+        return self._backend.use_pallas_delta
+
+    @property
+    def _hwm(self):
+        return self._backend.hwm
+
+    # ------------------------------------------------------------------ #
+    # state views (seed-compatible: no scratch rows)
+    # ------------------------------------------------------------------ #
+    @property
     def x(self) -> jax.Array:
-        return self._h[0][:-1]
+        return self._backend.x
 
     @property
     def h(self) -> List[Optional[jax.Array]]:
-        """Seed-compatible view: per-layer embeddings without scratch rows."""
-        return [None if v is None else v[:-1] for v in self._h]
+        return self._backend.h
 
     @h.setter
     def h(self, vals: Sequence[Optional[jax.Array]]) -> None:
-        self._h = [None if v is None else with_scratch(v) for v in vals]
+        self._backend.h = vals
 
     @property
     def a(self) -> List[jax.Array]:
-        return [v[:-1] for v in self._a]
+        return self._backend.a
 
     @a.setter
     def a(self, vals: Sequence[jax.Array]) -> None:
-        self._a = [with_scratch(v) for v in vals]
+        self._backend.a = vals
 
     @property
     def nct(self) -> List[jax.Array]:
-        return [v[:-1] for v in self._nct]
+        return self._backend.nct
 
     @nct.setter
     def nct(self, vals: Sequence[jax.Array]) -> None:
-        self._nct = [with_scratch(v) for v in vals]
-
-    def _reconstruct_h(self) -> List[jax.Array]:
-        """Recomputation-based storage optimization (paper §V-B): rebuild
-        h^l = update(h^{l-1}, a^l) from the cached aggregation states."""
-        h = [self.x]
-        for l in range(self.L):
-            h.append(self._upd(self.params[l], h[l], self._a[l][:-1]))
-        return h
+        self._backend.nct = vals
 
     @property
     def embeddings(self) -> jax.Array:
-        if self._h[-1] is None:
-            return self._reconstruct_h()[-1]
-        return self._h[-1][:-1]
+        return self._backend.embeddings
+
+    def _reconstruct_h(self) -> List[jax.Array]:
+        return self._backend.reconstruct_h()
 
     def state_bytes(self) -> int:
-        def nb(arr: jax.Array) -> int:
-            return (arr.shape[0] - 1) * int(np.prod(arr.shape[1:] or (1,))) * arr.dtype.itemsize
-
-        total = sum(nb(a) for a in self._a) + sum(nb(c) for c in self._nct)
-        if self.store_h:
-            total += sum(nb(h) for h in self._h[1:] if h is not None)
-        total += nb(self._h[0])
-        return total
+        return self._backend.state_bytes()
 
     def _sync_arrays(self):
-        return [v for v in (*self._h, *self._a, *self._nct) if v is not None]
-
-    # ------------------------------------------------------------------ #
-    # per-batch API (honest timing: block=True syncs at the boundary)
-    # ------------------------------------------------------------------ #
-    def apply_batch(self, batch: UpdateBatch, block: bool = True) -> BatchStats:
-        t0 = time.perf_counter()
-        g_new = self.graph.apply_updates(
-            batch.ins_src, batch.ins_dst, batch.del_src, batch.del_dst,
-            batch.ins_weights, batch.ins_etypes,
-        )
-        t1 = time.perf_counter()
-        if self.fused:
-            packed = build_packed_plan(
-                self.model, self.graph, g_new, batch, self.L,
-                pallas=self.use_pallas_delta, hwm=self._hwm,
-            )
-            t2 = time.perf_counter()
-            self._dispatch_packed(packed)
-            counters = (packed.n_inc_edges, packed.n_full_edges, packed.n_out_rows)
-        else:
-            plan = build_plan(self.model, self.graph, g_new, batch, self.L)
-            t2 = time.perf_counter()
-            self._execute_unfused(plan, batch)
-            counters = (plan.total_inc_edges(), plan.total_full_edges(), plan.total_vertices())
-        if block:
-            jax.block_until_ready(self._sync_arrays())
-        t3 = time.perf_counter()
-        self.graph = g_new
-        self._batches_seen += 1
-        if self.refresh_every and self._batches_seen % self.refresh_every == 0:
-            self.refresh()
-        return BatchStats(
-            inc_edges=counters[0],
-            full_edges=counters[1],
-            out_vertices=counters[2],
-            plan_time_s=t2 - t1,
-            exec_time_s=t3 - t2,
-            graph_time_s=t1 - t0,
-        )
-
-    # ------------------------------------------------------------------ #
-    # pipelined stream API: plan t+1 on host while the device executes t
-    # ------------------------------------------------------------------ #
-    def apply_stream(self, batches: Sequence[UpdateBatch]) -> StreamStats:
-        """Double-buffered batch application (paper §V co-processing).
-
-        Batch t's fused step is dispatched asynchronously; Alg.-4 planning of
-        batch t+1 (host numpy) then runs while the device executes.  The only
-        device sync is at the end of the stream (and around refreshes)."""
-        assert self.fused, "apply_stream requires the fused engine"
-        batches = list(batches)
-        if not batches:
-            return StreamStats([], 0.0, 0.0)
-        t_start = time.perf_counter()
-        stats: List[BatchStats] = []
-        plan_total = 0.0
-
-        tp = time.perf_counter()
-        g_new, packed = self._plan_batch(batches[0])
-        plan_total += time.perf_counter() - tp
-
-        for i in range(len(batches)):
-            td = time.perf_counter()
-            self._dispatch_packed(packed)  # async: device starts batch i
-            dispatch_s = time.perf_counter() - td
-            self.graph = g_new
-            self._batches_seen += 1
-            stats.append(
-                BatchStats(
-                    inc_edges=packed.n_inc_edges,
-                    full_edges=packed.n_full_edges,
-                    out_vertices=packed.n_out_rows,
-                    plan_time_s=0.0,
-                    exec_time_s=dispatch_s,  # dispatch-only; see StreamStats
-                    graph_time_s=0.0,
-                )
-            )
-            if i + 1 < len(batches):
-                tp = time.perf_counter()  # overlapped with device execution
-                g_new, packed = self._plan_batch(batches[i + 1])
-                plan_total += time.perf_counter() - tp
-            if self.refresh_every and self._batches_seen % self.refresh_every == 0:
-                jax.block_until_ready(self._sync_arrays())
-                self.refresh()
-        jax.block_until_ready(self._sync_arrays())
-        return StreamStats(stats, time.perf_counter() - t_start, plan_total)
-
-    def _plan_batch(self, batch: UpdateBatch):
-        g_new = self.graph.apply_updates(
-            batch.ins_src, batch.ins_dst, batch.del_src, batch.del_dst,
-            batch.ins_weights, batch.ins_etypes,
-        )
-        packed = build_packed_plan(
-            self.model, self.graph, g_new, batch, self.L,
-            pallas=self.use_pallas_delta, hwm=self._hwm,
-        )
-        return g_new, packed
-
-    # ------------------------------------------------------------------ #
-    def _dispatch_packed(self, packed: PackedPlan) -> None:
-        """One device_put for the whole plan, one fused-step dispatch."""
-        if not self.store_h and self._h[1] is None:
-            h = self._reconstruct_h()
-            self._h = [self._h[0]] + [with_scratch(v) for v in h[1:]]
-        idx, flt, msk, feat_vals, pallas = jax.device_put(
-            (packed.idx, packed.flt, packed.msk, packed.feat_vals, packed.pallas)
-        )
-        with warnings.catch_warnings():
-            # donation is a TPU/GPU aliasing optimization; CPU jit ignores it
-            # with a UserWarning per compile — suppress it here (scoped) so
-            # the CPU hot path stays quiet without touching global filters
-            warnings.filterwarnings(
-                "ignore", message="Some donated buffers were not usable"
-            )
-            hs, as_, ncts = fused_stream_step(
-                self.model, packed.layout, tuple(self.params),
-                tuple(self._h), tuple(self._a), tuple(self._nct),
-                idx, flt, msk, feat_vals, pallas,
-            )
-        self._h = list(hs)
-        self._a = list(as_)
-        self._nct = list(ncts)
-        if not self.store_h:
-            self._drop_h()
-
-    # ------------------------------------------------------------------ #
-    # unfused seed path (per-layer dispatch) — equivalence reference
-    # ------------------------------------------------------------------ #
-    def _execute_unfused(self, plan: BatchPlan, batch: UpdateBatch) -> None:
-        deg_old = jnp.asarray(plan.deg_old)
-        deg_new = jnp.asarray(plan.deg_new)
-
-        if not self.store_h:
-            self.h = self._reconstruct_h()
-
-        # layer-0 feature updates
-        h0_old = self.h[0]
-        if batch.feat_vertices is not None and batch.feat_vertices.size:
-            h0_new = h0_old.at[jnp.asarray(batch.feat_vertices)].set(
-                jnp.asarray(batch.feat_values, h0_old.dtype)
-            )
-        else:
-            h0_new = h0_old
-
-        h_old = [h0_old] + list(self.h[1:])
-        h_new: List[jax.Array] = [h0_new]
-        a_new: List[jax.Array] = []
-        nct_new: List[jax.Array] = []
-
-        for l, lp in enumerate(plan.layers):
-            an, nn, hn = incremental_layer(
-                self.model,
-                self.params[l],
-                with_scratch(h_old[l]),
-                with_scratch(h_new[l]),
-                deg_old,
-                deg_new,
-                self.a[l],
-                self.nct[l],
-                h_old[l + 1],
-                jnp.asarray(lp.e_src),
-                jnp.asarray(lp.e_dst),
-                jnp.asarray(lp.e_rowidx),
-                jnp.asarray(lp.e_sign),
-                jnp.asarray(lp.e_use_new),
-                jnp.asarray(lp.e_w),
-                jnp.asarray(lp.e_t),
-                jnp.asarray(lp.e_mask),
-                jnp.asarray(lp.touch_rows),
-                jnp.asarray(lp.touch_mask),
-                jnp.asarray(lp.f_rows),
-                jnp.asarray(lp.f_mask),
-                jnp.asarray(lp.f_src),
-                jnp.asarray(lp.f_rowidx),
-                jnp.asarray(lp.f_w),
-                jnp.asarray(lp.f_t),
-                jnp.asarray(lp.f_emask),
-                jnp.asarray(lp.out_rows),
-                jnp.asarray(lp.out_mask),
-            )
-            a_new.append(an)
-            nct_new.append(nn)
-            h_new.append(hn)
-
-        self.h = h_new
-        self.a = a_new
-        self.nct = nct_new
-        if not self.store_h:
-            self._drop_h()
+        return self._backend.sync_arrays()

@@ -45,8 +45,10 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.affected import (
+    HybridLayerLayout,
     PackedLayout,
     ShardedLayout,
+    hybrid_layout_slices,
     layout_slices,
     sharded_layout_slices,
 )
@@ -345,15 +347,19 @@ def sharded_step_fn(model: GNNModel, mesh, axis: str):
         idx_rep: jax.Array,  # int32 [rep_len] replicated
         msk_rep: jax.Array,  # bool  [feat_cap] replicated
         feat_vals: jax.Array,  # [feat_cap, d0] replicated ([0, d0] if unused)
+        pallas_sh=(),  # per-layer stacked (perm, dloc, brows) triples, or ()
     ):
         idx_sl, flt_sl, msk_sl, halo_sl, _ = sharded_layout_slices(slayout)
         rows_per = slayout.rows_per
+        use_pallas = slayout.pallas_ecaps is not None
 
-        def local(prm, h_bl, a_bl, nct_bl, idx_s, flt_s, msk_s, idx_r, msk_r, fvals):
+        def local(prm, h_bl, a_bl, nct_bl, idx_s, flt_s, msk_s, idx_r, msk_r,
+                  fvals, pal):
             h_bl = [h[0] for h in h_bl]  # shard-local views [rows_per+1, ·]
             a_bl = [a[0] for a in a_bl]
             nct_bl = [c[0] for c in nct_bl]
             idx_s, flt_s, msk_s = idx_s[0], flt_s[0], msk_s[0]
+            pal = tuple(tuple(x[0] for x in tr) for tr in pal)
             lo = lax.axis_index(axis) * rows_per
 
             h0_old = h_bl[0]
@@ -393,6 +399,7 @@ def sharded_step_fn(model: GNNModel, mesh, axis: str):
                     gf["f_w"], gi["f_t"], gm["f_emask"],
                     gi["out_rows"], gm["out_mask"],
                     f_rows_h=gi["f_rows_h"], out_rows_h=gi["out_rows_h"],
+                    pallas_delta=pal[l] if use_pallas else None,
                 )
                 an = an.at[rows_per].set(0.0)  # re-zero local scratch row
                 nn = nn.at[rows_per].set(0.0)
@@ -413,11 +420,79 @@ def sharded_step_fn(model: GNNModel, mesh, axis: str):
         fn = shard_map(
             local,
             mesh=mesh,
-            in_specs=(rep, sh, sh, sh, sh, sh, sh, rep, rep, rep),
+            in_specs=(rep, sh, sh, sh, sh, sh, sh, rep, rep, rep, sh),
             out_specs=(sh, sh, sh),
             check_rep=False,
         )
         return fn(params, h_blocks, a_blocks, nct_blocks, idx_sh, flt_sh, msk_sh,
-                  idx_rep, msk_rep, feat_vals)
+                  idx_rep, msk_rep, feat_vals, pallas_sh)
+
+    return step
+
+
+# ====================================================================== #
+# Hybrid compact layer step — the sharded-offload backend's device kernel
+# ====================================================================== #
+@lru_cache(maxsize=None)
+def hybrid_layer_step_fn(model: GNNModel, mesh, axis: str):
+    """Build (and cache per (model, mesh)) the jitted shard_map'd *compact*
+    layer step for the sharded-offload hybrid.
+
+    Every input is a stacked ``[S, cap, ·]`` staging buffer: each shard's
+    slice holds only the compact ``[halo | local]`` workspace rows its plan
+    touches — never the persistent state, which stays host-resident.  There
+    is **no collective**: halo rows were already gathered from the owning
+    shards' host blocks at staging time, so each shard just runs the
+    unmodified :func:`_layer_body` over its compact slice (one scratch row
+    appended at index cap, exactly like the offloaded engine's compact
+    views).  One trace per :class:`~repro.core.affected.HybridLayerLayout`."""
+
+    @partial(jax.jit, static_argnums=(0,))
+    def step(
+        llayout: HybridLayerLayout,
+        p: Params,
+        h_old_rows: jax.Array,  # [S, nh_cap, d_in] staged h^{l-1} (old view)
+        h_new_rows: jax.Array,  # [S, nh_cap, d_in] staged h^{l-1} (new view)
+        a_rows: jax.Array,  # [S, ns_cap, agg] staged aggregation state
+        nct_rows: jax.Array,  # [S, ns_cap, C]
+        h_cur_rows: jax.Array,  # [S, ns_cap, d_out]
+        idx_sh: jax.Array,  # int32  [S, idx_len]
+        flt_sh: jax.Array,  # float32 [S, flt_len]
+        msk_sh: jax.Array,  # bool   [S, msk_len]
+    ):
+        idx_sl, flt_sl, msk_sl, _ = hybrid_layout_slices(llayout)
+        ns_cap = llayout.caps[6]
+
+        def local(p, h_old, h_new, a_r, nct_r, h_cur, idx_s, flt_s, msk_s):
+            h_old, h_new = h_old[0], h_new[0]
+            a_r, nct_r, h_cur = a_r[0], nct_r[0], h_cur[0]
+            idx_s, flt_s, msk_s = idx_s[0], flt_s[0], msk_s[0]
+            gi = {k: idx_s[sl] for k, sl in idx_sl.items()}
+            gf = {k: flt_s[sl] for k, sl in flt_sl.items()}
+            gm = {k: msk_s[sl] for k, sl in msk_sl.items()}
+            an, nn, hn = _layer_body(
+                model, p, with_scratch(h_old), with_scratch(h_new),
+                gf["deg_old"], gf["deg_new"],
+                with_scratch(a_r), with_scratch(nct_r), with_scratch(h_cur),
+                gi["e_src"], gi["e_dst"], gi["e_rowidx"], gf["e_sign"],
+                gm["e_use_new"], gf["e_w"], gi["e_t"], gm["e_mask"],
+                gi["touch_rows"], gm["touch_mask"],
+                gi["f_rows"], gm["f_mask"], gi["f_src"], gi["f_rowidx"],
+                gf["f_w"], gi["f_t"], gm["f_emask"],
+                gi["out_rows"], gm["out_mask"],
+                f_rows_h=gi["f_rows_h"], out_rows_h=gi["out_rows_h"],
+            )
+            return an[None, :ns_cap], nn[None, :ns_cap], hn[None, :ns_cap]
+
+        sh = P(axis)
+        fn = shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(), sh, sh, sh, sh, sh, sh, sh, sh),
+            out_specs=(sh, sh, sh),
+            check_rep=False,
+        )
+        return fn(p, h_old_rows, h_new_rows, a_rows, nct_rows, h_cur_rows,
+                  idx_sh, flt_sh, msk_sh)
 
     return step

@@ -1,12 +1,12 @@
 """Row-sharded pipelined streaming engine (multi-device co-processing).
 
-Scales the PR-2 pipelined engine past one device's memory: the
-scratch-extended per-layer state (h, a, nct) is block row-partitioned over a
-1-D ``repro.dist`` mesh as stacked ``[S, rows_per + 1, ·]`` arrays (one
-scratch row per shard), each update batch is planned on the host (Alg. 4)
-and **partitioned per shard at plan time**
-(:func:`repro.core.affected.shard_plan`), and the reordered incremental
-workflow runs as one donated, shard_map'd L-layer step per batch
+Thin facade over :class:`~repro.core.backend.StreamOrchestrator` +
+:class:`~repro.core.backend.ShardBackend`: the scratch-extended per-layer
+state (h, a, nct) is block row-partitioned over a 1-D ``repro.dist`` mesh as
+stacked ``[S, rows_per + 1, ·]`` arrays (one scratch row per shard), each
+update batch is planned on the host (Alg. 4) and **partitioned per shard at
+plan time** (:func:`repro.core.affected.shard_plan`), and the reordered
+incremental workflow runs as one donated, shard_map'd L-layer step per batch
 (:func:`repro.core.incremental.sharded_step_fn`):
 
 * **Per-shard transfers** — the packed plan ships as stacked ``[S, ·]``
@@ -23,6 +23,10 @@ workflow runs as one donated, shard_map'd L-layer step per batch
   partitions) batch t+1 on the host while the devices run batch t, and
   per-field high-water-mark buckets (:class:`BucketHysteresis`) keep the
   shard_map trace count bounded over the stream.
+* **Per-shard Pallas delta scatter** — ``use_pallas_delta=True`` ships a
+  per-shard block-CSR schedule with the plan and routes step 1's scatter
+  through the ``delta_agg`` kernel inside each shard (XLA segment-sum is
+  the fallback), exactly like the single-device engine's flag.
 
 The ``apply_batch`` / ``apply_stream`` / ``embeddings`` contract matches
 :class:`~repro.core.engine.RTECEngine` (same ``BatchStats``/``StreamStats``),
@@ -30,26 +34,18 @@ so benchmarks and serving code can swap engines freely.
 """
 from __future__ import annotations
 
-import time
-import warnings
 from typing import List, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.affected import (
-    BucketHysteresis,
-    ShardedPlan,
-    build_plan,
-    shard_plan,
-    shard_rows,
+from repro.core.backend import (
+    BatchStats,
+    ShardBackend,
+    StreamOrchestrator,
+    StreamStats,
 )
-from repro.core.engine import BatchStats, StreamStats
-from repro.core.full import full_forward
-from repro.core.incremental import sharded_step_fn
 from repro.core.operators import GNNModel, Params
-from repro.dist.sharding import ShardingConfig, stream_mesh, stream_state_specs
+from repro.dist.sharding import ShardingConfig
 from repro.graph.csr import CSRGraph
 from repro.graph.streaming import UpdateBatch
 
@@ -60,199 +56,97 @@ class ShardedRTECEngine:
         model: GNNModel,
         params: Sequence[Params],
         graph: CSRGraph,
-        x: jax.Array,
+        x,
         mesh=None,
         num_shards: Optional[int] = None,
         shcfg: Optional[ShardingConfig] = None,
         refresh_every: int = 0,
+        use_pallas_delta: bool = False,
     ):
-        self.model = model
-        self.L = len(list(params))
-        self.graph = graph
-        self.refresh_every = refresh_every
-        self.shcfg = shcfg or ShardingConfig()
-        self.mesh = mesh if mesh is not None else stream_mesh(num_shards, self.shcfg)
-        self.axis = tuple(self.mesh.axis_names)[0]
-        self.S = int(self.mesh.shape[self.axis])
-        self.rows_per = shard_rows(graph.n, self.S)
-        specs = stream_state_specs(self.mesh, self.shcfg)
-        self._state_sh = specs["state"]
-        self._plan_sh = specs["plan"]
-        self._rep_sh = specs["replicated"]
-        self._params_host = list(params)
-        # step inputs must all live on the mesh: replicate params once
-        self.params = jax.device_put(tuple(params), self._rep_sh)
-        self._step = sharded_step_fn(model, self.mesh, self.axis)
-        self._hwm = BucketHysteresis()
-        self._batches_seen = 0
-        self.halo_rows_total = 0
-        self._x_host = np.asarray(x, np.float32)
-        self._init_state()
+        self._backend = ShardBackend(
+            model, params, graph, x, mesh=mesh, num_shards=num_shards,
+            shcfg=shcfg, use_pallas_delta=use_pallas_delta,
+        )
+        self._orch = StreamOrchestrator(self._backend, graph,
+                                        refresh_every=refresh_every)
 
     # ------------------------------------------------------------------ #
-    # state: stacked [S, rows_per+1, ·] blocks (last local row = scratch)
-    # ------------------------------------------------------------------ #
-    def _to_blocks(self, arr) -> jax.Array:
-        flat = np.asarray(arr, np.float32)
-        out = np.zeros((self.S, self.rows_per + 1) + flat.shape[1:], np.float32)
-        for s in range(self.S):
-            lo = s * self.rows_per
-            hi = min(self.graph.n, lo + self.rows_per)
-            if hi > lo:
-                out[s, : hi - lo] = flat[lo:hi]
-        return jax.device_put(out, self._state_sh)
+    def apply_batch(self, batch: UpdateBatch, block: bool = True) -> BatchStats:
+        return self._orch.apply_batch(batch, block=block)
 
-    def _from_blocks(self, blocks: jax.Array) -> np.ndarray:
-        arr = np.asarray(blocks)[:, : self.rows_per]
-        return arr.reshape(self.S * self.rows_per, *arr.shape[2:])[: self.graph.n]
-
-    def _init_state(self, x: Optional[np.ndarray] = None) -> None:
-        if x is None:
-            x = self._x_host
-        states = full_forward(self.model, self._params_host,
-                              jnp.asarray(x), self.graph)
-        self._h: List[jax.Array] = [self._to_blocks(x)] + [
-            self._to_blocks(s.h) for s in states
-        ]
-        self._a: List[jax.Array] = [self._to_blocks(s.a) for s in states]
-        self._nct: List[jax.Array] = [self._to_blocks(s.nct) for s in states]
+    def apply_stream(self, batches: Sequence[UpdateBatch]) -> StreamStats:
+        return self._orch.apply_stream(batches)
 
     def refresh(self) -> None:
         """Full recomputation (drift reset) over the current snapshot and the
         *current* features — layer-0 feature updates applied during the
         stream live in the h[0] blocks, not in the construction-time x."""
-        self._init_state(self._from_blocks(self._h[0]))
+        self._orch.refresh()
+
+    # ------------------------------------------------------------------ #
+    @property
+    def model(self) -> GNNModel:
+        return self._backend.model
 
     @property
+    def params(self):
+        return self._backend.params
+
+    @property
+    def L(self) -> int:
+        return self._backend.L
+
+    @property
+    def graph(self) -> CSRGraph:
+        return self._orch.graph
+
+    @graph.setter
+    def graph(self, g: CSRGraph) -> None:
+        self._orch.graph = g
+
+    @property
+    def mesh(self):
+        return self._backend.mesh
+
+    @property
+    def axis(self) -> str:
+        return self._backend.axis
+
+    @property
+    def S(self) -> int:
+        return self._backend.S
+
+    @property
+    def rows_per(self) -> int:
+        return self._backend.rows_per
+
+    @property
+    def halo_rows_total(self) -> int:
+        return self._backend.halo_rows_total
+
+    @property
+    def _hwm(self):
+        return self._backend.hwm
+
+    # ------------------------------------------------------------------ #
+    @property
     def embeddings(self) -> np.ndarray:
-        return self._from_blocks(self._h[-1])
+        return self._backend.embeddings
 
     @property
     def h(self) -> List[np.ndarray]:
-        return [self._from_blocks(v) for v in self._h]
+        return self._backend.h
 
     @property
     def a(self) -> List[np.ndarray]:
-        return [self._from_blocks(v) for v in self._a]
+        return self._backend.a
 
     @property
     def nct(self) -> List[np.ndarray]:
-        return [self._from_blocks(v) for v in self._nct]
+        return self._backend.nct
 
     def state_bytes(self) -> int:
-        return sum(int(np.prod(v.shape)) * 4 for v in (*self._h, *self._a, *self._nct))
+        return self._backend.state_bytes()
 
     def _sync_arrays(self):
-        return [*self._h, *self._a, *self._nct]
-
-    # ------------------------------------------------------------------ #
-    # per-batch API (same honest-timing contract as RTECEngine)
-    # ------------------------------------------------------------------ #
-    def apply_batch(self, batch: UpdateBatch, block: bool = True) -> BatchStats:
-        t0 = time.perf_counter()
-        g_new = self.graph.apply_updates(
-            batch.ins_src, batch.ins_dst, batch.del_src, batch.del_dst,
-            batch.ins_weights, batch.ins_etypes,
-        )
-        t1 = time.perf_counter()
-        sp = self._shard_plan(g_new, batch)
-        t2 = time.perf_counter()
-        self._dispatch(sp)
-        if block:
-            jax.block_until_ready(self._sync_arrays())
-        t3 = time.perf_counter()
-        self.graph = g_new
-        self._after_batch()
-        return BatchStats(
-            inc_edges=sp.n_inc_edges,
-            full_edges=sp.n_full_edges,
-            out_vertices=sp.n_out_rows,
-            plan_time_s=t2 - t1,
-            exec_time_s=t3 - t2,
-            graph_time_s=t1 - t0,
-        )
-
-    # ------------------------------------------------------------------ #
-    # pipelined stream API: plan+partition t+1 while the mesh executes t
-    # ------------------------------------------------------------------ #
-    def apply_stream(self, batches: Sequence[UpdateBatch]) -> StreamStats:
-        batches = list(batches)
-        if not batches:
-            return StreamStats([], 0.0, 0.0)
-        t_start = time.perf_counter()
-        stats: List[BatchStats] = []
-        plan_total = 0.0
-
-        tp = time.perf_counter()
-        g_new, sp = self._plan_batch(batches[0])
-        plan_total += time.perf_counter() - tp
-
-        for i in range(len(batches)):
-            td = time.perf_counter()
-            self._dispatch(sp)  # async: the mesh starts batch i
-            dispatch_s = time.perf_counter() - td
-            self.graph = g_new
-            stats.append(
-                BatchStats(
-                    inc_edges=sp.n_inc_edges,
-                    full_edges=sp.n_full_edges,
-                    out_vertices=sp.n_out_rows,
-                    plan_time_s=0.0,
-                    exec_time_s=dispatch_s,  # dispatch-only; see StreamStats
-                    graph_time_s=0.0,
-                )
-            )
-            if i + 1 < len(batches):
-                tp = time.perf_counter()  # overlapped with device execution
-                g_new, sp = self._plan_batch(batches[i + 1])
-                plan_total += time.perf_counter() - tp
-            self._after_batch(sync_before_refresh=True)
-        jax.block_until_ready(self._sync_arrays())
-        return StreamStats(stats, time.perf_counter() - t_start, plan_total)
-
-    # ------------------------------------------------------------------ #
-    def _after_batch(self, sync_before_refresh: bool = False) -> None:
-        self._batches_seen += 1
-        if self.refresh_every and self._batches_seen % self.refresh_every == 0:
-            if sync_before_refresh:
-                jax.block_until_ready(self._sync_arrays())
-            self.refresh()
-
-    def _plan_batch(self, batch: UpdateBatch):
-        g_new = self.graph.apply_updates(
-            batch.ins_src, batch.ins_dst, batch.del_src, batch.del_dst,
-            batch.ins_weights, batch.ins_etypes,
-        )
-        return g_new, self._shard_plan(g_new, batch)
-
-    def _shard_plan(self, g_new: CSRGraph, batch: UpdateBatch) -> ShardedPlan:
-        plan = build_plan(self.model, self.graph, g_new, batch, self.L)
-        return shard_plan(plan, self.S, batch.feat_vertices, batch.feat_values,
-                          hwm=self._hwm)
-
-    def _dispatch(self, sp: ShardedPlan) -> None:
-        """One sharded device_put (each device gets only its plan slice),
-        one shard_map'd fused-step dispatch."""
-        idx_sh, flt_sh, msk_sh = jax.device_put(
-            (sp.idx_sh, sp.flt_sh, sp.msk_sh), self._plan_sh
-        )
-        fv = sp.feat_vals if sp.feat_vals is not None else np.zeros(
-            (0, self._x_host.shape[1]), np.float32
-        )
-        idx_rep, msk_rep, feat_vals = jax.device_put(
-            (sp.idx_rep, sp.msk_rep, fv), self._rep_sh
-        )
-        with warnings.catch_warnings():
-            # donation is a TPU/GPU aliasing optimization; CPU jit ignores it
-            warnings.filterwarnings(
-                "ignore", message="Some donated buffers were not usable"
-            )
-            hs, as_, ncts = self._step(
-                sp.layout, self.params,
-                tuple(self._h), tuple(self._a), tuple(self._nct),
-                idx_sh, flt_sh, msk_sh, idx_rep, msk_rep, feat_vals,
-            )
-        self._h = list(hs)
-        self._a = list(as_)
-        self._nct = list(ncts)
-        self.halo_rows_total += sp.n_halo_rows
+        return self._backend.sync_arrays()

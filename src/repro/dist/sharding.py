@@ -250,12 +250,15 @@ def stream_mesh(
 
 
 def stream_state_specs(mesh, shcfg: Optional[ShardingConfig] = None) -> Dict[str, NamedSharding]:
-    """NamedShardings for the sharded streaming engine's buffers.
+    """NamedShardings for the sharded streaming backends' buffers
+    (``repro.core.backend``: `ShardBackend` and `ShardedOffloadBackend`).
 
     ``state``: stacked ``[S, rows_per+1, d]`` embedding/aggregate blocks —
-    ``graph_rows`` on the leading shard dim.  ``plan``: stacked ``[S, ·]``
-    packed plan buffers.  ``replicated``: halo row lists, degree-free side
-    tables, params."""
+    ``graph_rows`` on the leading shard dim (`ShardBackend` persistent
+    state).  ``plan``: stacked ``[S, ·]`` per-shard buffers — packed plan
+    rows, Pallas schedules, and the hybrid backend's transient compact
+    ``[halo|local]`` staging (each device receives only its slice).
+    ``replicated``: halo row lists, degree-free side tables, params."""
     shcfg = shcfg or ShardingConfig()
     sizes = _axis_sizes(mesh)
     rules = dict(shcfg.rules())

@@ -1,309 +1,175 @@
 """Out-of-memory embedding management (paper §V-B) — TPU/JAX realization.
 
-NeutronRT offloads intermediate embeddings to CPU memory and reads sparse
-rows with GPU-directed zero-copy.  The JAX equivalent keeps the per-layer
-state (h, a, nct) as **host numpy** and, per update batch, transfers only the
-*compact row sets the plan touches* to the device, runs the same
-`incremental_layer` kernel over compact arrays (the kernel is index-based,
-so a compact view with remapped indices is exactly equivalent), and groups
-all write-backs (the paper's "group all updated embeddings and write them
-back in parallel").  Transfer accounting mirrors the paper's access-volume
-metrics.
+Thin facades over the residency-backend architecture
+(:mod:`repro.core.backend`):
 
-This engine reuses the pipelined in-memory engine's machinery:
+* :class:`OffloadedRTECEngine` — :class:`~repro.core.backend.OffloadBackend`
+  under a :class:`~repro.core.backend.StreamOrchestrator`.  NeutronRT
+  offloads intermediate embeddings to CPU memory and reads sparse rows with
+  GPU-directed zero-copy; the JAX equivalent keeps the per-layer state
+  (h, a, nct) as **host numpy** and, per update batch, transfers only the
+  *compact row sets the plan touches* to the device, runs the same
+  ``incremental_layer`` kernel over compact arrays, and groups all
+  write-backs.  Transfer accounting mirrors the paper's access-volume
+  metrics.  ``apply_stream`` returns the same :class:`StreamStats` as the
+  other engines (wall_s / plan_s), with batch-t+1 planning overlapped with
+  the device's execution of batch t's final layer (deferred write-back).
 
-* **Packed per-layer transfer** — every layer's compact arrays ship in one
-  ``jax.device_put`` call (a single batched transfer) instead of ~27
-  individual ``jnp.asarray`` H2D round trips.
-* **Plan-time remap tables** — all index remapping is value-independent, so
-  it is precomputed from the plan for every layer up front (off the exec
-  critical path).
-* **Plan/execute overlap** — :meth:`apply_stream` defers the final layer's
-  grouped write-back so Alg.-4 planning of batch t+1 runs on the host while
-  the device still executes batch t's last layer.
+* :class:`ShardedOffloadRTECEngine` — the **sharded offload hybrid**
+  (:class:`~repro.core.backend.ShardedOffloadBackend`): row sharding × host
+  residency.  Each shard keeps only its own row block host-resident and
+  stages a compact per-layer ``[halo | local]`` workspace to its device, so
+  HBM footprint scales with the per-shard affected subgraph rather than V —
+  the full NeutronRT GPU-CPU co-processing story at mesh scale.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.affected import BatchPlan, LayerPlan, build_plan
-from repro.core.engine import BatchStats
-from repro.core.full import full_forward
-from repro.core.incremental import incremental_layer, with_scratch
+from repro.core.backend import (  # noqa: F401  (TransferStats re-export)
+    BatchStats,
+    OffloadBackend,
+    ShardedOffloadBackend,
+    StreamOrchestrator,
+    StreamStats,
+    TransferStats,
+)
 from repro.core.operators import GNNModel, Params
 from repro.graph.csr import CSRGraph
 from repro.graph.streaming import UpdateBatch
 
 
-@dataclasses.dataclass
-class TransferStats:
-    rows_up: int = 0
-    rows_down: int = 0
-    bytes_up: int = 0
-    bytes_down: int = 0
+class _OffloadFacadeMixin:
+    """Shared delegation for the two host-resident engines."""
+
+    def apply_batch(self, batch: UpdateBatch, block: bool = True) -> BatchStats:
+        return self._orch.apply_batch(batch, block=block)
+
+    def apply_stream(self, batches: Sequence[UpdateBatch]) -> StreamStats:
+        """Plan/execute overlap for the offload path: batch t's final layer
+        executes on device while batch t+1's plan + staging tables build on
+        the host; the deferred grouped write-back is the sync point."""
+        return self._orch.apply_stream(batches)
+
+    def refresh(self) -> None:
+        self._orch.refresh()
 
     @property
-    def total_rows(self) -> int:
-        """H2D+D2H row volume — deterministic (no timing noise), so the CI
-        perf gate can bound it tightly (benchmarks/check_regression.py)."""
-        return self.rows_up + self.rows_down
+    def model(self) -> GNNModel:
+        return self._backend.model
+
+    @property
+    def params(self) -> List[Params]:
+        return self._backend.params
+
+    @property
+    def L(self) -> int:
+        return self._backend.L
+
+    @property
+    def graph(self) -> CSRGraph:
+        return self._orch.graph
+
+    @graph.setter
+    def graph(self, g: CSRGraph) -> None:
+        self._orch.graph = g
+
+    @property
+    def transfers(self) -> TransferStats:
+        return self._backend.transfers
+
+    @property
+    def embeddings(self) -> np.ndarray:
+        return self._backend.embeddings
+
+    def state_bytes(self) -> int:
+        return self._backend.state_bytes()
+
+    def _sync_arrays(self):
+        self._backend.flush()
+        return self._backend.sync_arrays()
 
 
-def _remap(indices: np.ndarray, rows: np.ndarray, n_compact: int, scratch: int) -> np.ndarray:
-    """Map global vertex ids → compact positions; scratch id → n_compact."""
-    lut = np.full(scratch + 1, n_compact, np.int32)
-    if rows.size:
-        lut[rows] = np.arange(rows.shape[0], dtype=np.int32)
-    return lut[np.asarray(indices, np.int64)]
-
-
-def _override_rows(dst_vals: np.ndarray, dst_rows: np.ndarray,
-                   src_rows: np.ndarray, src_vals: np.ndarray) -> None:
-    """dst_vals[i] ← src_vals[j] where dst_rows[i] == src_rows[j] (vectorized)."""
-    if not src_rows.size or not dst_rows.size:
-        return
-    order = np.argsort(src_rows)
-    pos = np.searchsorted(src_rows[order], dst_rows)
-    pos = np.clip(pos, 0, src_rows.size - 1)
-    hit = src_rows[order][pos] == dst_rows
-    dst_vals[hit] = src_vals[order][pos[hit]]
-
-
-@dataclasses.dataclass
-class _LayerTransfer:
-    """Plan-time (value-independent) compact transfer tables for one layer."""
-
-    need_h: np.ndarray  # global ids of h^{l-1} rows the device needs
-    srows: np.ndarray  # global ids of state rows updated (= out_rows live)
-    e_src: np.ndarray  # remapped into need_h space
-    e_dst: np.ndarray
-    f_src: np.ndarray
-    touch_rows_s: np.ndarray  # remapped into srows space
-    f_rows_s: np.ndarray
-    out_rows_s: np.ndarray
-    f_rows_h: np.ndarray  # remapped into need_h space
-    out_rows_h: np.ndarray
-    deg_old_rows: np.ndarray  # [nh+1] compact degree tables (scratch slot)
-    deg_new_rows: np.ndarray
-
-
-@dataclasses.dataclass
-class _Prepared:
-    """Host-side output of the planning phase for one batch."""
-
-    g_new: CSRGraph
-    plan: BatchPlan
-    transfers: List[_LayerTransfer]
-    plan_time_s: float
-    graph_time_s: float
-
-
-class OffloadedRTECEngine:
+class OffloadedRTECEngine(_OffloadFacadeMixin):
     """Incremental RTEC with host-resident state (CPU-offload engine)."""
 
     def __init__(self, model: GNNModel, params: Sequence[Params], graph: CSRGraph,
                  x: np.ndarray):
-        self.model = model
-        self.params = list(params)
-        self.L = len(params)
-        self.graph = graph
-        self.x = np.asarray(x, np.float32)
-        self.transfers = TransferStats()
-        states = full_forward(model, params, jnp.asarray(self.x), graph)
-        self.h: List[np.ndarray] = [self.x.copy()] + [np.array(s.h) for s in states]
-        self.a: List[np.ndarray] = [np.array(s.a) for s in states]
-        self.nct: List[np.ndarray] = [np.array(s.nct) for s in states]
+        self._backend = OffloadBackend(model, params, graph, x)
+        self._orch = StreamOrchestrator(self._backend, graph)
 
     @property
-    def embeddings(self) -> np.ndarray:
-        return self.h[-1]
+    def x(self) -> np.ndarray:
+        return self._backend.x
 
-    def state_bytes(self) -> int:
-        return (sum(a.nbytes for a in self.a) + sum(c.nbytes for c in self.nct)
-                + sum(h.nbytes for h in self.h))
+    # state views flush the deferred final-layer write-back first, so they
+    # can never disagree with `embeddings` mid-pipeline (block=False)
+    @property
+    def h(self) -> List[np.ndarray]:
+        self._backend.flush()
+        return self._backend.h
 
-    # ------------------------------------------------------------------ #
-    # planning phase (host only, value-independent)
-    # ------------------------------------------------------------------ #
-    def _prepare(self, batch: UpdateBatch) -> _Prepared:
-        t0 = time.perf_counter()
-        g_new = self.graph.apply_updates(
-            batch.ins_src, batch.ins_dst, batch.del_src, batch.del_dst,
-            batch.ins_weights, batch.ins_etypes,
+    @property
+    def a(self) -> List[np.ndarray]:
+        self._backend.flush()
+        return self._backend.a
+
+    @property
+    def nct(self) -> List[np.ndarray]:
+        self._backend.flush()
+        return self._backend.nct
+
+
+class ShardedOffloadRTECEngine(_OffloadFacadeMixin):
+    """Incremental RTEC with per-shard host-resident row blocks and compact
+    per-layer device staging (the sharded offload hybrid)."""
+
+    def __init__(self, model: GNNModel, params: Sequence[Params], graph: CSRGraph,
+                 x: np.ndarray, mesh=None, num_shards: Optional[int] = None,
+                 shcfg=None, refresh_every: int = 0):
+        self._backend = ShardedOffloadBackend(
+            model, params, graph, x, mesh=mesh, num_shards=num_shards,
+            shcfg=shcfg,
         )
-        t1 = time.perf_counter()
-        plan = build_plan(self.model, self.graph, g_new, batch, self.L)
-        n = self.graph.n
-        prev_rows = (
-            np.asarray(batch.feat_vertices, np.int64)
-            if batch.feat_vertices is not None and batch.feat_vertices.size
-            else np.zeros(0, np.int64)
-        )
-        transfers: List[_LayerTransfer] = []
-        for lp in plan.layers:
-            need_h = np.unique(np.concatenate([
-                lp.e_src[lp.e_mask].astype(np.int64),
-                lp.e_dst[lp.e_mask].astype(np.int64),
-                lp.f_src[lp.f_emask].astype(np.int64),
-                lp.f_rows[lp.f_mask].astype(np.int64),
-                lp.out_rows[lp.out_mask].astype(np.int64),
-                prev_rows,
-            ]))
-            srows = lp.out_rows[lp.out_mask].astype(np.int64)
-            nh, ns = need_h.shape[0], srows.shape[0]
-            transfers.append(_LayerTransfer(
-                need_h=need_h,
-                srows=srows,
-                e_src=_remap(lp.e_src, need_h, nh, n),
-                e_dst=_remap(lp.e_dst, need_h, nh, n),
-                f_src=_remap(lp.f_src, need_h, nh, n),
-                touch_rows_s=_remap(lp.touch_rows, srows, ns, n),
-                f_rows_s=_remap(lp.f_rows, srows, ns, n),
-                out_rows_s=_remap(lp.out_rows, srows, ns, n),
-                f_rows_h=_remap(lp.f_rows, need_h, nh, n),
-                out_rows_h=_remap(lp.out_rows, need_h, nh, n),
-                deg_old_rows=np.concatenate(
-                    [plan.deg_old[need_h], [0.0]]).astype(np.float32),
-                deg_new_rows=np.concatenate(
-                    [plan.deg_new[need_h], [0.0]]).astype(np.float32),
-            ))
-            prev_rows = srows
-        t2 = time.perf_counter()
-        return _Prepared(g_new=g_new, plan=plan, transfers=transfers,
-                         plan_time_s=t2 - t1, graph_time_s=t1 - t0)
+        self._orch = StreamOrchestrator(self._backend, graph,
+                                        refresh_every=refresh_every)
 
-    # ------------------------------------------------------------------ #
-    def apply_batch(self, batch: UpdateBatch) -> BatchStats:
-        prep = self._prepare(batch)
-        t0 = time.perf_counter()
-        pending = self._execute(prep, batch)
-        self._writeback(pending)
-        t1 = time.perf_counter()
-        return BatchStats(
-            inc_edges=prep.plan.total_inc_edges(),
-            full_edges=prep.plan.total_full_edges(),
-            out_vertices=prep.plan.total_vertices(),
-            plan_time_s=prep.plan_time_s,
-            exec_time_s=t1 - t0,
-            graph_time_s=prep.graph_time_s,
-        )
+    @property
+    def S(self) -> int:
+        return self._backend.S
 
-    def apply_stream(self, batches: Sequence[UpdateBatch]) -> List[BatchStats]:
-        """Plan/execute overlap for the offload path: batch t's final layer
-        executes on device while batch t+1's plan + remap tables build on
-        the host; the deferred grouped write-back is the sync point."""
-        batches = list(batches)
-        out: List[BatchStats] = []
-        if not batches:
-            return out
-        prep = self._prepare(batches[0])
-        for i, b in enumerate(batches):
-            t0 = time.perf_counter()
-            pending = self._execute(prep, b)
-            t1 = time.perf_counter()
-            next_prep = self._prepare(batches[i + 1]) if i + 1 < len(batches) else None
-            t2 = time.perf_counter()
-            self._writeback(pending)  # sync point: device → host
-            t3 = time.perf_counter()
-            out.append(BatchStats(
-                inc_edges=prep.plan.total_inc_edges(),
-                full_edges=prep.plan.total_full_edges(),
-                out_vertices=prep.plan.total_vertices(),
-                plan_time_s=prep.plan_time_s,
-                # exclude [t1, t2]: that is batch t+1's planning (reported in
-                # its own plan_time_s), overlapped with device execution here
-                exec_time_s=(t1 - t0) + (t3 - t2),
-                graph_time_s=prep.graph_time_s,
-            ))
-            prep = next_prep
-        return out
+    @property
+    def rows_per(self) -> int:
+        return self._backend.rows_per
 
-    # ------------------------------------------------------------------ #
-    def _execute(self, prep: _Prepared, batch: UpdateBatch):
-        """Run all layers; returns the final layer's pending write-back."""
-        # layer-0 feature updates: keep old values for the delta pass
-        if batch.feat_vertices is not None and batch.feat_vertices.size:
-            prev_rows = np.asarray(batch.feat_vertices, np.int64)
-            prev_old = self.h[0][prev_rows].copy()
-            self.h[0][prev_rows] = batch.feat_values
-        else:
-            prev_rows = np.zeros(0, np.int64)
-            prev_old = np.zeros((0, self.h[0].shape[1]), np.float32)
+    @property
+    def mesh(self):
+        return self._backend.mesh
 
-        pending = None
-        for l, (lp, tr) in enumerate(zip(prep.plan.layers, prep.transfers)):
-            if pending is not None:
-                prev_rows, prev_old = self._writeback(pending)
-            pending = self._layer_dispatch(l, lp, tr, prev_rows, prev_old)
-        self.graph = prep.g_new
-        return pending
+    @property
+    def per_shard_rows(self) -> np.ndarray:
+        """Per-shard H2D+D2H row volume (deterministic; CI-gated)."""
+        return self._backend.per_shard_rows
 
-    def _layer_dispatch(self, l: int, lp: LayerPlan, tr: _LayerTransfer,
-                        prev_rows: np.ndarray, prev_old: np.ndarray):
-        """Gather compact host rows, ship them in ONE device_put, dispatch."""
-        need_h, srows = tr.need_h, tr.srows
-        nh, ns = need_h.shape[0], srows.shape[0]
-        out_old = (self.h[l + 1][srows].copy() if ns
-                   else np.zeros((0, self.h[l + 1].shape[1]), np.float32))
-        if nh == 0 and ns == 0:
-            return (l, srows, out_old, None)
+    @property
+    def peak_device_bytes(self) -> int:
+        """Largest one-layer staging footprint seen on the mesh — the
+        backend's entire HBM residency (state stays host-side)."""
+        return self._backend.peak_device_bytes
 
-        h_new_rows = self.h[l][need_h]  # host already holds the NEW h^{l-1}
-        h_old_rows = h_new_rows.copy()
-        _override_rows(h_old_rows, need_h, prev_rows, prev_old)
+    @property
+    def h(self) -> List[np.ndarray]:
+        self._backend.flush()
+        return [self._backend._from_blocks(v) for v in self._backend.h]
 
-        a_rows = self.a[l][srows]
-        nct_rows = self.nct[l][srows]
-        h_cur_rows = self.h[l + 1][srows]
+    @property
+    def a(self) -> List[np.ndarray]:
+        self._backend.flush()
+        return [self._backend._from_blocks(v) for v in self._backend.a]
 
-        self.transfers.rows_up += 2 * nh + 3 * ns
-        self.transfers.bytes_up += (2 * h_new_rows.nbytes + a_rows.nbytes
-                                    + nct_rows.nbytes + h_cur_rows.nbytes)
-
-        # one batched H2D transfer for the whole layer (packed-plan analogue)
-        dev = jax.device_put((
-            h_old_rows, h_new_rows, tr.deg_old_rows, tr.deg_new_rows,
-            a_rows, nct_rows, h_cur_rows,
-            tr.e_src, tr.e_dst, lp.e_rowidx, lp.e_sign, lp.e_use_new,
-            lp.e_w, lp.e_t, lp.e_mask,
-            tr.touch_rows_s, lp.touch_mask,
-            tr.f_rows_s, lp.f_mask, tr.f_src, lp.f_rowidx, lp.f_w,
-            lp.f_t, lp.f_emask,
-            tr.out_rows_s, lp.out_mask, tr.f_rows_h, tr.out_rows_h,
-        ))
-        (h_old_d, h_new_d, deg_old_d, deg_new_d, a_d, nct_d, h_cur_d,
-         e_src, e_dst, e_rowidx, e_sign, e_use_new, e_w, e_t, e_mask,
-         touch_rows_s, touch_mask, f_rows_s, f_mask, f_src, f_rowidx, f_w,
-         f_t, f_emask, out_rows_s, out_mask, f_rows_h, out_rows_h) = dev
-
-        outs = incremental_layer(
-            self.model, self.params[l],
-            with_scratch(h_old_d), with_scratch(h_new_d),
-            deg_old_d, deg_new_d, a_d, nct_d, h_cur_d,
-            e_src, e_dst, e_rowidx, e_sign, e_use_new, e_w, e_t, e_mask,
-            touch_rows_s, touch_mask,
-            f_rows_s, f_mask, f_src, f_rowidx, f_w, f_t, f_emask,
-            out_rows_s, out_mask,
-            f_rows_h=f_rows_h, out_rows_h=out_rows_h,
-        )
-        return (l, srows, out_old, outs)
-
-    def _writeback(self, pending) -> Tuple[np.ndarray, np.ndarray]:
-        """Grouped parallel write-back (device sync point); returns the
-        (rows, old values) pair the next layer's delta pass needs."""
-        l, srows, out_old, outs = pending
-        if outs is None:
-            return srows, out_old
-        a_new, nct_new, h_new = (np.asarray(o) for o in outs)
-        self.a[l][srows] = a_new
-        self.nct[l][srows] = nct_new
-        self.h[l + 1][srows] = h_new
-        self.transfers.rows_down += 3 * srows.shape[0]
-        self.transfers.bytes_down += int(a_new.nbytes + nct_new.nbytes + h_new.nbytes)
-        return srows, out_old
+    @property
+    def nct(self) -> List[np.ndarray]:
+        self._backend.flush()
+        return [self._backend._from_blocks(v) for v in self._backend.nct]

@@ -110,6 +110,83 @@ def test_shard_plan_halo_is_frontier_sources_only():
 
 
 # ---------------------------------------------------------------------- #
+# single-pass fill (ROADMAP): argsort-by-owner once + contiguous-run
+# slicing must reproduce the original per-shard re-scan bit-for-bit
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", ["gcn", "gat"])
+def test_shard_plan_single_pass_equals_reference_fill(name):
+    x, wl = _mk_stream(n=150, num_batches=6, seed=21, feature_dim=8)
+    model = make_model(name)
+    g_cur = wl.base
+    for b in wl.batches:
+        g_new = g_cur.apply_updates(b.ins_src, b.ins_dst, b.del_src, b.del_dst,
+                                    b.ins_weights, b.ins_etypes)
+        plan = build_plan(model, g_cur, g_new, b, 2)
+        for S in (1, 3, 4, 8):
+            fast = shard_plan(plan, S, b.feat_vertices, b.feat_values,
+                              single_pass=True)
+            ref = shard_plan(plan, S, b.feat_vertices, b.feat_values,
+                             single_pass=False)
+            assert fast.layout == ref.layout
+            np.testing.assert_array_equal(fast.idx_sh, ref.idx_sh)
+            np.testing.assert_array_equal(fast.flt_sh, ref.flt_sh)
+            np.testing.assert_array_equal(fast.msk_sh, ref.msk_sh)
+            np.testing.assert_array_equal(fast.idx_rep, ref.idx_rep)
+            np.testing.assert_array_equal(fast.msk_rep, ref.msk_rep)
+            assert fast.n_halo_rows == ref.n_halo_rows
+        g_cur = g_new
+
+
+# ---------------------------------------------------------------------- #
+# per-shard Pallas delta scatter (interpret mode on CPU)
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", ["gcn", "gat"])
+def test_sharded_pallas_delta_flag_equivalence(name):
+    """ShardedRTECEngine with the per-shard block-CSR delta_agg schedule
+    must match the XLA segment-sum path exactly (CPU: interpret=True) —
+    previously the sharded path silently fell back to XLA."""
+    S = jax.device_count()
+    x, wl = _mk_stream(n=120, num_batches=5, seed=23, feature_dim=8)
+    model = make_model(name)
+    params = model.init_layers(jax.random.PRNGKey(9), [8, 8, 8])
+    xla = ShardedRTECEngine(model, params, wl.base, x, num_shards=S,
+                            use_pallas_delta=False)
+    pal = ShardedRTECEngine(model, params, wl.base, x, num_shards=S,
+                            use_pallas_delta=True)
+    for b in wl.batches:
+        xla.apply_batch(b)
+        pal.apply_batch(b)
+    # the one-hot-MXU matmul sums each tile in blocked order, so the two
+    # paths differ only by float summation order (same bound as the
+    # single-device flag test)
+    np.testing.assert_allclose(xla.embeddings, pal.embeddings, atol=1e-6)
+    for l in range(2):
+        np.testing.assert_allclose(xla.a[l], pal.a[l], atol=1e-6)
+
+
+def test_sharded_pallas_schedules_stacked_and_bucketed():
+    """Per-shard schedules must stack to one [S, cap] triple per layer with
+    a pow-2, DELTA_BE-aligned capacity shared by every shard (one trace per
+    ShardedLayout is the contract)."""
+    from repro.kernels.delta_agg import DELTA_BE
+
+    x, wl = _mk_stream(n=150, num_batches=4, seed=25)
+    model = make_model("gcn")
+    b = wl.batches[0]
+    plan = _plan_for(model, wl, b)
+    sp = shard_plan(plan, 4, pallas=True)
+    assert sp.layout.pallas_ecaps is not None
+    assert len(sp.pallas_sh) == len(plan.layers)
+    for (perm, dloc, brows), cap in zip(sp.pallas_sh, sp.layout.pallas_ecaps):
+        assert perm.shape == (4, cap) and dloc.shape == (4, cap)
+        assert cap % DELTA_BE == 0 and cap & (cap - 1) == 0
+        assert brows.shape == (4, cap // DELTA_BE)
+        assert np.all(np.diff(brows, axis=1) >= 0)
+    # layouts with and without schedules are distinct trace keys
+    assert shard_plan(plan, 4, pallas=False).layout != sp.layout
+
+
+# ---------------------------------------------------------------------- #
 # capacity hysteresis (mid-stream retrace damping)
 # ---------------------------------------------------------------------- #
 def test_bucket_hysteresis_caps_are_monotone():
