@@ -19,11 +19,22 @@ The gate watches a small **metric matrix** (``SPECS``), not a single cell:
 
 Speedup metrics fail when they drop below their absolute ``floor`` or
 regress more than ``tolerance`` vs the committed baseline; volume metrics
-fail when they *exceed* their ``ceiling`` or grow more than ``tolerance``.
-The baseline file is committed; refresh it deliberately (rerun
+fail when they *exceed* their ``ceiling`` or grow more than ``tolerance``;
+``exact`` metrics (the overlap counters, which are deterministic) must
+equal the expectation the emitting cell embeds in their derived column
+(``expect_<v>``) and the committed baseline value bit-for-bit.  The
+baseline file is committed; refresh it deliberately (rerun
 ``python -m benchmarks.run --smoke`` and copy the artifact) when a PR
-legitimately shifts the perf envelope.  CI gives the whole gate one retry
-(timing metrics are millisecond-scale ratios on shared runners).
+legitimately shifts the perf envelope.
+
+Exit codes are distinct so CI can retry *noise* without masking a metric
+that was never emitted (the noise-retry bug, ISSUE 5):
+
+* ``0`` — all gated metrics pass;
+* ``1`` — a metric regressed (timing metrics may be runner noise: CI
+  gives the whole gate one fresh measurement before failing the build);
+* ``2`` — a gated metric is **missing** from the current artifact (or the
+  artifact is unreadable).  Never retried: the emitting cell is broken.
 """
 from __future__ import annotations
 
@@ -31,16 +42,22 @@ import argparse
 import dataclasses
 import json
 import sys
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 METRIC = "fig7/smoke/gcn/inc_speedup_vs_full"
+
+EXIT_OK = 0
+EXIT_REGRESSION = 1
+EXIT_MISSING = 2
 
 
 @dataclasses.dataclass(frozen=True)
 class MetricSpec:
     name: str
     kind: str  # "speedup": derived '<v>x' column, higher is better;
-    #            "volume": value column, lower is better
+    #            "volume": value column, lower is better;
+    #            "exact": deterministic counter — must equal the
+    #            'expect_<v>' derived column and the baseline exactly
     floor: Optional[float] = None  # speedup: absolute minimum
     ceiling: Optional[float] = None  # volume: absolute maximum
     tolerance: float = 0.2  # max fractional regression vs baseline
@@ -50,39 +67,61 @@ SPECS = (
     MetricSpec(name=METRIC, kind="speedup", floor=1.2, tolerance=0.20),
     MetricSpec(name="fig7/smoke/gat/inc_speedup_vs_full", kind="speedup",
                floor=1.1, tolerance=0.25),
+    # deterministic offload metrics: row volume must never grow
+    # (tolerance 0 — "unchanged" is the contract; shrinking is a win), and
+    # the overlap counters must hit their structural expectations exactly
     MetricSpec(name="fig7/smoke/gcn/offload_transfer_rows", kind="volume",
-               ceiling=20000.0, tolerance=0.10),
+               ceiling=20000.0, tolerance=0.0),
+    MetricSpec(name="fig7/smoke/gcn/offload_prefetch_hits", kind="exact"),
+    # measured 145560B on the smoke stream; the ceiling leaves ~35%
+    # headroom for planner drift while catching an O(V)-staging regression
+    # (full-state staging would be ~10x) — 5% creep tolerance vs baseline
+    MetricSpec(name="fig7/smoke/gcn/offload_staged_bytes", kind="volume",
+               ceiling=200_000.0, tolerance=0.05),
 )
 
 # Gated against BENCH_sharded.json by the multi-device CI job
 # (``--suite sharded``): the hybrid's per-shard H2D+D2H row volume is
 # deterministic, so growth means the per-shard compact staging or remap
 # tables regressed toward O(V) transfers (an O(V)-per-shard regression on
-# the 300-vertex smoke graph would exceed 9000 rows).
+# the 300-vertex smoke graph would exceed 9000 rows).  The overlap
+# counters of the hybrid's apply_stream cell are gated the same way as
+# the smoke suite's.
 SHARDED_SPECS = (
     MetricSpec(name="fig7/sharded/gcn/hybrid_transfer_rows_per_shard",
                kind="volume", ceiling=2500.0, tolerance=0.15),
+    MetricSpec(name="fig7/sharded/gcn/hybrid_prefetch_hits", kind="exact"),
+    # measured 568320B (S=8, cap-padded per-shard staging buffers)
+    MetricSpec(name="fig7/sharded/gcn/hybrid_staged_bytes", kind="volume",
+               ceiling=750_000.0, tolerance=0.05),
 )
 
 SUITES = {"smoke": SPECS, "sharded": SHARDED_SPECS}
 
 
-def read_metric(path: str, metric: str, kind: str = "speedup") -> float:
-    """Extract one metric from a smoke artifact: the '1.53x' derived column
-    for speedups, the us_per_call value column for volumes."""
+def read_row(path: str, metric: str) -> Tuple[float, str]:
+    """Extract one metric row from a smoke artifact as (value, derived)."""
     with open(path) as f:
         data = json.load(f)
     for row in data.get("rows", []):
         name, value, derived = row.split(",", 2)
         if name == metric:
-            if kind == "speedup":
-                if not derived.endswith("x"):
-                    raise ValueError(
-                        f"{path}: metric {metric!r} has no speedup column: {row!r}"
-                    )
-                return float(derived[:-1])
-            return float(value)
+            return float(value), derived
     raise KeyError(f"{path}: metric {metric!r} not found")
+
+
+def read_metric(path: str, metric: str, kind: str = "speedup") -> float:
+    """Extract one metric from a smoke artifact: the '1.53x' derived column
+    for speedups, the us_per_call value column for volumes/exact."""
+    value, derived = read_row(path, metric)
+    if kind == "speedup":
+        if not derived.endswith("x"):
+            raise ValueError(
+                f"{path}: metric {metric!r} has no speedup column: "
+                f"{metric},{value},{derived}"
+            )
+        return float(derived[:-1])
+    return value
 
 
 def read_speedup(path: str, metric: str = METRIC) -> float:
@@ -125,10 +164,39 @@ def check_volume(current: float, baseline: Optional[float], ceiling: float,
     return failures
 
 
-def check_spec(spec: MetricSpec, current: float,
-               baseline: Optional[float]) -> List[str]:
+def check_exact(current: float, derived: str, baseline: Optional[float],
+                metric: str) -> List[str]:
+    """Exact-counter check: the emitting cell embeds its structural
+    expectation in the derived column (``expect_<v>``); the counter must
+    match it and the committed baseline bit-for-bit (no tolerance —
+    these are deterministic functions of the plan, not timings)."""
+    failures = []
+    if not derived.startswith("expect_"):
+        failures.append(
+            f"{metric} derived column {derived!r} carries no expect_<v> "
+            "expectation (emitting cell broken)"
+        )
+    else:
+        expect = float(derived[len("expect_"):])
+        if current != expect:
+            failures.append(
+                f"{metric} = {current:.0f} != structural expectation "
+                f"{expect:.0f} (overlap pipeline degraded)"
+            )
+    if baseline is not None and current != baseline:
+        failures.append(
+            f"{metric} = {current:.0f} != baseline {baseline:.0f} "
+            "(deterministic counter changed)"
+        )
+    return failures
+
+
+def check_spec(spec: MetricSpec, current: float, baseline: Optional[float],
+               derived: str = "") -> List[str]:
     if spec.kind == "speedup":
         return check(current, baseline, spec.floor, spec.tolerance, spec.name)
+    if spec.kind == "exact":
+        return check_exact(current, derived, baseline, spec.name)
     return check_volume(current, baseline, spec.ceiling, spec.tolerance, spec.name)
 
 
@@ -143,25 +211,50 @@ def main() -> int:
     args = ap.parse_args()
 
     failures: List[str] = []
+    missing: List[str] = []
     for spec in SUITES[args.suite]:
-        current = read_metric(args.current, spec.name, spec.kind)
+        try:
+            value, derived = read_row(args.current, spec.name)
+            if spec.kind == "speedup":
+                if not derived.endswith("x"):
+                    raise ValueError(
+                        f"{args.current}: metric {spec.name!r} has no "
+                        f"speedup column: {derived!r}")
+                current = float(derived[:-1])
+            else:
+                current = value
+            if spec.kind == "exact" and not derived.startswith("expect_"):
+                # the emitting cell no longer embeds its expectation —
+                # that is a broken emitter, not a perf regression
+                raise ValueError(
+                    f"{args.current}: exact metric {spec.name!r} carries "
+                    f"no expect_<v> derived column: {derived!r}")
+        except (FileNotFoundError, KeyError, ValueError) as e:
+            print(f"MISSING: {e}", file=sys.stderr)
+            missing.append(spec.name)
+            continue
         try:
             baseline = read_metric(args.baseline, spec.name, spec.kind)
-        except (FileNotFoundError, KeyError):
+        except (FileNotFoundError, KeyError, ValueError):
             print(f"note: no baseline for {spec.name}; absolute bound only")
             baseline = None
         base_str = f"{baseline:.2f}" if baseline is not None else "n/a"
-        bound = (f"floor={spec.floor:.2f}x" if spec.kind == "speedup"
-                 else f"ceiling={spec.ceiling:.0f}")
+        bound = {"speedup": f"floor={spec.floor:.2f}x" if spec.floor else "",
+                 "volume": f"ceiling={spec.ceiling:.0f}" if spec.ceiling else "",
+                 "exact": f"exact[{derived}]"}[spec.kind]
         print(f"perf gate: {spec.name} current={current:.2f} "
               f"baseline={base_str} {bound} tolerance={spec.tolerance:.0%}")
-        failures += check_spec(spec, current, baseline)
+        failures += check_spec(spec, current, baseline, derived)
 
     for msg in failures:
         print(f"FAIL: {msg}", file=sys.stderr)
+    if missing:
+        print(f"MISSING METRICS (exit {EXIT_MISSING}, never retried): "
+              f"{', '.join(missing)}", file=sys.stderr)
+        return EXIT_MISSING
     if not failures:
         print("perf gate passed (all metrics)")
-    return 1 if failures else 0
+    return EXIT_REGRESSION if failures else EXIT_OK
 
 
 if __name__ == "__main__":

@@ -57,12 +57,31 @@ def smoke():
 
     model = make_model("gcn")
     params = gnn_params(model, [16, 16])
-    off = OffloadedRTECEngine(model, params, wl.base, x)
-    ss = off.apply_stream(wl.batches)
+    # min over 3 fresh-engine repeats, same rationale as inc_pipelined
+    # above: a single apply_stream wall charges every per-shape-bucket jit
+    # compile of incremental_layer (~2.4s, >95% of the old 2403ms cell) to
+    # a 6-batch stream; the repeats share the in-process jit cache, so the
+    # min measures the steady-state stream the serving path actually runs
+    off = ss = None
+    for _ in range(3):
+        eng = OffloadedRTECEngine(model, params, wl.base, x)
+        s = eng.apply_stream(wl.batches)
+        if ss is None or s.wall_s < ss.wall_s:
+            off, ss = eng, s  # keep wall and plan_s from the same run;
+            # the gated counters are deterministic across repeats
     emit("fig7/smoke/gcn/offload_stream_wall", ss.wall_s * 1e6,
          f"plan_{ss.plan_s * 1e6:.0f}us")
     emit("fig7/smoke/gcn/offload_transfer_rows",
          float(off.transfers.total_rows), f"{off.transfers.total_rows}rows")
+    # overlap metric set (ISSUE 5) — deterministic counters, CI-gated:
+    # prefetch_hits is structural (every batch after the first plans while
+    # the previous executes), staged_bytes is a plan-determined payload
+    # volume; sync_wait vs compute is telemetry only (timing noise)
+    emit("fig7/smoke/gcn/offload_prefetch_hits", float(ss.prefetch_hits),
+         f"expect_{len(wl.batches) - 1}")
+    emit("fig7/smoke/gcn/offload_staged_bytes", float(ss.staged_bytes),
+         f"sync_wait_{ss.sync_wait_s * 1e6:.0f}us_compute_"
+         f"{ss.compute_s * 1e6:.0f}us")
 
 
 def smoke_sharded(num_shards: int):
@@ -109,6 +128,23 @@ def smoke_sharded(num_shards: int):
     emit("fig7/sharded/gcn/hybrid_peak_device_bytes",
          float(hybrid.peak_device_bytes),
          f"state_{hybrid.state_bytes()}B")
+    # hybrid overlap cell (ISSUE 5): a fresh engine runs the overlapped
+    # stream path so the staging pipeline's deterministic counters can be
+    # gated (check_regression --suite sharded) without disturbing the
+    # per-batch transfer accounting gated above
+    hybrid_pipe = ShardedOffloadRTECEngine(model, params, wl.base, x,
+                                           num_shards=num_shards)
+    ssh = hybrid_pipe.apply_stream(wl.batches)
+    emit("fig7/sharded/gcn/hybrid_stream_wall", ssh.wall_s * 1e6,
+         f"plan_{ssh.plan_s * 1e6:.0f}us")
+    emit("fig7/sharded/gcn/hybrid_prefetch_hits", float(ssh.prefetch_hits),
+         f"expect_{len(wl.batches) - 1}")
+    emit("fig7/sharded/gcn/hybrid_staged_bytes", float(ssh.staged_bytes),
+         f"sync_wait_{ssh.sync_wait_s * 1e6:.0f}us_compute_"
+         f"{ssh.compute_s * 1e6:.0f}us")
+    diff_p = float(np.abs(np.asarray(single.embeddings)
+                          - hybrid_pipe.embeddings).max())
+    emit("fig7/sharded/gcn/hybrid_stream_max_abs_diff_vs_single", diff_p, "")
     # the cell gates correctness + halo/transfer volume, not wall time (on
     # CPU CI the forced "devices" oversubscribe the cores): fail the CI step
     # outright on divergence (the gcn path is exact for both engines) or on
@@ -120,6 +156,9 @@ def smoke_sharded(num_shards: int):
         failures.append(f"sharded-vs-single max|diff|={diff:g} (expected 0)")
     if diff_h != 0.0:
         failures.append(f"hybrid-vs-single max|diff|={diff_h:g} (expected 0)")
+    if diff_p != 0.0:
+        failures.append(
+            f"hybrid-stream-vs-single max|diff|={diff_p:g} (expected 0)")
     if halo_per_batch > 64:
         failures.append(f"halo_rows_per_batch={halo_per_batch:.1f} exceeds 64")
     if failures:

@@ -95,6 +95,10 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (pre-jax-init); with --smoke, "
                          "run the sharded cell and write BENCH_sharded.json")
+    ap.add_argument("--out", type=str, default="",
+                    help="write the emitted rows as a {rows, wall_s} JSON "
+                         "artifact (the nightly CI job uploads "
+                         "BENCH_nightly.json this way)")
     args = ap.parse_args()
     if args.devices:
         # must land in the env before anything imports jax
@@ -111,10 +115,12 @@ def main() -> None:
             smoke()
         return
 
-    from benchmarks.common import emit
+    from benchmarks.common import ROWS, emit
 
     modules = _module_registry()
     names = [s for s in args.only.split(",") if s] or list(modules)
+    t_run = time.time()
+    failed = []
     print("name,us_per_call,derived")
     for name in names:
         t0 = time.time()
@@ -124,7 +130,17 @@ def main() -> None:
         except Exception as e:  # noqa
             traceback.print_exc()
             emit(f"{name}/_module_wall_s", (time.time() - t0) * 1e6, f"FAILED:{e}")
-            sys.exit(1) if False else None
+            failed.append(name)
+    if args.out:
+        # write even when a module failed: the partial rows are the
+        # diagnostics, and CI uploads the artifact `if: always()`
+        with open(args.out, "w") as f:
+            json.dump({"rows": list(ROWS),
+                       "wall_s": round(time.time() - t_run, 2)}, f, indent=2)
+        print(f"wrote {args.out} ({time.time() - t_run:.1f}s)")
+    if failed:
+        print(f"FAILED modules: {', '.join(failed)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == '__main__':

@@ -18,7 +18,13 @@ L-layer step per batch (:func:`repro.core.incremental.fused_stream_step`):
   then runs host planning of batch t+1 (numpy) while the device executes;
   the only sync point is the end of the stream.  :meth:`apply_batch` keeps
   the per-batch API and, by default, blocks at the timed boundary so
-  ``BatchStats.exec_time_s`` measures completion, not dispatch.
+  ``BatchStats.exec_time_s`` measures completion, not dispatch.  The
+  returned :class:`StreamStats` carries the overlap accounting (ISSUE 5):
+  ``prefetch_hits`` counts plans built behind execution (structurally
+  ``batches - 1``); the host-staging fields (``staged_bytes``,
+  ``sync_wait_s`` vs ``compute_s``) stay zero here — the device backend
+  has no host staging pipeline; see :mod:`repro.serve.offload` for the
+  substrates that populate them.
 
 Also implements the paper's recomputation-based storage optimization
 (§V-B): with ``store_h=False`` the engine caches only ``a``/``nct`` and
@@ -157,6 +163,11 @@ class RTECEngine:
 
     def state_bytes(self) -> int:
         return self._backend.state_bytes()
+
+    def staging_stats(self):
+        """Host-staging counters — None for the device backend (state is
+        HBM-resident; there is no host staging pipeline to account)."""
+        return self._backend.staging_snapshot()
 
     def _sync_arrays(self):
         return self._backend.sync_arrays()

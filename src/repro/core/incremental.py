@@ -442,10 +442,15 @@ def hybrid_layer_step_fn(model: GNNModel, mesh, axis: str):
     slice holds only the compact ``[halo | local]`` workspace rows its plan
     touches — never the persistent state, which stays host-resident.  There
     is **no collective**: halo rows were already gathered from the owning
-    shards' host blocks at staging time, so each shard just runs the
-    unmodified :func:`_layer_body` over its compact slice (one scratch row
-    appended at index cap, exactly like the offloaded engine's compact
-    views).  One trace per :class:`~repro.core.affected.HybridLayerLayout`."""
+    shards' host blocks at staging time (since ISSUE 5 that gather runs on
+    the :class:`~repro.serve.staging.HostStagingPipeline` worker, one layer
+    ahead of the device), so each shard just runs the unmodified
+    :func:`_layer_body` over its compact slice (one scratch row appended at
+    index cap, exactly like the offloaded engine's compact views).  One
+    trace per :class:`~repro.core.affected.HybridLayerLayout`.  The step is
+    deliberately **not** donated: the staged buffers are double-buffered
+    host views whose device copies the caller may still be shipping while
+    the previous dispatch executes."""
 
     @partial(jax.jit, static_argnums=(0,))
     def step(

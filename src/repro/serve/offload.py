@@ -21,6 +21,16 @@ Thin facades over the residency-backend architecture
   stages a compact per-layer ``[halo | local]`` workspace to its device, so
   HBM footprint scales with the per-shard affected subgraph rather than V —
   the full NeutronRT GPU-CPU co-processing story at mesh scale.
+
+Both engines stage host↔device traffic through an asynchronous
+double-buffered :class:`~repro.serve.staging.HostStagingPipeline` (ISSUE
+5): layer *l+1*'s host gathers and layer *l-1*'s write-back scatters run
+on a background worker while the device computes layer *l*, on top of the
+orchestrator's batch-level plan/execute overlap.  ``async_staging=False``
+falls back to inline staging with bitwise-identical output; the overlap
+is observable via ``StreamStats.staged_bytes`` / ``prefetch_hits`` /
+``sync_wait_s`` vs ``compute_s`` (the deterministic counters are CI-gated
+by benchmarks/check_regression.py).
 """
 from __future__ import annotations
 
@@ -81,6 +91,19 @@ class _OffloadFacadeMixin:
         return self._backend.transfers
 
     @property
+    def staging(self):
+        """The backend's :class:`~repro.serve.staging.HostStagingPipeline`."""
+        return self._backend._staging
+
+    @property
+    def async_staging(self) -> bool:
+        return self._backend.async_staging
+
+    def staging_stats(self):
+        """Snapshot of the host-staging counters (StagingStats)."""
+        return self._backend.staging_snapshot()
+
+    @property
     def embeddings(self) -> np.ndarray:
         return self._backend.embeddings
 
@@ -96,8 +119,9 @@ class OffloadedRTECEngine(_OffloadFacadeMixin):
     """Incremental RTEC with host-resident state (CPU-offload engine)."""
 
     def __init__(self, model: GNNModel, params: Sequence[Params], graph: CSRGraph,
-                 x: np.ndarray):
-        self._backend = OffloadBackend(model, params, graph, x)
+                 x: np.ndarray, async_staging: bool = True):
+        self._backend = OffloadBackend(model, params, graph, x,
+                                       async_staging=async_staging)
         self._orch = StreamOrchestrator(self._backend, graph)
 
     @property
@@ -128,10 +152,10 @@ class ShardedOffloadRTECEngine(_OffloadFacadeMixin):
 
     def __init__(self, model: GNNModel, params: Sequence[Params], graph: CSRGraph,
                  x: np.ndarray, mesh=None, num_shards: Optional[int] = None,
-                 shcfg=None, refresh_every: int = 0):
+                 shcfg=None, refresh_every: int = 0, async_staging: bool = True):
         self._backend = ShardedOffloadBackend(
             model, params, graph, x, mesh=mesh, num_shards=num_shards,
-            shcfg=shcfg,
+            shcfg=shcfg, async_staging=async_staging,
         )
         self._orch = StreamOrchestrator(self._backend, graph,
                                         refresh_every=refresh_every)

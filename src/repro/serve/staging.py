@@ -1,0 +1,318 @@
+"""Asynchronous double-buffered host↔device staging (paper §V co-processing).
+
+The host-resident backends (:class:`~repro.core.backend.OffloadBackend`,
+:class:`~repro.core.backend.ShardedOffloadBackend`) move three kinds of
+payload per layer: a compact host **gather** of the rows the plan touches,
+the **H2D** staging copy, and the **D2H write-back** of the updated rows.
+Before this module all three ran serially on the dispatch thread, so host
+staging sat on the critical path of every layer (the `offload_stream_wall`
+smoke cell measured staging dominating the offload batch).  The
+:class:`HostStagingPipeline` moves the host-memory halves onto one
+background worker so they overlap the device's compute:
+
+                 batch t                               batch t+1
+  caller   put/exec L0 ─ d2h L0 ─ put/exec L1 ─ d2h L1 ─ ... plan(t+1) ...
+  worker  [G0][G1][G2]···[WB0 scatter]······[WB1 scatter][WBfinal][G0']···
+  device  ───[compute L0]───────[compute L1]───────[compute L2]──[L0']──
+
+  G l   = pristine host gather of layer l's staging buffers (submitted for
+          every layer at dispatch start, value-independent — see below)
+  WB l  = host scatter of layer l's D2H'd outputs into the resident state
+  d2h l = the caller's only block: device completion + copy-out of layer l
+
+while the device computes layer *l*, the worker is gathering layer *l+1*
+(prefetch) and scattering layer *l-1*'s write-back — the overlap the
+ROADMAP "Async offload prefetch" item asks for.  The final layer's
+write-back (D2H **and** scatter) runs entirely on the worker, so the
+orchestrator's batch-t+1 planning and even batch-t+1's gathers (queued
+behind it) proceed while the device finishes batch t.
+
+Why pristine gathers can all be submitted up front: within a batch, layer
+*l*'s staging reads ``h[l]`` (written only by write-back *l-1*), ``a[l]``/
+``nct[l]``/``h[l+1]`` (written only by write-back *l*).  Gathering the
+**pre-batch** state therefore yields exactly the *old* view ``h_old``; the
+*new* view is the same rows patched with the previous layer's freshly
+computed outputs (values the caller holds anyway after its D2H).  The
+single in-order worker queue makes "pristine" precise: all of batch t's
+gathers are enqueued before any of batch t's write-backs, and batch t+1's
+gathers are enqueued after batch t's final write-back.
+
+Mechanics:
+
+* **two staging buffer sets per layer** — grow-only host buffers (pinned
+  allocations on a real GPU host; plain page-aligned numpy on CPU/TPU CI),
+  alternated per batch (``begin_batch``) so a set being consumed by batch
+  t's H2D is never the set batch t+1's gathers fill;
+* **depth-2 request queue** — at most two staging jobs in flight gives the
+  one-ahead prefetch the schedule needs while bounding host memory and
+  providing back-pressure;
+* **explicit phases** — ``submit_gather`` / ``wait_gather`` (caller blocks
+  for staged buffers), ``wait_device`` (caller blocks for D2H; this is the
+  device-compute window), ``submit_writeback``, and ``drain`` (full
+  barrier: queue empty, worker idle, worker exceptions re-raised on the
+  caller thread — the backends' ``flush()`` calls it);
+* **sync escape hatch** — ``async_mode=False`` executes every submitted
+  job inline on the caller thread.  Both modes run byte-identical numpy
+  work, so the async path is bitwise-identical to the sync path
+  (tests/test_staging.py gates this over 20-batch gcn+gat streams).
+
+Deterministic counters (``StagingStats.staged_bytes``, job counts) feed
+the CI overlap gate (`benchmarks/check_regression.py`); the timing
+counters (``wait_gather_s``/``wait_device_s``/``work_*``) are telemetry
+for `StreamStats.sync_wait_s` vs `compute_s` and are never gated.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+import weakref
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StagingStats:
+    """Pipeline counters.  ``staged_bytes``/job counts are deterministic
+    functions of the plan (CI-gateable); the ``*_s`` fields are wall-clock
+    telemetry."""
+
+    staged_bytes: int = 0  # gather payload + write-back payload, in bytes
+    gather_jobs: int = 0
+    writeback_jobs: int = 0
+    wait_gather_s: float = 0.0  # caller blocked waiting for staged buffers
+    wait_device_s: float = 0.0  # caller blocked in D2H (device compute window)
+    drain_wait_s: float = 0.0  # caller blocked in drain() barriers
+    work_gather_s: float = 0.0  # worker (or inline) time executing gathers
+    work_writeback_s: float = 0.0
+
+    def snapshot(self) -> "StagingStats":
+        return dataclasses.replace(self)
+
+
+class StagingTicket:
+    """Completion handle for one submitted staging job."""
+
+    __slots__ = ("_event", "result", "error")
+
+    def __init__(self) -> None:
+        self._event = threading.Event()
+        self.result: Any = None
+        self.error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self) -> Any:
+        self._event.wait()
+        if self.error is not None:
+            raise RuntimeError("host staging job failed") from self.error
+        return self.result
+
+
+class StagingBuffers:
+    """One grow-only named staging buffer set (half of a layer's pair).
+
+    Buffers are keyed by ``(name, trailing shape, dtype)`` and grow only
+    along axis 0, so ``take`` always returns a C-contiguous view that
+    ``np.take(..., out=)`` can fill without an intermediate allocation —
+    the "pinned buffer" reuse a GPU host needs for async H2D."""
+
+    def __init__(self) -> None:
+        self._bufs: Dict[Tuple, np.ndarray] = {}
+
+    def take(self, name: str, rows: int, trailing: Tuple[int, ...],
+             dtype=np.float32) -> np.ndarray:
+        key = (name, trailing, np.dtype(dtype).str)
+        buf = self._bufs.get(key)
+        if buf is None or buf.shape[0] < rows:
+            cap = max(rows, 2 * buf.shape[0] if buf is not None else rows)
+            buf = np.empty((cap,) + trailing, dtype)
+            self._bufs[key] = buf
+        return buf[:rows]
+
+    def nbytes(self) -> int:
+        return sum(b.nbytes for b in self._bufs.values())
+
+
+class HostStagingPipeline:
+    """Background host-staging worker: depth-``depth`` in-order job queue,
+    two :class:`StagingBuffers` sets per layer, exception capture with
+    re-raise at ``drain()``.  See the module docstring for the schedule."""
+
+    def __init__(self, num_layers: int, depth: int = 2,
+                 async_mode: bool = True, name: str = "staging") -> None:
+        self.num_layers = num_layers
+        self.async_mode = async_mode
+        self.stats = StagingStats()
+        # test seams: called inside the worker before each job body runs
+        # (fault injection / artificial gather slowdown — test_staging.py)
+        self.gather_hook: Optional[Callable[[Any], None]] = None
+        self.writeback_hook: Optional[Callable[[Any], None]] = None
+        self._buffers = [(StagingBuffers(), StagingBuffers())
+                         for _ in range(num_layers)]
+        self._parity = 0
+        self._failure: Optional[BaseException] = None
+        self._q: Optional[queue.Queue] = None
+        if async_mode:
+            self._q = queue.Queue(maxsize=depth)
+            # the worker holds only a weakref to the pipeline (plus the
+            # queue), so a dropped engine does not leak its pipeline,
+            # staging buffers, or worker thread: once the queue drains,
+            # the pipeline becomes collectable and __del__ stops the
+            # worker via the sentinel
+            self._worker = threading.Thread(
+                target=_worker_loop, args=(weakref.ref(self), self._q),
+                name=f"{name}-worker", daemon=True)
+            self._worker.start()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass  # interpreter shutdown: the daemon worker dies anyway
+
+    # ------------------------------------------------------------------ #
+    # buffer management
+    # ------------------------------------------------------------------ #
+    def begin_batch(self) -> None:
+        """Flip the double buffers: this batch's gathers fill the set the
+        previous batch was *not* staging from."""
+        self._parity ^= 1
+
+    def buffers(self, layer: int) -> StagingBuffers:
+        """The staging buffer set for ``layer`` in the current parity."""
+        return self._buffers[layer][self._parity]
+
+    def buffer_bytes(self) -> int:
+        return sum(s.nbytes() for pair in self._buffers for s in pair)
+
+    # ------------------------------------------------------------------ #
+    # phases
+    # ------------------------------------------------------------------ #
+    def submit_gather(self, fn: Callable[[], Any], tag: Any = None) -> StagingTicket:
+        """Enqueue a host gather producing staged buffers (a dict/tuple of
+        arrays); value-independent of any in-flight write-back by the
+        in-order-queue contract."""
+        self.stats.gather_jobs += 1
+        return self._submit(fn, "gather", tag)
+
+    def wait_gather(self, ticket: StagingTicket) -> Any:
+        """Block until a gather's staged buffers are ready (re-raising a
+        worker failure here, on the caller thread)."""
+        t0 = time.perf_counter()
+        out = ticket.wait()
+        self.stats.wait_gather_s += time.perf_counter() - t0
+        if out is not None:
+            self.stats.staged_bytes += sum(
+                int(a.nbytes) for a in _iter_arrays(out))
+        return out
+
+    def wait_device(self, outs) -> Tuple[np.ndarray, ...]:
+        """D2H: block until the device materializes ``outs`` and copy them
+        out.  This wait *is* the device-compute window the worker's gathers
+        and write-backs hide behind."""
+        t0 = time.perf_counter()
+        host = tuple(np.asarray(o) for o in outs)
+        self.stats.wait_device_s += time.perf_counter() - t0
+        return host
+
+    def submit_writeback(self, fn: Callable[[], Any], nbytes: int = 0,
+                         tag: Any = None) -> StagingTicket:
+        """Enqueue a host scatter of written-back rows (the arrays are
+        already host-side, or the job performs its own D2H for the deferred
+        final layer)."""
+        self.stats.writeback_jobs += 1
+        self.stats.staged_bytes += int(nbytes)
+        return self._submit(fn, "writeback", tag)
+
+    def drain(self) -> None:
+        """Full barrier: every submitted job has executed and any worker
+        exception is re-raised here, on the caller thread."""
+        if self._q is not None:
+            t0 = time.perf_counter()
+            self._q.join()
+            self.stats.drain_wait_s += time.perf_counter() - t0
+        if self._failure is not None:
+            err, self._failure = self._failure, None
+            raise RuntimeError("host staging worker failed") from err
+
+    def close(self) -> None:
+        """Stop the worker.  Called by ``__del__`` when the owning backend
+        is dropped; safe to call explicitly and idempotent."""
+        if self._q is not None:
+            q, self._q = self._q, None
+            q.put(None)
+
+    # ------------------------------------------------------------------ #
+    # execution
+    # ------------------------------------------------------------------ #
+    def _submit(self, fn, kind: str, tag) -> StagingTicket:
+        ticket = StagingTicket()
+        if self._q is None:  # sync escape hatch: identical work, inline
+            t0 = time.perf_counter()
+            try:
+                self._exec(ticket, fn, kind, tag)
+            finally:
+                self._account_work(kind, time.perf_counter() - t0)
+            if ticket.error is not None:
+                self._failure = None  # propagated right here instead
+                raise RuntimeError("host staging job failed") from ticket.error
+            return ticket
+        self._q.put((ticket, fn, kind, tag))
+        return ticket
+
+    def _exec(self, ticket: StagingTicket, fn, kind: str, tag) -> None:
+        try:
+            hook = self.gather_hook if kind == "gather" else self.writeback_hook
+            if hook is not None:
+                hook(tag)
+            ticket.result = fn()
+        except BaseException as e:  # surfaced by wait()/drain(), never lost
+            ticket.error = e
+            if self._failure is None:
+                self._failure = e
+        finally:
+            ticket._event.set()
+
+    def _account_work(self, kind: str, dt: float) -> None:
+        if kind == "gather":
+            self.stats.work_gather_s += dt
+        else:
+            self.stats.work_writeback_s += dt
+
+def _worker_loop(pipe_ref: "weakref.ref[HostStagingPipeline]",
+                 q: queue.Queue) -> None:
+    """Module-level worker body: holds the queue strongly but the pipeline
+    only weakly, so the thread never pins a dropped engine's buffers."""
+    while True:
+        job = q.get()
+        if job is None:
+            q.task_done()
+            return
+        ticket, fn, kind, tag = job
+        pipe = pipe_ref()
+        if pipe is None:  # owner collected mid-queue: nobody can wait on us
+            ticket._event.set()
+            q.task_done()
+            return
+        t0 = time.perf_counter()
+        try:
+            pipe._exec(ticket, fn, kind, tag)
+        finally:
+            pipe._account_work(kind, time.perf_counter() - t0)
+            q.task_done()
+            del pipe  # drop the strong ref before blocking on q.get()
+
+
+def _iter_arrays(obj):
+    if isinstance(obj, np.ndarray):
+        yield obj
+    elif isinstance(obj, dict):
+        for v in obj.values():
+            yield from _iter_arrays(v)
+    elif isinstance(obj, (tuple, list)):
+        for v in obj:
+            yield from _iter_arrays(v)

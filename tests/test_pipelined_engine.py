@@ -8,8 +8,12 @@ import numpy as np
 import pytest
 
 from benchmarks.check_regression import (
+    EXIT_MISSING,
+    EXIT_OK,
+    EXIT_REGRESSION,
     SPECS,
     check,
+    check_exact,
     check_spec,
     check_volume,
     read_metric,
@@ -283,16 +287,79 @@ def test_check_regression_volume_logic():
 
 def test_check_regression_metric_matrix_specs():
     """Every spec must be internally consistent and dispatch correctly."""
-    assert len(SPECS) >= 3  # gcn + gat constrained path + offload volume
+    assert len(SPECS) >= 5  # gcn + gat + offload volume + overlap counters
     for spec in SPECS:
         if spec.kind == "speedup":
             assert spec.floor is not None
             assert check_spec(spec, spec.floor + 1.0, None) == []
             assert check_spec(spec, spec.floor - 0.5, None) != []
-        else:
+        elif spec.kind == "volume":
             assert spec.ceiling is not None
             assert check_spec(spec, spec.ceiling - 1.0, None) == []
             assert check_spec(spec, spec.ceiling + 1.0, None) != []
+        else:
+            assert spec.kind == "exact"
+            assert check_spec(spec, 5.0, None, derived="expect_5") == []
+            assert check_spec(spec, 4.0, None, derived="expect_5") != []
+
+
+def test_check_regression_exact_logic():
+    """Exact counters: must match the emitted expectation and the baseline
+    bit-for-bit — the overlap gate has zero tolerance by design."""
+    m = "fig7/smoke/gcn/offload_prefetch_hits"
+    assert check_exact(5.0, "expect_5", 5.0, m) == []
+    assert check_exact(5.0, "expect_5", None, m) == []
+    assert len(check_exact(4.0, "expect_5", 4.0, m)) == 1  # misses expectation
+    assert len(check_exact(5.0, "expect_5", 4.0, m)) == 1  # baseline drifted
+    assert len(check_exact(4.0, "expect_5", 5.0, m)) == 2
+    # a row emitted without its expectation is an emitting-cell bug
+    assert len(check_exact(5.0, "5hits", 5.0, m)) == 1
+
+
+def test_check_regression_exit_codes(tmp_path):
+    """Distinct exit codes (ISSUE 5 noise-retry bugfix): 1 = regression
+    (CI may retry once against runner noise), 2 = gated metric never
+    emitted (CI must NOT retry — re-measuring can't conjure the metric)."""
+    import json
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    repo = Path(__file__).resolve().parents[1]
+    base = repo / "BENCH_baseline.json"
+
+    def run_gate(rows):
+        art = tmp_path / "current.json"
+        art.write_text(json.dumps({"rows": rows, "wall_s": 1.0}))
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.check_regression",
+             "--current", str(art), "--baseline", str(base)],
+            capture_output=True, text=True, cwd=repo, timeout=120,
+        )
+        return proc.returncode, proc.stderr
+
+    good = json.loads(base.read_text())["rows"]
+    code, _ = run_gate(good)
+    assert code == EXIT_OK
+    # regress the headline speedup below its floor → exit 1 (retryable)
+    rows = [r for r in good if not r.startswith(
+        "fig7/smoke/gcn/inc_speedup_vs_full,")]
+    rows.append("fig7/smoke/gcn/inc_speedup_vs_full,9999.0,0.50x")
+    code, err = run_gate(rows)
+    assert code == EXIT_REGRESSION, err
+    # drop a gated metric entirely → exit 2 (never retried)
+    rows = [r for r in good if not r.startswith(
+        "fig7/smoke/gcn/offload_prefetch_hits,")]
+    code, err = run_gate(rows)
+    assert code == EXIT_MISSING, err
+    assert "MISSING" in err
+    # an exact row that lost its expect_<v> expectation is a broken
+    # emitting cell, not a regression → also exit 2, never retried
+    rows = [r for r in good if not r.startswith(
+        "fig7/smoke/gcn/offload_prefetch_hits,")]
+    rows.append("fig7/smoke/gcn/offload_prefetch_hits,5.0,5hits")
+    code, err = run_gate(rows)
+    assert code == EXIT_MISSING, err
 
 
 def test_check_regression_reads_artifact(tmp_path):

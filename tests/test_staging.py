@@ -1,0 +1,211 @@
+"""Async double-buffered host staging (ISSUE 5).
+
+The acceptance matrix: the async staging path is bitwise-identical to the
+``async_staging=False`` escape hatch over 20-batch gcn AND gat streams on
+both host-resident backends; a staging-worker exception surfaces out of
+``flush()`` on the caller thread; and with an artificially slowed host
+gather the caller's staging wait stays below the serial staging time
+(the overlap is real, not just plumbed).
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import make_model
+from repro.graph import make_graph, make_stream
+from repro.graph.generators import random_features
+from repro.serve.offload import OffloadedRTECEngine, ShardedOffloadRTECEngine
+from repro.serve.staging import HostStagingPipeline, StagingBuffers
+
+
+def _mk_stream(n=120, num_batches=20, seed=0, feature_dim=8, batch_edges=8):
+    g = make_graph("powerlaw", n, avg_degree=5, seed=seed, weighted=True)
+    x, _ = random_features(n, 8, seed=seed)
+    wl = make_stream(g, num_batches=num_batches, batch_edges=batch_edges,
+                     delete_frac=0.35, seed=seed + 1,
+                     feature_dim=feature_dim, feature_frac=0.02)
+    return x, wl
+
+
+def _mk_engine(kind, model, params, base, x, async_staging):
+    if kind == "offload":
+        return OffloadedRTECEngine(model, params, base, x,
+                                   async_staging=async_staging)
+    return ShardedOffloadRTECEngine(model, params, base, x,
+                                    num_shards=jax.device_count(),
+                                    async_staging=async_staging)
+
+
+# ---------------------------------------------------------------------- #
+# acceptance: async ≡ sync, bitwise, 20 batches, gcn + gat, both backends
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("kind", ["offload", "hybrid"])
+@pytest.mark.parametrize("name", ["gcn", "gat"])  # unconstrained + constrained
+def test_async_staging_bitwise_equals_sync_20_batches(name, kind):
+    x, wl = _mk_stream(n=120, num_batches=20, seed=5)
+    model = make_model(name)
+    params = model.init_layers(jax.random.PRNGKey(0), [8, 8])
+    sync = _mk_engine(kind, model, params, wl.base, x, async_staging=False)
+    asyn = _mk_engine(kind, model, params, wl.base, x, async_staging=True)
+    assert sync.async_staging is False and asyn.async_staging is True
+    for b in wl.batches:
+        sync.apply_batch(b)
+        asyn.apply_batch(b)
+    np.testing.assert_array_equal(np.asarray(sync.embeddings),
+                                  np.asarray(asyn.embeddings))
+    # per-layer state too, not just the final embeddings
+    for hs, ha in zip(sync.h, asyn.h):
+        np.testing.assert_array_equal(np.asarray(hs), np.asarray(ha))
+    # the deterministic counters must not depend on the execution mode
+    assert sync.transfers.total_rows == asyn.transfers.total_rows
+    assert sync.staging.stats.staged_bytes == asyn.staging.stats.staged_bytes
+    assert sync.staging.stats.gather_jobs == asyn.staging.stats.gather_jobs
+
+
+@pytest.mark.parametrize("kind", ["offload", "hybrid"])
+def test_async_staging_stream_path_bitwise(kind):
+    """apply_stream (plan overlap + deferred final write-back on the
+    worker) matches the sync per-batch path bit-for-bit and reports the
+    structural overlap counters."""
+    x, wl = _mk_stream(n=120, num_batches=8, seed=9)
+    model = make_model("gat")
+    params = model.init_layers(jax.random.PRNGKey(1), [8, 8, 8])
+    sync = _mk_engine(kind, model, params, wl.base, x, async_staging=False)
+    asyn = _mk_engine(kind, model, params, wl.base, x, async_staging=True)
+    ss_sync = sync.apply_stream(wl.batches)
+    ss = asyn.apply_stream(wl.batches)
+    np.testing.assert_array_equal(np.asarray(sync.embeddings),
+                                  np.asarray(asyn.embeddings))
+    assert ss.prefetch_hits == len(wl.batches) - 1  # deterministic, CI-gated
+    # the counter is not tautological: the sync escape hatch flushes in
+    # dispatch (a backend barrier per batch), so it must score 0 — a
+    # silent regression to synchronous staging fails the CI exact gate
+    assert ss_sync.prefetch_hits == 0
+    assert ss.staged_bytes == asyn.staging.stats.staged_bytes > 0
+    assert ss.sync_wait_s >= 0.0 and ss.compute_s >= 0.0
+
+
+# ---------------------------------------------------------------------- #
+# fault injection: worker exceptions surface out of flush()
+# ---------------------------------------------------------------------- #
+def test_worker_exception_propagates_out_of_flush():
+    x, wl = _mk_stream(n=100, num_batches=2, seed=13)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(2), [8, 8])
+    eng = OffloadedRTECEngine(model, params, wl.base, x)
+    eng.apply_batch(wl.batches[0])  # healthy batch first
+
+    def boom(tag):
+        if tag == "final":
+            raise ValueError("injected staging fault")
+
+    eng.staging.writeback_hook = boom
+    backend, orch = eng._backend, eng._orch
+    b = wl.batches[1]
+    g_new = orch._apply_graph(b)
+    prep = backend.plan(orch.graph, g_new, b)
+    backend.dispatch(prep)  # final write-back fails on the worker thread
+    with pytest.raises(RuntimeError, match="staging"):
+        backend.flush()
+
+
+def test_worker_exception_reaches_apply_batch_caller():
+    """End-to-end: the orchestrator's flush inside apply_batch re-raises
+    the worker failure on the caller thread — async staging can never
+    swallow a write-back error."""
+    x, wl = _mk_stream(n=100, num_batches=2, seed=17)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(3), [8, 8])
+    eng = OffloadedRTECEngine(model, params, wl.base, x)
+    eng.apply_batch(wl.batches[0])
+    eng.staging.writeback_hook = lambda tag: (_ for _ in ()).throw(
+        ValueError("injected staging fault"))
+    with pytest.raises(RuntimeError, match="staging"):
+        eng.apply_batch(wl.batches[1])
+
+
+# ---------------------------------------------------------------------- #
+# scheduling: slowed host gathers hide behind device compute
+# ---------------------------------------------------------------------- #
+def test_overlap_hides_slow_gather(monkeypatch):
+    """With every host gather slowed by ``delay`` and a compute window
+    wider than the delay, the async schedule prefetches layer l+1's gather
+    during layer l's compute, so the caller's staging wait must stay well
+    below the serial staging time (= the worker's total gather work)."""
+    import repro.core.backend as backend_mod
+
+    real_layer = backend_mod.incremental_layer
+
+    def slow_layer(*a, **k):  # widen the per-layer compute window
+        time.sleep(0.025)
+        return real_layer(*a, **k)
+
+    monkeypatch.setattr(backend_mod, "incremental_layer", slow_layer)
+    x, wl = _mk_stream(n=120, num_batches=6, seed=21)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(4), [8, 8, 8])
+    eng = OffloadedRTECEngine(model, params, wl.base, x)
+    delay = 0.012
+    eng.staging.gather_hook = lambda tag: time.sleep(delay)
+    ss = eng.apply_stream(wl.batches)
+
+    st = eng.staging.stats
+    assert st.gather_jobs == len(wl.batches) * eng.L
+    serial = st.work_gather_s  # what inline staging would cost end-to-end
+    assert serial >= st.gather_jobs * delay
+    # the ISSUE-5 bound: overlapped staging waits < serial staging time
+    # (0.6 adds margin over the structural ~1/L exposed fraction: only
+    # each batch's first gather has no compute window to hide behind)
+    assert ss.sync_wait_s < 0.6 * serial, (ss.sync_wait_s, serial)
+
+
+# ---------------------------------------------------------------------- #
+# pipeline unit behavior
+# ---------------------------------------------------------------------- #
+def test_pipeline_inorder_execution_and_drain():
+    pipe = HostStagingPipeline(num_layers=2, async_mode=True)
+    order = []
+    tickets = [pipe.submit_gather(lambda i=i: order.append(("g", i)), tag=i)
+               for i in range(3)]
+    pipe.submit_writeback(lambda: order.append(("wb", 0)), nbytes=16)
+    pipe.drain()
+    assert order == [("g", 0), ("g", 1), ("g", 2), ("wb", 0)]
+    assert all(t.done() for t in tickets)
+    assert pipe.stats.gather_jobs == 3 and pipe.stats.writeback_jobs == 1
+    assert pipe.stats.staged_bytes == 16  # writeback nbytes; gathers returned None
+    pipe.close()
+
+
+def test_pipeline_sync_mode_runs_inline_and_raises_at_submit():
+    pipe = HostStagingPipeline(num_layers=1, async_mode=False)
+    seen = []
+    t = pipe.submit_gather(lambda: seen.append(1) or np.zeros((2, 4), np.float32))
+    assert t.done() and seen == [1]
+    assert pipe.wait_gather(t).shape == (2, 4)
+    assert pipe.stats.staged_bytes == 32
+    with pytest.raises(RuntimeError, match="staging"):
+        pipe.submit_writeback(lambda: 1 / 0)
+    pipe.drain()  # the sync path raised at submit; drain stays clean
+
+
+def test_staging_buffers_grow_only_and_double_buffering():
+    bufs = StagingBuffers()
+    v1 = bufs.take("h", 8, (4,))
+    base1 = v1.base
+    v2 = bufs.take("h", 6, (4,))  # shrink: same backing buffer
+    assert v2.base is base1 and v2.shape == (6, 4)
+    v3 = bufs.take("h", 32, (4,))  # growth reallocates (grow-only, ≥2x)
+    assert v3.shape == (32, 4) and v3.base is not base1
+    assert bufs.take("h", 40, (4,)).base is not None
+    # distinct trailing shapes never alias
+    assert bufs.take("h", 8, (5,)).base is not v3.base
+
+    pipe = HostStagingPipeline(num_layers=2, async_mode=False)
+    a = pipe.buffers(0)
+    pipe.begin_batch()
+    b = pipe.buffers(0)
+    pipe.begin_batch()
+    c = pipe.buffers(0)
+    assert a is not b and a is c  # two sets per layer, alternated per batch
