@@ -15,7 +15,14 @@ The gate watches a small **metric matrix** (``SPECS``), not a single cell:
   branch the gcn cell never touches;
 * ``fig7/smoke/gcn/offload_transfer_rows`` — the offload engine's H2D+D2H
   row volume, a *deterministic* count (no timing noise): growth means the
-  compact row sets or remap tables regressed.
+  compact row sets or remap tables regressed;
+* ``fig7/smoke/gcn/frontend_reads_served`` / ``_staleness_batches`` — the
+  serving front-end's deterministic read counters from its fixed
+  interleaving schedule (ISSUE 6), gated exactly; the read-latency rows
+  stay non-blocking telemetry.
+
+Every gated cell now reports through ``StreamStats.as_dict()`` (the single
+result type) via ``benchmarks.common.emit_stream_stats``.
 
 Speedup metrics fail when they drop below their absolute ``floor`` or
 regress more than ``tolerance`` vs the committed baseline; volume metrics
@@ -78,6 +85,14 @@ SPECS = (
     # (full-state staging would be ~10x) — 5% creep tolerance vs baseline
     MetricSpec(name="fig7/smoke/gcn/offload_staged_bytes", kind="volume",
                ceiling=200_000.0, tolerance=0.05),
+    # serving front-end read counters (ISSUE 6): the smoke cell's read
+    # schedule is deterministic (one fresh + one two-back pinned read per
+    # batch once version ≥ 2 → 10 served, cumulative staleness 8), so both
+    # counters gate BLOCKING and exactly; the companion read_p99 latency
+    # row is telemetry and never gated
+    MetricSpec(name="fig7/smoke/gcn/frontend_reads_served", kind="exact"),
+    MetricSpec(name="fig7/smoke/gcn/frontend_staleness_batches",
+               kind="exact"),
 )
 
 # Gated against BENCH_sharded.json by the multi-device CI job

@@ -108,3 +108,37 @@ def run_stream_pipelined(engine, wl) -> float:
 
 def gnn_params(model, dims, seed=0):
     return model.init_layers(jax.random.PRNGKey(seed), dims)
+
+
+def emit_stream_stats(prefix: str, ss, expect_prefetch: int = None,
+                      expect_reads: int = None,
+                      expect_staleness: int = None) -> None:
+    """Emit a StreamStats through its normalized ``as_dict()`` view (the
+    single result type, ISSUE 6) as the standard `<prefix>_*` rows:
+
+    * ``<prefix>_stream_wall`` — wall us, ``plan_<v>us`` derived;
+    * ``<prefix>_prefetch_hits`` / ``<prefix>_staged_bytes`` — the overlap
+      counters (only when ``expect_prefetch`` is given: structural
+      expectation for the CI exact gate);
+    * ``<prefix>_reads_served`` / ``<prefix>_staleness_batches`` — the
+      serving front-end's deterministic read counters (only when
+      ``expect_reads`` is given; CI exact gate), plus the non-gated
+      ``<prefix>_read_p99`` latency row.
+    """
+    d = ss.as_dict()
+    emit(f"{prefix}_stream_wall", d["wall_s"] * 1e6,
+         f"plan_{d['plan_s'] * 1e6:.0f}us")
+    if expect_prefetch is not None:
+        emit(f"{prefix}_prefetch_hits", float(d["prefetch_hits"]),
+             f"expect_{expect_prefetch}")
+        emit(f"{prefix}_staged_bytes", float(d["staged_bytes"]),
+             f"sync_wait_{d['sync_wait_s'] * 1e6:.0f}us_compute_"
+             f"{d['compute_s'] * 1e6:.0f}us")
+    if expect_reads is not None:
+        emit(f"{prefix}_reads_served", float(d["reads_served"]),
+             f"expect_{expect_reads}")
+        emit(f"{prefix}_staleness_batches", float(d["staleness_batches"]),
+             f"expect_{expect_staleness}")
+        emit(f"{prefix}_read_p99", d["read_p99_s"] * 1e6,
+             f"p50_{d['read_p50_s'] * 1e6:.0f}us_rejected_"
+             f"{d['reads_rejected']}")

@@ -1,9 +1,14 @@
 """Paper Fig. 7: per-batch response time + throughput (edge updates/s)
-across six GNN models × methods, in-memory processing."""
+across six GNN models × methods, in-memory processing.
+
+Also hosts the serving-frontend cells (ISSUE 6): the smoke job's
+deterministic read-counter cell (`smoke_frontend`, CI-gated exactly) and
+the full sweep's latency-vs-throughput curve (`run_serving`, telemetry)."""
 from __future__ import annotations
 
 from benchmarks.common import (
     emit,
+    emit_stream_stats,
     gnn_params,
     make_engine,
     run_stream,
@@ -69,19 +74,44 @@ def smoke():
         if ss is None or s.wall_s < ss.wall_s:
             off, ss = eng, s  # keep wall and plan_s from the same run;
             # the gated counters are deterministic across repeats
-    emit("fig7/smoke/gcn/offload_stream_wall", ss.wall_s * 1e6,
-         f"plan_{ss.plan_s * 1e6:.0f}us")
-    emit("fig7/smoke/gcn/offload_transfer_rows",
-         float(off.transfers.total_rows), f"{off.transfers.total_rows}rows")
     # overlap metric set (ISSUE 5) — deterministic counters, CI-gated:
     # prefetch_hits is structural (every batch after the first plans while
     # the previous executes), staged_bytes is a plan-determined payload
-    # volume; sync_wait vs compute is telemetry only (timing noise)
-    emit("fig7/smoke/gcn/offload_prefetch_hits", float(ss.prefetch_hits),
-         f"expect_{len(wl.batches) - 1}")
-    emit("fig7/smoke/gcn/offload_staged_bytes", float(ss.staged_bytes),
-         f"sync_wait_{ss.sync_wait_s * 1e6:.0f}us_compute_"
-         f"{ss.compute_s * 1e6:.0f}us")
+    # volume; sync_wait vs compute is telemetry only (timing noise).
+    # Rows render through StreamStats.as_dict (the single result type).
+    emit_stream_stats("fig7/smoke/gcn/offload", ss,
+                      expect_prefetch=len(wl.batches) - 1)
+    emit("fig7/smoke/gcn/offload_transfer_rows",
+         float(off.transfers.total_rows), f"{off.transfers.total_rows}rows")
+    smoke_frontend(model, params, wl, x)
+
+
+def smoke_frontend(model, params, wl, x):
+    """Serving front-end smoke cell (ISSUE 6): reads interleaved with the
+    existing 6-batch stream on the offload engine, deterministic schedule —
+    before batch i one read pinned at the current version i plus, once
+    version ≥ 2, one pinned at i-2.  Over 6 batches that is 10 served reads
+    with cumulative staleness 8 (4 × 2 batches), both CI-gated exactly;
+    read_p99 is latency telemetry (never gated)."""
+    import numpy as np
+
+    from repro.serve import ServingFrontend, create_engine, EngineConfig
+
+    eng = create_engine("offload", EngineConfig(
+        model=model, graph=wl.base, x=x, params=params))
+    fr = ServingFrontend(eng, max_pending_reads=16, max_versions=4)
+    rows = np.arange(0, wl.base.n, 17)
+    for b in wl.batches:
+        fr.submit_read(rows)  # pinned at the current version
+        if fr.version >= 2:
+            fr.submit_read(rows, version=fr.version - 2)
+        fr.apply_batch(b)
+    fr.drain()
+    n_fresh = len(wl.batches)
+    n_stale = len(wl.batches) - 2
+    emit_stream_stats("fig7/smoke/gcn/frontend", fr.stats(),
+                      expect_reads=n_fresh + n_stale,
+                      expect_staleness=2 * n_stale)
 
 
 def smoke_sharded(num_shards: int):
@@ -135,13 +165,8 @@ def smoke_sharded(num_shards: int):
     hybrid_pipe = ShardedOffloadRTECEngine(model, params, wl.base, x,
                                            num_shards=num_shards)
     ssh = hybrid_pipe.apply_stream(wl.batches)
-    emit("fig7/sharded/gcn/hybrid_stream_wall", ssh.wall_s * 1e6,
-         f"plan_{ssh.plan_s * 1e6:.0f}us")
-    emit("fig7/sharded/gcn/hybrid_prefetch_hits", float(ssh.prefetch_hits),
-         f"expect_{len(wl.batches) - 1}")
-    emit("fig7/sharded/gcn/hybrid_staged_bytes", float(ssh.staged_bytes),
-         f"sync_wait_{ssh.sync_wait_s * 1e6:.0f}us_compute_"
-         f"{ssh.compute_s * 1e6:.0f}us")
+    emit_stream_stats("fig7/sharded/gcn/hybrid", ssh,
+                      expect_prefetch=len(wl.batches) - 1)
     diff_p = float(np.abs(np.asarray(single.embeddings)
                           - hybrid_pipe.embeddings).max())
     emit("fig7/sharded/gcn/hybrid_stream_max_abs_diff_vs_single", diff_p, "")
@@ -184,3 +209,42 @@ def run(quick: bool = True):
                 f"fig7/{mname}/inc_speedup_vs_{method}", times["inc"] * 1e6,
                 f"{times[method] / times['inc']:.2f}x",
             )
+    run_serving(x, wl)
+
+
+def run_serving(x, wl):
+    """Latency-vs-throughput serving cells (ISSUE 6, full sweep only): the
+    gcn offload engine under increasing read pressure — r reads per update
+    batch, each pinned one version back — reporting update throughput
+    against read p50/p99.  Telemetry rows (timing on a shared CI host is
+    noise); the deterministic read counters are gated in the *smoke* cell."""
+    import numpy as np
+
+    from repro.serve import EngineConfig, ServingFrontend, create_engine
+
+    model = make_model("gcn")
+    params = gnn_params(model, [16, 16, 16])
+    upd_per_batch = wl.batches[0].num_updates
+    rows = np.arange(0, wl.base.n, 7)
+    # un-emitted warmup stream: charge the per-shape-bucket jit compiles
+    # here, not to the first sweep point (the inc_pipelined precedent —
+    # otherwise the r=0 cell eats ~10s of compile and the curve reads
+    # backwards)
+    warm = create_engine("offload", EngineConfig(
+        model=model, graph=wl.base, x=x, params=params))
+    warm.apply_stream(wl.batches)
+    for r in (0, 1, 4, 16):
+        eng = create_engine("offload", EngineConfig(
+            model=model, graph=wl.base, x=x, params=params))
+        fr = ServingFrontend(eng, max_pending_reads=4 * max(r, 1) + 1)
+        for b in wl.batches:
+            for _ in range(r):
+                fr.submit_read(rows, version=max(0, fr.version - 1))
+            fr.apply_batch(b)
+        fr.drain()
+        ss = fr.stats()
+        thpt = upd_per_batch * len(wl.batches) / max(ss.wall_s, 1e-9)
+        emit(f"fig7/serving/gcn/reads{r}_read_p99", ss.read_p99_s * 1e6,
+             f"p50_{ss.read_p50_s * 1e6:.0f}us")
+        emit(f"fig7/serving/gcn/reads{r}_throughput", ss.wall_s * 1e6,
+             f"{thpt:.0f}_upd_per_s")

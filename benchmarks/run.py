@@ -8,8 +8,11 @@
 
 Each module reproduces one paper artifact (DESIGN.md §8).  `--full` uses the
 larger graph sizes; default (quick) finishes on one CPU in minutes.
-`--smoke` runs the tiny fig7 cells and writes `BENCH_smoke.json` — the CI
-benchmark-smoke job gates on it (benchmarks/check_regression.py).
+`--smoke` runs the tiny fig7 cells (including the serving-frontend read
+cell, ISSUE 6) and writes `BENCH_smoke.json` — the CI benchmark-smoke job
+gates on it (benchmarks/check_regression.py).  All stream cells emit
+through `StreamStats.as_dict()` (`benchmarks.common.emit_stream_stats`),
+the repo's single result type.
 `--devices N` forces N host devices (XLA flag set **before** jax imports,
 which is why all heavy imports live inside the entry points) and, with
 `--smoke`, runs the sharded-engine + sharded-offload-hybrid cells instead,

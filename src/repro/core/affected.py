@@ -92,6 +92,17 @@ class BatchPlan:
         return sum(p.n_out_rows for p in self.layers)
 
 
+def final_write_rows(plan: BatchPlan) -> np.ndarray:
+    """Global ids of the final-layer rows a batch's execution may write.
+
+    ``out_rows`` is the planner's "rows whose h^L changes" set, so the
+    serving front-end can snapshot exactly these rows *before* dispatch and
+    reconstruct any retained version bitwise (repro.serve.frontend): every
+    row outside this set keeps its pre-batch value untouched."""
+    lp = plan.layers[-1]
+    return np.unique(lp.out_rows[lp.out_mask].astype(np.int64))
+
+
 def _lookup_in_edge_data(g: CSRGraph, src: np.ndarray, dst: np.ndarray):
     """Vectorized (weight, etype) lookup for existing edges (u, v)."""
     w = np.empty(src.shape[0], np.float32)
@@ -430,6 +441,10 @@ class PackedPlan:
     n_inc_edges: int
     n_full_edges: int
     n_out_rows: int
+    # global ids of final-layer rows this plan may write — the serving
+    # front-end snapshots these before dispatch to build its per-version
+    # undo log (repro.serve.frontend)
+    out_rows_final: Optional[np.ndarray] = None
 
 
 def _schedule_from_dstk(dstk: np.ndarray, r_cap: int, tv: int, be: int):
@@ -569,6 +584,7 @@ def pack_plan(
         n_inc_edges=plan.total_inc_edges(),
         n_full_edges=plan.total_full_edges(),
         n_out_rows=plan.total_vertices(),
+        out_rows_final=final_write_rows(plan),
     )
 
 
@@ -682,6 +698,8 @@ class ShardedPlan:
     # optional per-shard Pallas block-CSR schedules: one stacked
     # (perm [S, cap], dloc [S, cap], brows [S, cap//be]) triple per layer
     pallas_sh: Optional[Tuple[Tuple[np.ndarray, np.ndarray, np.ndarray], ...]] = None
+    # global ids of final-layer rows this plan may write (serving undo log)
+    out_rows_final: Optional[np.ndarray] = None
 
 
 def _owner_runs(owners: np.ndarray, n_shards: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -825,6 +843,7 @@ def shard_plan(
         n_out_rows=plan.total_vertices(),
         n_halo_rows=halo_total,
         pallas_sh=pallas_sh,
+        out_rows_final=final_write_rows(plan),
     )
 
 

@@ -1,4 +1,4 @@
-"""Residency-backend architecture: one orchestrator, four state substrates.
+"""Residency-backend architecture: one orchestrator, five state substrates.
 
 The paper's §V GPU-CPU co-processing story has a single control flow —
 plan each update batch on the host (Alg. 4), pack it into a transfer
@@ -41,6 +41,18 @@ Protocol contract (what ``StreamOrchestrator`` relies on):
   ``flush()`` (a no-op for fully-async device substrates);
 * ``flush()`` + ``jax.block_until_ready(sync_arrays())`` is a full barrier:
   after it, ``embeddings`` reflects every dispatched batch.
+
+A fifth substrate, :class:`ChunkedBackend`, executes batches by chunked
+constrained re-computation through the §V-C scheduler (host-resident state,
+device residency bounded by ``chunk_size``) — the fallback when a batch's
+affected subgraph exceeds what the staging substrates can hold at once.
+
+Serving (ISSUE 6): every substrate additionally implements the Serving API
+(``snapshot_rows`` / ``changed_rows``, documented on :class:`StateBackend`),
+which :class:`repro.serve.frontend.ServingFrontend` uses to answer
+embedding reads pinned to historical versions bitwise-consistently while
+updates continue to stream.  Construct any of the five through
+:func:`repro.serve.create_engine`.
 """
 from __future__ import annotations
 
@@ -120,7 +132,19 @@ class StreamStats:
     blocked on host staging (gather waits + drain barriers) and
     ``compute_s`` is caller time blocked on the device (D2H waits) —
     timing telemetry, never gated.  All four stay zero for backends
-    without a staging pipeline."""
+    without a staging pipeline.
+
+    Read-side serving fields (ISSUE 6): populated only by
+    :class:`repro.serve.frontend.ServingFrontend` — ``reads_served`` /
+    ``reads_rejected`` / ``staleness_batches`` are deterministic counters
+    (CI-gated exactly in the smoke bench); ``read_p50_s`` / ``read_p99_s``
+    are submit→serve latency percentiles (telemetry, never gated).  All
+    default to zero so pre-serving baselines and gates keep passing.
+
+    ``StreamStats`` is the single result type for *every* entry point
+    (``apply_stream``, the serving front-end, the bench cells);
+    :meth:`as_dict` is the normalized scalar view the benchmark emitters
+    consume instead of ad-hoc attribute plucking."""
 
     batches: List[BatchStats]
     wall_s: float
@@ -129,10 +153,38 @@ class StreamStats:
     prefetch_hits: int = 0
     sync_wait_s: float = 0.0
     compute_s: float = 0.0
+    # read-side serving metrics (repro.serve.frontend)
+    reads_served: int = 0
+    reads_rejected: int = 0
+    read_p50_s: float = 0.0
+    read_p99_s: float = 0.0
+    staleness_batches: int = 0
 
     @property
     def mean_batch_s(self) -> float:
         return self.wall_s / max(1, len(self.batches))
+
+    def as_dict(self) -> dict:
+        """Normalized scalar view: every entry point reports through these
+        keys (benchmarks/common.py ``emit_stream_stats`` renders them)."""
+        return {
+            "n_batches": len(self.batches),
+            "wall_s": self.wall_s,
+            "plan_s": self.plan_s,
+            "mean_batch_s": self.mean_batch_s,
+            "inc_edges": sum(b.inc_edges for b in self.batches),
+            "full_edges": sum(b.full_edges for b in self.batches),
+            "out_vertices": sum(b.out_vertices for b in self.batches),
+            "staged_bytes": self.staged_bytes,
+            "prefetch_hits": self.prefetch_hits,
+            "sync_wait_s": self.sync_wait_s,
+            "compute_s": self.compute_s,
+            "reads_served": self.reads_served,
+            "reads_rejected": self.reads_rejected,
+            "read_p50_s": self.read_p50_s,
+            "read_p99_s": self.read_p99_s,
+            "staleness_batches": self.staleness_batches,
+        }
 
 
 # ====================================================================== #
@@ -178,6 +230,40 @@ class StateBackend(abc.ABC):
         """Snapshot of the backend's host-staging counters (None when the
         substrate has no :class:`HostStagingPipeline`)."""
         return None
+
+    # ------------------------------------------------------------------ #
+    # Serving API (ISSUE 6): versioned snapshot reads.
+    #
+    # The version/consistency contract the serving front-end
+    # (:class:`repro.serve.frontend.ServingFrontend`) builds on:
+    #
+    # * a **version** is one flushed batch — after ``flush()`` +
+    #   ``block_until_ready(sync_arrays())`` the substrate's state *is* the
+    #   post-batch-v state, bitwise;
+    # * ``snapshot_rows(rows)`` is a consistent host gather of final-layer
+    #   embedding rows at such a boundary.  It must not inject work into a
+    #   live staging pipeline: the host-resident substrates flush first
+    #   (a no-op at a boundary — the worker queue is already drained), so
+    #   reads never contend with the async worker's pristine-gather
+    #   schedule;
+    # * ``changed_rows(prep)`` names, *before dispatch*, every final-layer
+    #   row the prepared plan may write.  Snapshotting exactly these rows
+    #   pre-dispatch yields a per-version undo record, which is how the
+    #   front-end answers a read pinned to version v bitwise-equal to the
+    #   post-batch-v state after later batches have run.
+    # ------------------------------------------------------------------ #
+    def snapshot_rows(self, rows: np.ndarray) -> np.ndarray:
+        """Host gather of final-layer embedding rows (consistent at a
+        version boundary).  Substrates override with an O(len(rows)) path;
+        this fallback materializes the full embedding table."""
+        return np.asarray(self.embeddings)[np.asarray(rows, np.int64)]
+
+    def changed_rows(self, prep: Any) -> np.ndarray:
+        """Global ids of final-layer rows ``dispatch(prep)`` may write
+        (value-independent: derived from the plan, usable pre-dispatch)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not expose plan write sets; "
+            "versioned serving reads are unsupported on this substrate")
 
     @abc.abstractmethod
     def sync_arrays(self) -> list:
@@ -239,12 +325,19 @@ class StreamOrchestrator:
     # ------------------------------------------------------------------ #
     # per-batch API (honest timing: block=True syncs at the boundary)
     # ------------------------------------------------------------------ #
-    def apply_batch(self, batch: UpdateBatch, block: bool = True) -> BatchStats:
+    def apply_batch(self, batch: UpdateBatch, block: bool = True,
+                    on_plan=None) -> BatchStats:
         t0 = time.perf_counter()
         g_new = self._apply_graph(batch)
         t1 = time.perf_counter()
         prep = self.backend.plan(self.graph, g_new, batch)
         t2 = time.perf_counter()
+        if on_plan is not None:
+            # serving hook (repro.serve.frontend): runs between plan and
+            # dispatch, while the substrate still holds the *pre-batch*
+            # state — the front-end snapshots the plan's write set here to
+            # build its per-version undo log
+            on_plan(prep)
         self.backend.dispatch(prep)
         if block:
             self.backend.flush()
@@ -460,6 +553,23 @@ class DeviceBackend(StateBackend):
 
     def sync_arrays(self) -> list:
         return [v for v in (*self._h, *self._a, *self._nct) if v is not None]
+
+    # ------------------------------------------------------------------ #
+    # Serving API: O(len(rows)) device gather + D2H (never O(V))
+    # ------------------------------------------------------------------ #
+    def snapshot_rows(self, rows: np.ndarray) -> np.ndarray:
+        idx = jnp.asarray(np.asarray(rows, np.int64), jnp.int32)
+        h = self._h[-1]
+        if h is None:  # store_h=False: rebuild from the cached a states
+            return np.asarray(jnp.take(self.reconstruct_h()[-1], idx, axis=0))
+        return np.asarray(jnp.take(h[:-1], idx, axis=0))
+
+    def changed_rows(self, prep) -> np.ndarray:
+        if isinstance(prep, _UnfusedPrep):
+            from repro.core.affected import final_write_rows
+
+            return final_write_rows(prep.plan)
+        return prep.out_rows_final
 
     # ------------------------------------------------------------------ #
     def plan(self, g_old: CSRGraph, g_new: CSRGraph, batch: UpdateBatch):
@@ -737,6 +847,18 @@ class OffloadBackend(_DeferredWritebackMixin, StateBackend):
         self.h = [self.h[0]] + [np.array(s.h) for s in states]
         self.a = [np.array(s.a) for s in states]
         self.nct = [np.array(s.nct) for s in states]
+
+    # ------------------------------------------------------------------ #
+    # Serving API: host-numpy gather; flush() first so a deferred final
+    # write-back can never be missed (a no-op at a version boundary — the
+    # staging worker's queue is already drained, so reads never block it)
+    # ------------------------------------------------------------------ #
+    def snapshot_rows(self, rows: np.ndarray) -> np.ndarray:
+        self.flush()
+        return self.h[-1][np.asarray(rows, np.int64)]
+
+    def changed_rows(self, prep: "_OffloadPrep") -> np.ndarray:
+        return np.unique(prep.transfers[-1].srows)
 
     # ------------------------------------------------------------------ #
     # planning phase (host only, value-independent)
@@ -1042,6 +1164,17 @@ class ShardBackend(_StreamMeshMixin, StateBackend):
         return [*self._h, *self._a, *self._nct]
 
     # ------------------------------------------------------------------ #
+    # Serving API: one device gather over the stacked blocks — row g lives
+    # at block [g // rows_per, g % rows_per] (scratch row is never read)
+    # ------------------------------------------------------------------ #
+    def snapshot_rows(self, rows: np.ndarray) -> np.ndarray:
+        r = np.asarray(rows, np.int64)
+        return np.asarray(self._h[-1][r // self.rows_per, r % self.rows_per])
+
+    def changed_rows(self, prep: ShardedPlan) -> np.ndarray:
+        return prep.out_rows_final
+
+    # ------------------------------------------------------------------ #
     def plan(self, g_old: CSRGraph, g_new: CSRGraph, batch: UpdateBatch) -> ShardedPlan:
         plan = build_plan(self.model, g_old, g_new, batch, self.L)
         return shard_plan(plan, self.S, batch.feat_vertices, batch.feat_values,
@@ -1207,6 +1340,19 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
         return []  # flush() is the real barrier; state is host numpy
 
     # ------------------------------------------------------------------ #
+    # Serving API: flush() first so the worker's deferred final write-back
+    # can never be missed (a no-op at a version boundary), then gather from
+    # the per-shard host blocks
+    # ------------------------------------------------------------------ #
+    def snapshot_rows(self, rows: np.ndarray) -> np.ndarray:
+        self.flush()
+        return self._gather_rows(self.h[-1], np.asarray(rows, np.int64))
+
+    def changed_rows(self, prep: _HybridPrep) -> np.ndarray:
+        tr = prep.layers[-1]
+        return np.unique(tr.srows[tr.srows_mask].astype(np.int64))
+
+    # ------------------------------------------------------------------ #
     # planning phase (host only, value-independent)
     # ------------------------------------------------------------------ #
     def plan(self, g_old: CSRGraph, g_new: CSRGraph, batch: UpdateBatch) -> _HybridPrep:
@@ -1356,3 +1502,124 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
         l, tr, srows_flat, outs = payload
         a_new, nct_new, h_new = (np.asarray(o) for o in outs)
         self._writeback_host(l, tr, srows_flat, a_new, nct_new, h_new)
+
+
+# ====================================================================== #
+# ChunkedBackend — host-resident state, chunked full-recompute execution
+# ====================================================================== #
+@dataclasses.dataclass
+class _ChunkedPrep:
+    """Prepared plan for the chunked substrate: the Alg.-4 affected sets
+    plus the post-batch graph (the chunk scheduler re-reads CSR edges at
+    execution time instead of baking transfer tables at plan time)."""
+
+    plan: BatchPlan
+    batch: UpdateBatch
+    g_new: CSRGraph
+    rows_per_layer: List[np.ndarray]  # live out_rows per layer (global ids)
+
+    @property
+    def n_inc_edges(self) -> int:
+        return self.plan.total_inc_edges()
+
+    @property
+    def n_full_edges(self) -> int:
+        return self.plan.total_full_edges()
+
+    @property
+    def n_out_rows(self) -> int:
+        return self.plan.total_vertices()
+
+
+class ChunkedBackend(StateBackend):
+    """Host-resident state executed through the §V-C chunked scheduler.
+
+    The per-layer state lives as host numpy (like :class:`OffloadBackend`)
+    but each batch executes by *constrained re-computation*: per layer, the
+    planner's live ``out_rows`` (⊇ touch ∪ full rows, i.e. every row whose
+    a/nct/h may change) are recomputed from the post-batch graph through
+    :class:`repro.serve.scheduler.ChunkedLayerScheduler` —
+    destination-vertex chunks with inter-chunk shard-embedding reuse, so
+    device residency is bounded by ``chunk_size`` regardless of how large a
+    batch's affected subgraph grows.  This is the fallback substrate for
+    affected sets too big to stage at once; output matches the incremental
+    substrates to numerical tolerance (recompute vs. signed incremental
+    accumulation), not bitwise — the cross-backend matrix covers it
+    (tests/test_backends.py).
+
+    Serving API: state is plain host numpy with no deferred write-back, so
+    ``snapshot_rows`` is a direct gather and ``changed_rows`` is the final
+    layer's planned recompute set."""
+
+    def __init__(self, model: GNNModel, params: Sequence[Params],
+                 graph: CSRGraph, x: np.ndarray, chunk_size: int = 8192,
+                 chunk_reuse: bool = True):
+        # deferred import: repro.serve.scheduler pulls repro.core.full
+        # while this module is itself mid-import under repro.core.__init__
+        from repro.serve.scheduler import ChunkedLayerScheduler
+
+        self.model = model
+        self.params = list(params)
+        self.L = len(self.params)
+        self.x = np.asarray(x, np.float32)
+        self.scheduler = ChunkedLayerScheduler(model, chunk_size=chunk_size,
+                                               reuse=chunk_reuse)
+        states = full_forward(model, params, jnp.asarray(self.x), graph)
+        self.h: List[np.ndarray] = [self.x.copy()] + [np.array(s.h) for s in states]
+        self.a: List[np.ndarray] = [np.array(s.a) for s in states]
+        self.nct: List[np.ndarray] = [np.array(s.nct) for s in states]
+
+    @property
+    def embeddings(self) -> np.ndarray:
+        return self.h[-1]
+
+    def state_bytes(self) -> int:
+        return (sum(a.nbytes for a in self.a) + sum(c.nbytes for c in self.nct)
+                + sum(h.nbytes for h in self.h))
+
+    def sync_arrays(self) -> list:
+        return []  # dispatch is synchronous; state is host numpy
+
+    def refresh(self, graph: CSRGraph) -> None:
+        states = full_forward(self.model, self.params, jnp.asarray(self.h[0]),
+                              graph)
+        self.h = [self.h[0]] + [np.array(s.h) for s in states]
+        self.a = [np.array(s.a) for s in states]
+        self.nct = [np.array(s.nct) for s in states]
+
+    # ------------------------------------------------------------------ #
+    # Serving API
+    # ------------------------------------------------------------------ #
+    def snapshot_rows(self, rows: np.ndarray) -> np.ndarray:
+        return self.h[-1][np.asarray(rows, np.int64)]
+
+    def changed_rows(self, prep: "_ChunkedPrep") -> np.ndarray:
+        return prep.rows_per_layer[-1]
+
+    # ------------------------------------------------------------------ #
+    def plan(self, g_old: CSRGraph, g_new: CSRGraph, batch: UpdateBatch) -> _ChunkedPrep:
+        plan = build_plan(self.model, g_old, g_new, batch, self.L)
+        rows = [np.unique(lp.out_rows[lp.out_mask].astype(np.int64))
+                for lp in plan.layers]
+        return _ChunkedPrep(plan=plan, batch=batch, g_new=g_new,
+                            rows_per_layer=rows)
+
+    def dispatch(self, prep: _ChunkedPrep) -> None:
+        """Layer-by-layer chunked recompute of the affected rows.  Layer
+        ``l`` reads ``h[l]`` *after* the previous layer's write-back (and
+        the batch's feature scatter for layer 0), so the recompute sees
+        exactly the incremental substrates' layer inputs."""
+        batch = prep.batch
+        if batch.feat_vertices is not None and batch.feat_vertices.size:
+            self.h[0][np.asarray(batch.feat_vertices, np.int64)] = np.asarray(
+                batch.feat_values, np.float32)
+        deg = prep.plan.deg_new[:-1]  # [n] new-graph degrees (drop scratch)
+        for l in range(self.L):
+            rows = prep.rows_per_layer[l]
+            if not rows.size:
+                continue
+            a_r, nct_r, h_r = self.scheduler.run_layer(
+                self.params[l], prep.g_new, self.h[l], rows, deg)
+            self.a[l][rows] = a_r
+            self.nct[l][rows] = nct_r
+            self.h[l + 1][rows] = h_r

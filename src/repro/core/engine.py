@@ -83,6 +83,24 @@ class RTECEngine:
         self._orch.refresh()
 
     # ------------------------------------------------------------------ #
+    # Serving API (ISSUE 6): versioned snapshot reads — see the contract
+    # on repro.core.backend.StateBackend / repro.serve.frontend
+    # ------------------------------------------------------------------ #
+    def snapshot_rows(self, rows) -> "np.ndarray":  # noqa: F821
+        """Host gather of final-layer embedding rows (consistent after a
+        blocking ``apply_batch``)."""
+        return self._backend.snapshot_rows(rows)
+
+    def serving_frontend(self, max_pending_reads: int = 64,
+                         max_versions: int = 8):
+        """A :class:`~repro.serve.frontend.ServingFrontend` over this
+        engine: update-batch writes + embedding reads pinned to versions."""
+        from repro.serve.frontend import ServingFrontend
+
+        return ServingFrontend(self, max_pending_reads=max_pending_reads,
+                               max_versions=max_versions)
+
+    # ------------------------------------------------------------------ #
     @property
     def model(self) -> GNNModel:
         return self._backend.model

@@ -1,0 +1,235 @@
+"""Unified public engine API: one config, one factory, five backends.
+
+Five PRs of engine growth left four parallel constructor surfaces
+(``RTECEngine``, ``OffloadedRTECEngine``, ``ShardedRTECEngine``,
+``ShardedOffloadRTECEngine``) that every caller had to know individually.
+This module redesigns that surface once, InkStream-style (one event-driven
+interface over many models):
+
+* :class:`EngineConfig` — a single dataclass naming every construction
+  knob any backend understands (model/params/graph/features, the device
+  flags, the async-staging flag, the mesh/shard knobs, the chunk knobs).
+  Knobs a backend does not consume are simply ignored by it, so one config
+  can drive a backend sweep.
+* :func:`create_engine` — ``create_engine(backend, config)`` for
+  ``backend`` in :data:`BACKENDS`.  The factory calls the *same*
+  constructors as direct instantiation — no extra wrapping — so factory
+  construction is bitwise-equal to the legacy path (pinned by
+  tests/test_frontend.py).
+* :class:`ChunkedRTECEngine` — public facade for the §V-C chunked
+  substrate (:class:`~repro.core.backend.ChunkedBackend`), previously dead
+  code behind ``repro.serve.scheduler``; now constructible as
+  ``backend="chunked"`` and covered by the cross-backend matrix.
+
+The legacy engine classes remain as thin back-compat facades; this factory
+is the recommended entry point, and
+:func:`serving_frontend` / :meth:`ServingFrontend <repro.serve.frontend.ServingFrontend>`
+attaches the read/write serving layer to whatever it returns.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.backend import (
+    BatchStats,
+    ChunkedBackend,
+    StreamOrchestrator,
+    StreamStats,
+)
+from repro.core.engine import RTECEngine
+from repro.core.operators import GNNModel, Params
+from repro.core.sharded_engine import ShardedRTECEngine
+from repro.graph.csr import CSRGraph
+from repro.graph.streaming import UpdateBatch
+from repro.serve.offload import OffloadedRTECEngine, ShardedOffloadRTECEngine
+
+#: every backend name `create_engine` accepts
+BACKENDS: Tuple[str, ...] = (
+    "device", "offload", "sharded", "sharded_offload", "chunked",
+)
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Construction knobs for every streaming-engine backend.
+
+    Required: ``model``, ``graph``, ``x``, and either ``params`` or
+    ``dims`` (+ ``seed``) to initialize them.  Backend-specific knobs are
+    ignored by backends that do not consume them (e.g. ``num_shards`` by
+    ``backend="device"``), so one config can drive a backend sweep."""
+
+    model: GNNModel
+    graph: CSRGraph
+    x: np.ndarray
+    params: Optional[Sequence[Params]] = None
+    #: layer dims for parameter init when ``params`` is None, e.g. [16, 16]
+    dims: Optional[Sequence[int]] = None
+    seed: int = 0
+    # shared orchestrator knob
+    refresh_every: int = 0
+    # device backend
+    store_h: bool = True
+    fused: bool = True
+    use_pallas_delta: bool = False
+    # host-resident backends
+    async_staging: bool = True
+    # mesh backends
+    mesh: Optional[object] = None
+    num_shards: Optional[int] = None
+    shcfg: Optional[object] = None
+    # chunked backend
+    chunk_size: int = 8192
+    chunk_reuse: bool = True
+
+    def resolved_params(self) -> Sequence[Params]:
+        if self.params is not None:
+            return self.params
+        if self.dims is None:
+            raise ValueError("EngineConfig needs params or dims")
+        return self.model.init_layers(jax.random.PRNGKey(self.seed),
+                                      list(self.dims))
+
+
+class ChunkedRTECEngine:
+    """Facade for the chunked-recompute substrate
+    (:class:`~repro.core.backend.ChunkedBackend`): host-resident state,
+    per-batch execution through the §V-C
+    :class:`~repro.serve.scheduler.ChunkedLayerScheduler` so device
+    residency is bounded by ``chunk_size``.  Output matches the incremental
+    engines to numerical tolerance (recompute vs. incremental
+    accumulation)."""
+
+    def __init__(self, model: GNNModel, params: Sequence[Params],
+                 graph: CSRGraph, x: np.ndarray, chunk_size: int = 8192,
+                 chunk_reuse: bool = True, refresh_every: int = 0):
+        self._backend = ChunkedBackend(model, params, graph, x,
+                                       chunk_size=chunk_size,
+                                       chunk_reuse=chunk_reuse)
+        self._orch = StreamOrchestrator(self._backend, graph,
+                                        refresh_every=refresh_every)
+
+    def apply_batch(self, batch: UpdateBatch, block: bool = True) -> BatchStats:
+        return self._orch.apply_batch(batch, block=block)
+
+    def apply_stream(self, batches: Sequence[UpdateBatch]) -> StreamStats:
+        return self._orch.apply_stream(batches)
+
+    def refresh(self) -> None:
+        self._orch.refresh()
+
+    def snapshot_rows(self, rows) -> np.ndarray:
+        """Host gather of final-layer embedding rows (consistent after a
+        blocking ``apply_batch``)."""
+        return self._backend.snapshot_rows(rows)
+
+    def serving_frontend(self, max_pending_reads: int = 64,
+                         max_versions: int = 8):
+        """A :class:`~repro.serve.frontend.ServingFrontend` over this
+        engine: update-batch writes + embedding reads pinned to versions."""
+        return serving_frontend(self, max_pending_reads=max_pending_reads,
+                                max_versions=max_versions)
+
+    @property
+    def model(self) -> GNNModel:
+        return self._backend.model
+
+    @property
+    def params(self):
+        return self._backend.params
+
+    @property
+    def L(self) -> int:
+        return self._backend.L
+
+    @property
+    def graph(self) -> CSRGraph:
+        return self._orch.graph
+
+    @graph.setter
+    def graph(self, g: CSRGraph) -> None:
+        self._orch.graph = g
+
+    @property
+    def chunk_stats(self):
+        """Chunk/transfer/reuse counters (ChunkStats; benchmarks/fig10)."""
+        return self._backend.scheduler.stats
+
+    @property
+    def x(self) -> np.ndarray:
+        return self._backend.x
+
+    @property
+    def h(self):
+        return self._backend.h
+
+    @property
+    def a(self):
+        return self._backend.a
+
+    @property
+    def nct(self):
+        return self._backend.nct
+
+    @property
+    def embeddings(self) -> np.ndarray:
+        return self._backend.embeddings
+
+    def state_bytes(self) -> int:
+        return self._backend.state_bytes()
+
+    def _sync_arrays(self):
+        return self._backend.sync_arrays()
+
+
+def create_engine(backend: str, config: EngineConfig):
+    """Construct a streaming engine for ``backend`` from one config.
+
+    ``backend`` ∈ :data:`BACKENDS`.  Calls the same constructors as direct
+    instantiation, so the result is bitwise-equal to the legacy path."""
+    params = config.resolved_params()
+    if backend == "device":
+        return RTECEngine(
+            config.model, params, config.graph, config.x,
+            store_h=config.store_h, refresh_every=config.refresh_every,
+            fused=config.fused, use_pallas_delta=config.use_pallas_delta,
+        )
+    if backend == "offload":
+        return OffloadedRTECEngine(
+            config.model, params, config.graph, config.x,
+            async_staging=config.async_staging,
+        )
+    if backend == "sharded":
+        return ShardedRTECEngine(
+            config.model, params, config.graph, config.x, mesh=config.mesh,
+            num_shards=config.num_shards, shcfg=config.shcfg,
+            refresh_every=config.refresh_every,
+            use_pallas_delta=config.use_pallas_delta,
+        )
+    if backend == "sharded_offload":
+        return ShardedOffloadRTECEngine(
+            config.model, params, config.graph, config.x, mesh=config.mesh,
+            num_shards=config.num_shards, shcfg=config.shcfg,
+            refresh_every=config.refresh_every,
+            async_staging=config.async_staging,
+        )
+    if backend == "chunked":
+        return ChunkedRTECEngine(
+            config.model, params, config.graph, config.x,
+            chunk_size=config.chunk_size, chunk_reuse=config.chunk_reuse,
+            refresh_every=config.refresh_every,
+        )
+    raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+
+
+def serving_frontend(engine, max_pending_reads: int = 64,
+                     max_versions: int = 8):
+    """Attach a :class:`~repro.serve.frontend.ServingFrontend` to an engine
+    (anything :func:`create_engine` returns, or a raw orchestrator)."""
+    from repro.serve.frontend import ServingFrontend
+
+    return ServingFrontend(engine, max_pending_reads=max_pending_reads,
+                           max_versions=max_versions)

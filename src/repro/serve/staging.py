@@ -60,6 +60,14 @@ Deterministic counters (``StagingStats.staged_bytes``, job counts) feed
 the CI overlap gate (`benchmarks/check_regression.py`); the timing
 counters (``wait_gather_s``/``wait_device_s``/``work_*``) are telemetry
 for `StreamStats.sync_wait_s` vs `compute_s` and are never gated.
+
+Serving coexistence (ISSUE 6): the pipeline's pristine-gather contract —
+worker jobs read host state in submission order, so a layer's staged view
+is exactly the pre-batch state — also protects snapshot reads.  The
+serving front-end (`repro.serve.frontend`) only gathers at version
+boundaries, i.e. after the owning backend's ``flush()`` has ``drain()``-ed
+the queue (``idle`` is then True), so a snapshot can never observe a
+half-retired write-back nor inject host work under a live gather.
 """
 from __future__ import annotations
 
@@ -227,6 +235,12 @@ class HostStagingPipeline:
         self.stats.writeback_jobs += 1
         self.stats.staged_bytes += int(nbytes)
         return self._submit(fn, "writeback", tag)
+
+    @property
+    def idle(self) -> bool:
+        """True when no submitted job is queued or running (always True in
+        sync mode) — the state a version-boundary snapshot read relies on."""
+        return self._q is None or self._q.unfinished_tasks == 0
 
     def drain(self) -> None:
         """Full barrier: every submitted job has executed and any worker

@@ -4,6 +4,8 @@ import os
 # process) requests 512 placeholder devices.  Keep compilation deterministic.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+import sys
+
 import numpy as np
 import pytest
 
@@ -11,3 +13,29 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+# Every compiled XLA executable pins a handful of anonymous mappings for
+# its JIT'd code, and jit caches are process-global, so a full-suite run
+# accumulates mappings monotonically — by the end of the suite the process
+# sits within a few percent of the kernel's vm.max_map_count (65530
+# default), and crossing it segfaults *inside* the next LLVM compile.
+# Bound the growth: after any module that leaves the map count above the
+# threshold, drop the compiled-executable caches (the affected module
+# recompiles its shapes on next use; correctness is unaffected).
+_MAPS_CLEAR_THRESHOLD = 30_000
+
+
+def _map_count() -> int:
+    try:
+        with open("/proc/self/maps") as f:
+            return sum(1 for _ in f)
+    except OSError:  # non-Linux host: no map limit to bound
+        return 0
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_compile_cache_maps():
+    yield
+    if "jax" in sys.modules and _map_count() > _MAPS_CLEAR_THRESHOLD:
+        sys.modules["jax"].clear_caches()

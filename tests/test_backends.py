@@ -91,12 +91,15 @@ def test_cross_backend_matrix_20_batches(name):
     x, wl = _mk_stream(n=150, num_batches=20, seed=3)
     model = make_model(name)
     params = model.init_layers(jax.random.PRNGKey(0), [8, 8, 8])
+    from repro.serve import ChunkedRTECEngine
+
     device = RTECEngine(model, params, wl.base, jnp.asarray(x))
     offload = OffloadedRTECEngine(model, params, wl.base, x)
     sharded = ShardedRTECEngine(model, params, wl.base, x, num_shards=S)
     hybrid = ShardedOffloadRTECEngine(model, params, wl.base, x, num_shards=S)
+    chunked = ChunkedRTECEngine(model, params, wl.base, x, chunk_size=32)
     for b in wl.batches:
-        for eng in (device, offload, sharded, hybrid):
+        for eng in (device, offload, sharded, hybrid, chunked):
             eng.apply_batch(b)
 
     ref = _final_reference(model, params, x, wl)
@@ -105,6 +108,7 @@ def test_cross_backend_matrix_20_batches(name):
         "offload": np.asarray(offload.embeddings),
         "sharded": np.asarray(sharded.embeddings),
         "hybrid": np.asarray(hybrid.embeddings),
+        "chunked": np.asarray(chunked.embeddings),
     }
     for k, e in embs.items():
         assert float(np.abs(e - ref).max()) < TOL, f"{k} vs full recompute"
