@@ -49,7 +49,7 @@ import argparse
 import dataclasses
 import json
 import sys
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 METRIC = "fig7/smoke/gcn/inc_speedup_vs_full"
 
@@ -111,7 +111,101 @@ SHARDED_SPECS = (
                ceiling=750_000.0, tolerance=0.05),
 )
 
+#: per-regime structural expectations for the adaptive policy on the
+#: default adversarial streams (benchmarks/adversarial.py imports this
+#: table to embed the expect_<v> columns, so the emitting cell and the
+#: gate share one source of truth): exact decision counts and the raw
+#: edge-work total of the adaptive run.
+ADVERSARIAL_EXPECTED = {
+    "hub_burst": {"incremental": 4, "chunked": 0, "full": 2,
+                  "policy_edges": 3168},
+    "delete_heavy": {"incremental": 3, "chunked": 0, "full": 3,
+                     "policy_edges": 1608},
+    "feature_churn": {"incremental": 3, "chunked": 3, "full": 0,
+                      "policy_edges": 4524},
+}
+
+
+def _adversarial_specs(regime: str) -> Tuple[MetricSpec, ...]:
+    """The ISSUE-7 policy metric set for one adversarial regime:
+
+    * the three per-mode decision counts, gated **exactly** (BLOCKING) —
+      the streams are deterministic, so any drift is a policy or planner
+      change, never noise;
+    * the raw edge-work ceiling (tolerance 0: deterministic volume);
+    * the policy-vs-best-fixed cost ratio in the cost model's edge-work
+      units — the adaptive per-batch argmin over mode-independent plans
+      is ≤ every fixed mode by construction, so the deterministic ratio
+      is ≥ 1.0; the 0.91 floor is the acceptance bound "within 1.1× of
+      the best fixed mode";
+    * the same ratio in wall time — 2-core-runner noise plus compile
+      jitter at n=256 scale, so the floor is generous and the structure
+      is carried by the exact counters above.
+    """
+    exp = ADVERSARIAL_EXPECTED[regime]
+    return (
+        MetricSpec(name=f"adversarial/{regime}/policy_incremental_batches",
+                   kind="exact"),
+        MetricSpec(name=f"adversarial/{regime}/policy_chunked_batches",
+                   kind="exact"),
+        MetricSpec(name=f"adversarial/{regime}/policy_full_batches",
+                   kind="exact"),
+        MetricSpec(name=f"adversarial/{regime}/policy_edges", kind="volume",
+                   ceiling=float(exp["policy_edges"]), tolerance=0.0),
+        MetricSpec(name=f"adversarial/{regime}/policy_cost_vs_best_fixed",
+                   kind="speedup", floor=0.91, tolerance=0.05),
+        MetricSpec(name=f"adversarial/{regime}/policy_wall_vs_best_fixed",
+                   kind="speedup", floor=0.30, tolerance=0.60),
+    )
+
+
 SUITES = {"smoke": SPECS, "sharded": SHARDED_SPECS}
+SUITES["adversarial"] = tuple(
+    spec for regime in ADVERSARIAL_EXPECTED
+    for spec in _adversarial_specs(regime))
+for _regime in ADVERSARIAL_EXPECTED:
+    SUITES[f"adversarial-{_regime}"] = _adversarial_specs(_regime)
+
+
+def load_row_names(path: str) -> List[str]:
+    """All row names of a bench artifact (raises ValueError on any shape
+    surprise so callers can map it to the exit-2 path, not a traceback)."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except json.JSONDecodeError as e:
+        raise ValueError(f"{path}: artifact is not valid JSON: {e}")
+    rows = data.get("rows") if isinstance(data, dict) else None
+    if not isinstance(rows, list):
+        raise ValueError(f"{path}: artifact has no 'rows' list")
+    return [str(r).split(",", 2)[0] for r in rows]
+
+
+def missing_namespace_rows(current: str, baseline: str,
+                           specs: Sequence[MetricSpec]) -> List[str]:
+    """Baseline rows under a gated cell's namespace that the candidate
+    artifact no longer emits.
+
+    A renamed bench cell leaves the stale names in the committed baseline;
+    before this check they were silently ignored (the per-spec loop only
+    looks up spec names), so the rename could pass the retry path without
+    anyone refreshing the baseline.  Any such row is exit-2 material —
+    re-measuring cannot conjure a renamed metric."""
+    try:
+        base_names = load_row_names(baseline)
+    except (FileNotFoundError, ValueError):
+        return []  # no baseline at all → absolute bounds only, as before
+    try:
+        cur_names = set(load_row_names(current))
+    except (FileNotFoundError, ValueError) as e:
+        return [f"candidate artifact unreadable: {e}"]
+    roots = tuple({spec.name.rsplit("/", 1)[0] + "/" for spec in specs})
+    return [
+        f"baseline row {name!r} is in a gated namespace but missing from "
+        f"{current} (renamed bench cell? refresh the baseline)"
+        for name in base_names
+        if name.startswith(roots) and name not in cur_names
+    ]
 
 
 def read_row(path: str, metric: str) -> Tuple[float, str]:
@@ -227,6 +321,10 @@ def main() -> int:
 
     failures: List[str] = []
     missing: List[str] = []
+    for msg in missing_namespace_rows(args.current, args.baseline,
+                                      SUITES[args.suite]):
+        print(f"MISSING: {msg}", file=sys.stderr)
+        missing.append(msg)
     for spec in SUITES[args.suite]:
         try:
             value, derived = read_row(args.current, spec.name)

@@ -13,6 +13,11 @@ cell, ISSUE 6) and writes `BENCH_smoke.json` — the CI benchmark-smoke job
 gates on it (benchmarks/check_regression.py).  All stream cells emit
 through `StreamStats.as_dict()` (`benchmarks.common.emit_stream_stats`),
 the repo's single result type.
+`--adversarial [--regime R]` runs the ISSUE-7 adversarial-stream policy
+matrix (3 regimes × {adaptive policy, 3 fixed modes} on the device engine)
+and writes `BENCH_adversarial.json` — the CI tests-adversarial matrix job
+fans one job per regime and gates the per-regime decision counts exactly
+via `benchmarks.check_regression --suite adversarial-<regime>`.
 `--devices N` forces N host devices (XLA flag set **before** jax imports,
 which is why all heavy imports live inside the entry points) and, with
 `--smoke`, runs the sharded-engine + sharded-offload-hybrid cells instead,
@@ -70,6 +75,24 @@ def smoke() -> None:
     print(f"wrote BENCH_smoke.json ({wall:.1f}s)")
 
 
+def adversarial(regime: str = "") -> None:
+    from benchmarks import adversarial as cell
+    from benchmarks.common import ROWS
+
+    t0 = time.time()
+    # always write the artifact, even when a policy gate expectation
+    # fails the step — the emitted decision counts and cost ratios ARE
+    # the diagnostics, and CI uploads the file `if: always()`
+    try:
+        cell.run([regime] if regime else None)
+    finally:
+        wall = time.time() - t0
+        out = {"rows": list(ROWS), "wall_s": round(wall, 2)}
+        with open("BENCH_adversarial.json", "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote BENCH_adversarial.json ({wall:.1f}s)")
+
+
 def smoke_sharded(num_shards: int) -> None:
     from benchmarks import fig7_response_time
     from benchmarks.common import ROWS
@@ -95,6 +118,13 @@ def main() -> None:
     ap.add_argument("--only", type=str, default="")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fig7 cells, <60s; writes BENCH_smoke.json")
+    ap.add_argument("--adversarial", action="store_true",
+                    help="adversarial-stream policy matrix (ISSUE 7); "
+                         "writes BENCH_adversarial.json")
+    ap.add_argument("--regime", type=str, default="",
+                    help="with --adversarial: run a single regime "
+                         "(hub_burst/delete_heavy/feature_churn) — the CI "
+                         "matrix fans one job per regime")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (pre-jax-init); with --smoke, "
                          "run the sharded cell and write BENCH_sharded.json")
@@ -116,6 +146,9 @@ def main() -> None:
             smoke_sharded(args.devices)
         else:
             smoke()
+        return
+    if args.adversarial:
+        adversarial(args.regime)
         return
 
     from benchmarks.common import ROWS, emit

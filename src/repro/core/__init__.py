@@ -15,6 +15,14 @@ from repro.core.full import LayerState, full_forward
 from repro.core.models import ALL_MODELS, make_model
 from repro.core.odec import odec_query
 from repro.core.operators import GNNModel
+from repro.core.policy import (
+    MODES,
+    ExecutionPolicy,
+    PlanCostEstimate,
+    PolicyDecision,
+    estimate_plan_cost,
+    make_policy,
+)
 from repro.core.sharded_engine import ShardedRTECEngine
 
 __all__ = [
@@ -40,4 +48,10 @@ __all__ = [
     "odec_query",
     "certify",
     "validate_registration",
+    "MODES",
+    "ExecutionPolicy",
+    "PlanCostEstimate",
+    "PolicyDecision",
+    "estimate_plan_cost",
+    "make_policy",
 ]

@@ -78,6 +78,7 @@ from repro.core.affected import (
     build_packed_plan,
     build_plan,
     hybrid_plan,
+    pack_plan,
     remap_compact,
     shard_plan,
     shard_rows,
@@ -91,6 +92,7 @@ from repro.core.incremental import (
     with_scratch,
 )
 from repro.core.operators import GNNModel, Params
+from repro.core.policy import ExecutionPolicy, PlanCostEstimate
 from repro.graph.csr import CSRGraph
 from repro.graph.streaming import UpdateBatch
 from repro.serve.staging import HostStagingPipeline, StagingStats, StagingTicket
@@ -107,6 +109,21 @@ class BatchStats:
     plan_time_s: float
     exec_time_s: float
     graph_time_s: float
+    #: execution shape the batch ran as (ISSUE 7): "incremental" (the
+    #: backend's native dispatch), "chunked" (orchestrator-level §V-C
+    #: subset recompute) or "full" (refresh over the post-batch graph).
+    #: Always "incremental" without an ExecutionPolicy.
+    mode: str = "incremental"
+    #: the policy cost model's raw edge-work for the chosen mode — the
+    #: deterministic quantity the adversarial CI gate compares against the
+    #: best fixed mode.  0 when no policy is attached.
+    est_edges: int = 0
+    #: the chosen mode's *weighted* cost (``PolicyDecision.costs[mode]``) —
+    #: the decision surface itself.  Plans are mode-independent, so the
+    #: adaptive policy's stream total is ≤ every fixed mode's by
+    #: construction; the CI wall-clock-free "policy matches the best fixed
+    #: mode" gate compares these.  0.0 when no policy is attached.
+    est_cost: float = 0.0
 
     @property
     def edges_processed(self) -> int:
@@ -184,7 +201,20 @@ class StreamStats:
             "read_p50_s": self.read_p50_s,
             "read_p99_s": self.read_p99_s,
             "staleness_batches": self.staleness_batches,
+            # adaptive-execution-policy accounting (ISSUE 7): per-mode
+            # decision counts and the cost model's raw edge-work, both
+            # deterministic (CI-gated exactly in the adversarial suite).
+            # Without a policy every batch is "incremental" and
+            # policy_edges stays 0.
+            "policy_incremental_batches": self._mode_count("incremental"),
+            "policy_chunked_batches": self._mode_count("chunked"),
+            "policy_full_batches": self._mode_count("full"),
+            "policy_edges": sum(b.est_edges for b in self.batches),
+            "policy_cost": sum(b.est_cost for b in self.batches),
         }
+
+    def _mode_count(self, mode: str) -> int:
+        return sum(1 for b in self.batches if b.mode == mode)
 
 
 # ====================================================================== #
@@ -265,6 +295,46 @@ class StateBackend(abc.ABC):
             f"{type(self).__name__} does not expose plan write sets; "
             "versioned serving reads are unsupported on this substrate")
 
+    # ------------------------------------------------------------------ #
+    # Policy-execution primitives (ISSUE 7): the orchestrator-level
+    # ExecutionPolicy runs chunked-subset and full-recompute batches on
+    # *any* substrate through three generic state operations.  The caller
+    # (StreamOrchestrator) flushes first, so implementations may assume no
+    # deferred write-back is in flight.
+    # ------------------------------------------------------------------ #
+    @property
+    def host_params(self) -> List[Params]:
+        """Per-layer params as host-usable values (mesh backends override:
+        their ``params`` are device-replicated)."""
+        return self.params
+
+    def chunk_scheduler(self):
+        """The substrate's own §V-C scheduler, if it has one (ChunkedBackend)
+        — lets the policy path share its reuse/transfer counters.  None →
+        the orchestrator lazily creates a generic one."""
+        return None
+
+    def apply_feature_updates(self, rows: np.ndarray, vals: np.ndarray) -> None:
+        """Persist a batch's layer-0 feature updates into the state."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement the policy "
+            "execution primitives")
+
+    def layer_input_host(self, l: int) -> np.ndarray:
+        """Layer ``l``'s input embeddings (h^l) as a host ``[n, d]`` array
+        (no scratch row) — what the chunked scheduler recomputes from."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement the policy "
+            "execution primitives")
+
+    def scatter_layer_rows(self, l: int, rows: np.ndarray, a_rows: np.ndarray,
+                           nct_rows: np.ndarray, h_rows: np.ndarray) -> None:
+        """Write one layer's recomputed (a, nct, h^{l+1}) rows back into the
+        substrate's state at global ``rows``."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement the policy "
+            "execution primitives")
+
     @abc.abstractmethod
     def sync_arrays(self) -> list:
         """Arrays to ``jax.block_until_ready`` at timed boundaries."""
@@ -284,6 +354,60 @@ class StateBackend(abc.ABC):
 
 
 # ====================================================================== #
+# Policy execution payloads (ISSUE 7): when an ExecutionPolicy routes a
+# batch away from the substrate's native incremental dispatch, the
+# orchestrator carries one of these instead of a backend prep.  They expose
+# the same n_inc_edges / n_full_edges / n_out_rows counters BatchStats reads.
+# ====================================================================== #
+@dataclasses.dataclass
+class _PolicyChunkedPrep:
+    """Chunked-subset recompute payload: the policy chose ``"chunked"``, so
+    the orchestrator drives the §V-C scheduler over the plan's live out rows
+    through the backend's policy-execution primitives (any substrate)."""
+
+    plan: BatchPlan
+    batch: UpdateBatch
+    g_new: CSRGraph
+    rows_per_layer: List[np.ndarray]  # live out_rows per layer (global ids)
+    est: PlanCostEstimate
+
+    @property
+    def n_inc_edges(self) -> int:
+        return 0  # no signed delta records execute in this mode
+
+    @property
+    def n_full_edges(self) -> int:
+        return self.est.chunked_edges
+
+    @property
+    def n_out_rows(self) -> int:
+        return int(sum(r.shape[0] for r in self.rows_per_layer))
+
+
+@dataclasses.dataclass
+class _PolicyFullPrep:
+    """Full-recompute payload: the policy chose ``"full"`` — the batch runs
+    as ``backend.refresh`` over the post-batch graph (after the feature
+    scatter), exactly the refresh-cadence path."""
+
+    batch: UpdateBatch
+    g_new: CSRGraph
+    est: PlanCostEstimate
+
+    @property
+    def n_inc_edges(self) -> int:
+        return 0
+
+    @property
+    def n_full_edges(self) -> int:
+        return self.est.full_edges
+
+    @property
+    def n_out_rows(self) -> int:
+        return self.est.n * self.est.L
+
+
+# ====================================================================== #
 # StreamOrchestrator — the single plan/pack/overlap loop
 # ====================================================================== #
 class StreamOrchestrator:
@@ -297,11 +421,14 @@ class StreamOrchestrator:
     timed boundary so ``exec_time_s`` measures completion, not dispatch)."""
 
     def __init__(self, backend: StateBackend, graph: CSRGraph,
-                 refresh_every: int = 0):
+                 refresh_every: int = 0,
+                 policy: Optional[ExecutionPolicy] = None):
         self.backend = backend
         self.graph = graph
         self.refresh_every = refresh_every
+        self.policy = policy
         self._batches_seen = 0
+        self._chunk_sched = None  # lazy generic §V-C scheduler (policy path)
 
     # ------------------------------------------------------------------ #
     def refresh(self) -> None:
@@ -323,6 +450,98 @@ class StreamOrchestrator:
             self.refresh()
 
     # ------------------------------------------------------------------ #
+    # policy routing (ISSUE 7): per batch, score the three execution
+    # shapes on the Alg.-4 plan and dispatch the winner.  Without a
+    # policy every batch takes the pre-policy incremental path unchanged.
+    # ------------------------------------------------------------------ #
+    def _prepare(self, g_new: CSRGraph, batch: UpdateBatch):
+        """Plan one batch → ``(mode, payload, decision)``.
+
+        Host-only and value-independent (the decision reads plan counters
+        and degree tables, never state values), so it keeps the §V overlap
+        contract: ``apply_stream`` runs it behind the previous batch's
+        device execution."""
+        if self.policy is None:
+            return "incremental", self.backend.plan(self.graph, g_new, batch), None
+        base = build_plan(self.backend.model, self.graph, g_new, batch,
+                          self.backend.L)
+        decision = self.policy.decide(base)
+        if decision.mode == "incremental":
+            prep = self.backend.plan(self.graph, g_new, batch, base_plan=base)
+            return "incremental", prep, decision
+        if decision.mode == "chunked":
+            rows = [np.unique(lp.out_rows[lp.out_mask].astype(np.int64))
+                    for lp in base.layers]
+            return "chunked", _PolicyChunkedPrep(
+                plan=base, batch=batch, g_new=g_new, rows_per_layer=rows,
+                est=decision.estimate), decision
+        return "full", _PolicyFullPrep(batch=batch, g_new=g_new,
+                                       est=decision.estimate), decision
+
+    def _dispatch_mode(self, mode: str, prep: Any) -> None:
+        if mode == "incremental":
+            self.backend.dispatch(prep)
+        elif mode == "chunked":
+            self._execute_chunked(prep)
+        else:
+            self._execute_full(prep)
+
+    def _chunk_scheduler(self):
+        sched = self.backend.chunk_scheduler()
+        if sched is not None:
+            return sched  # ChunkedBackend: share its reuse/transfer counters
+        if self._chunk_sched is None:
+            # deferred import: repro.serve.scheduler pulls repro.core.full
+            # while this module is itself mid-import under repro.core
+            from repro.serve.scheduler import ChunkedLayerScheduler
+
+            self._chunk_sched = ChunkedLayerScheduler(self.backend.model)
+        return self._chunk_sched
+
+    def _apply_features(self, batch: UpdateBatch) -> None:
+        if batch.feat_vertices is not None and batch.feat_vertices.size:
+            self.backend.apply_feature_updates(
+                np.asarray(batch.feat_vertices, np.int64),
+                np.asarray(batch.feat_values, np.float32))
+
+    def _execute_chunked(self, prep: _PolicyChunkedPrep) -> None:
+        """Chunked-subset recompute on any substrate: per layer, recompute
+        the plan's live out rows from the post-batch graph through the §V-C
+        scheduler and scatter them back.  Layer ``l`` reads ``h[l]`` after
+        the previous layer's scatter (and the feature scatter for layer 0),
+        so the recompute sees exactly the incremental path's layer inputs —
+        the same schedule as :meth:`ChunkedBackend.dispatch`."""
+        self.backend.flush()  # primitives assume no in-flight write-back
+        self._apply_features(prep.batch)
+        sched = self._chunk_scheduler()
+        params = self.backend.host_params
+        deg = prep.plan.deg_new[:-1]  # [n] new-graph degrees (drop scratch)
+        for l in range(self.backend.L):
+            rows = prep.rows_per_layer[l]
+            if not rows.size:
+                continue
+            h_prev = self.backend.layer_input_host(l)
+            a_r, nct_r, h_r = sched.run_layer(params[l], prep.g_new,
+                                              h_prev, rows, deg)
+            self.backend.scatter_layer_rows(l, rows, a_r, nct_r, h_r)
+
+    def _execute_full(self, prep: _PolicyFullPrep) -> None:
+        """Full recompute over the post-batch graph — the refresh-cadence
+        path, with the batch's feature updates applied first so ``refresh``
+        (which recomputes from the *current* h[0]) sees them."""
+        self.backend.flush()
+        self._apply_features(prep.batch)
+        self.backend.refresh(prep.g_new)
+
+    def write_set(self, prep: Any) -> np.ndarray:
+        """Serving write set of one prepared batch payload, whatever mode
+        the policy chose (the frontend's undo-log hook goes through here;
+        full-recompute payloads never reach it — the frontend resets)."""
+        if isinstance(prep, _PolicyChunkedPrep):
+            return prep.rows_per_layer[-1]
+        return self.backend.changed_rows(prep)
+
+    # ------------------------------------------------------------------ #
     # per-batch API (honest timing: block=True syncs at the boundary)
     # ------------------------------------------------------------------ #
     def apply_batch(self, batch: UpdateBatch, block: bool = True,
@@ -330,15 +549,18 @@ class StreamOrchestrator:
         t0 = time.perf_counter()
         g_new = self._apply_graph(batch)
         t1 = time.perf_counter()
-        prep = self.backend.plan(self.graph, g_new, batch)
+        mode, prep, decision = self._prepare(g_new, batch)
         t2 = time.perf_counter()
-        if on_plan is not None:
+        if on_plan is not None and mode != "full":
             # serving hook (repro.serve.frontend): runs between plan and
             # dispatch, while the substrate still holds the *pre-batch*
             # state — the front-end snapshots the plan's write set here to
-            # build its per-version undo log
+            # build its per-version undo log.  Skipped for full-recompute
+            # batches: their pre-images degenerate into a whole-state copy,
+            # so the front-end resets its history instead (BatchStats.mode
+            # tells it to).
             on_plan(prep)
-        self.backend.dispatch(prep)
+        self._dispatch_mode(mode, prep)
         if block:
             self.backend.flush()
             jax.block_until_ready(self.backend.sync_arrays())
@@ -352,6 +574,9 @@ class StreamOrchestrator:
             plan_time_s=t2 - t1,
             exec_time_s=t3 - t2,
             graph_time_s=t1 - t0,
+            mode=mode,
+            est_edges=decision.est_edges if decision is not None else 0,
+            est_cost=decision.costs[mode] if decision is not None else 0.0,
         )
 
     # ------------------------------------------------------------------ #
@@ -375,13 +600,16 @@ class StreamOrchestrator:
 
         tp = time.perf_counter()
         g_new = self._apply_graph(batches[0])
-        prep = self.backend.plan(self.graph, g_new, batches[0])
+        mode, prep, decision = self._prepare(g_new, batches[0])
         plan_total += time.perf_counter() - tp
 
         for i in range(len(batches)):
             epoch0 = self.backend.barrier_epoch
             td = time.perf_counter()
-            self.backend.dispatch(prep)  # async: the substrate starts batch i
+            # async for incremental; chunked/full execute synchronously
+            # (they flush first), which honestly costs this batch its
+            # prefetch hit — the flush bumps barrier_epoch
+            self._dispatch_mode(mode, prep)
             dispatch_s = time.perf_counter() - td
             self.graph = g_new
             stats.append(
@@ -392,12 +620,16 @@ class StreamOrchestrator:
                     plan_time_s=0.0,
                     exec_time_s=dispatch_s,  # dispatch-only; see StreamStats
                     graph_time_s=0.0,
+                    mode=mode,
+                    est_edges=decision.est_edges if decision is not None else 0,
+                    est_cost=(decision.costs[mode]
+                              if decision is not None else 0.0),
                 )
             )
             if i + 1 < len(batches):
                 tp = time.perf_counter()  # overlapped with device execution
                 nxt = self._apply_graph(batches[i + 1])
-                prep = self.backend.plan(self.graph, nxt, batches[i + 1])
+                mode, prep, decision = self._prepare(nxt, batches[i + 1])
                 g_new = nxt
                 plan_total += time.perf_counter() - tp
                 # a real prefetch hit only if no backend barrier (flush)
@@ -572,14 +804,43 @@ class DeviceBackend(StateBackend):
         return prep.out_rows_final
 
     # ------------------------------------------------------------------ #
-    def plan(self, g_old: CSRGraph, g_new: CSRGraph, batch: UpdateBatch):
+    # policy-execution primitives: scatters on the scratch-extended device
+    # arrays (global rows < n, so the scratch row is never written)
+    # ------------------------------------------------------------------ #
+    def apply_feature_updates(self, rows: np.ndarray, vals: np.ndarray) -> None:
+        idx = jnp.asarray(np.asarray(rows, np.int64), jnp.int32)
+        self._h[0] = self._h[0].at[idx].set(
+            jnp.asarray(vals, self._h[0].dtype))
+
+    def layer_input_host(self, l: int) -> np.ndarray:
+        h = self._h[l]
+        if h is None:  # store_h=False: rebuild from the cached a states
+            return np.asarray(self.reconstruct_h()[l])
+        return np.asarray(h[:-1])
+
+    def scatter_layer_rows(self, l: int, rows: np.ndarray, a_rows: np.ndarray,
+                           nct_rows: np.ndarray, h_rows: np.ndarray) -> None:
+        idx = jnp.asarray(np.asarray(rows, np.int64), jnp.int32)
+        self._a[l] = self._a[l].at[idx].set(jnp.asarray(a_rows))
+        self._nct[l] = self._nct[l].at[idx].set(jnp.asarray(nct_rows))
+        if self._h[l + 1] is not None:  # store_h=False reconstructs instead
+            self._h[l + 1] = self._h[l + 1].at[idx].set(jnp.asarray(h_rows))
+
+    # ------------------------------------------------------------------ #
+    def plan(self, g_old: CSRGraph, g_new: CSRGraph, batch: UpdateBatch,
+             base_plan: Optional[BatchPlan] = None):
         if self.fused:
+            if base_plan is not None:  # policy path: Alg. 4 already ran
+                return pack_plan(base_plan, batch.feat_vertices,
+                                 batch.feat_values,
+                                 pallas=self.use_pallas_delta, hwm=self.hwm)
             return build_packed_plan(
                 self.model, g_old, g_new, batch, self.L,
                 pallas=self.use_pallas_delta, hwm=self.hwm,
             )
-        return _UnfusedPrep(build_plan(self.model, g_old, g_new, batch, self.L),
-                            batch)
+        plan = (base_plan if base_plan is not None
+                else build_plan(self.model, g_old, g_new, batch, self.L))
+        return _UnfusedPrep(plan, batch)
 
     def dispatch(self, prep) -> None:
         if isinstance(prep, _UnfusedPrep):
@@ -861,10 +1122,28 @@ class OffloadBackend(_DeferredWritebackMixin, StateBackend):
         return np.unique(prep.transfers[-1].srows)
 
     # ------------------------------------------------------------------ #
+    # policy-execution primitives: direct host-numpy scatters (the
+    # orchestrator flushes first, so no deferred write-back is in flight)
+    # ------------------------------------------------------------------ #
+    def apply_feature_updates(self, rows: np.ndarray, vals: np.ndarray) -> None:
+        self.h[0][np.asarray(rows, np.int64)] = np.asarray(vals, np.float32)
+
+    def layer_input_host(self, l: int) -> np.ndarray:
+        return self.h[l]
+
+    def scatter_layer_rows(self, l: int, rows: np.ndarray, a_rows: np.ndarray,
+                           nct_rows: np.ndarray, h_rows: np.ndarray) -> None:
+        self.a[l][rows] = a_rows
+        self.nct[l][rows] = nct_rows
+        self.h[l + 1][rows] = h_rows
+
+    # ------------------------------------------------------------------ #
     # planning phase (host only, value-independent)
     # ------------------------------------------------------------------ #
-    def plan(self, g_old: CSRGraph, g_new: CSRGraph, batch: UpdateBatch) -> _OffloadPrep:
-        plan = build_plan(self.model, g_old, g_new, batch, self.L)
+    def plan(self, g_old: CSRGraph, g_new: CSRGraph, batch: UpdateBatch,
+             base_plan: Optional[BatchPlan] = None) -> _OffloadPrep:
+        plan = (base_plan if base_plan is not None
+                else build_plan(self.model, g_old, g_new, batch, self.L))
         n = g_old.n
         prev_rows = (
             np.asarray(batch.feat_vertices, np.int64)
@@ -1175,8 +1454,40 @@ class ShardBackend(_StreamMeshMixin, StateBackend):
         return prep.out_rows_final
 
     # ------------------------------------------------------------------ #
-    def plan(self, g_old: CSRGraph, g_new: CSRGraph, batch: UpdateBatch) -> ShardedPlan:
-        plan = build_plan(self.model, g_old, g_new, batch, self.L)
+    # policy-execution primitives: scatters round-trip through the host
+    # (blocks → numpy → device_put with the state sharding) — a policy
+    # batch is already a synchronous full/chunked pass, so the O(V) copy
+    # is dominated by the recompute it accompanies
+    # ------------------------------------------------------------------ #
+    @property
+    def host_params(self) -> List[Params]:
+        return self._params_host  # .params is device-replicated on the mesh
+
+    def _scatter_blocks(self, blocks: jax.Array, rows: np.ndarray,
+                        vals: np.ndarray) -> jax.Array:
+        host = np.array(blocks)  # np.asarray of a device array is read-only
+        host[rows // self.rows_per, rows % self.rows_per] = vals
+        return jax.device_put(host, self._state_sh)
+
+    def apply_feature_updates(self, rows: np.ndarray, vals: np.ndarray) -> None:
+        self._h[0] = self._scatter_blocks(
+            self._h[0], np.asarray(rows, np.int64), np.asarray(vals, np.float32))
+
+    def layer_input_host(self, l: int) -> np.ndarray:
+        return self._from_blocks(self._h[l])
+
+    def scatter_layer_rows(self, l: int, rows: np.ndarray, a_rows: np.ndarray,
+                           nct_rows: np.ndarray, h_rows: np.ndarray) -> None:
+        r = np.asarray(rows, np.int64)
+        self._a[l] = self._scatter_blocks(self._a[l], r, a_rows)
+        self._nct[l] = self._scatter_blocks(self._nct[l], r, nct_rows)
+        self._h[l + 1] = self._scatter_blocks(self._h[l + 1], r, h_rows)
+
+    # ------------------------------------------------------------------ #
+    def plan(self, g_old: CSRGraph, g_new: CSRGraph, batch: UpdateBatch,
+             base_plan: Optional[BatchPlan] = None) -> ShardedPlan:
+        plan = (base_plan if base_plan is not None
+                else build_plan(self.model, g_old, g_new, batch, self.L))
         return shard_plan(plan, self.S, batch.feat_vertices, batch.feat_values,
                           hwm=self.hwm, pallas=self.use_pallas_delta)
 
@@ -1353,10 +1664,30 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
         return np.unique(tr.srows[tr.srows_mask].astype(np.int64))
 
     # ------------------------------------------------------------------ #
+    # policy-execution primitives: scatters into the per-shard host blocks
+    # (the orchestrator flushes first, so the staging worker is drained)
+    # ------------------------------------------------------------------ #
+    def apply_feature_updates(self, rows: np.ndarray, vals: np.ndarray) -> None:
+        self._scatter_rows(self.h[0], np.asarray(rows, np.int64),
+                           np.asarray(vals, np.float32))
+
+    def layer_input_host(self, l: int) -> np.ndarray:
+        return self._from_blocks(self.h[l])
+
+    def scatter_layer_rows(self, l: int, rows: np.ndarray, a_rows: np.ndarray,
+                           nct_rows: np.ndarray, h_rows: np.ndarray) -> None:
+        r = np.asarray(rows, np.int64)
+        self._scatter_rows(self.a[l], r, a_rows)
+        self._scatter_rows(self.nct[l], r, nct_rows)
+        self._scatter_rows(self.h[l + 1], r, h_rows)
+
+    # ------------------------------------------------------------------ #
     # planning phase (host only, value-independent)
     # ------------------------------------------------------------------ #
-    def plan(self, g_old: CSRGraph, g_new: CSRGraph, batch: UpdateBatch) -> _HybridPrep:
-        plan = build_plan(self.model, g_old, g_new, batch, self.L)
+    def plan(self, g_old: CSRGraph, g_new: CSRGraph, batch: UpdateBatch,
+             base_plan: Optional[BatchPlan] = None) -> _HybridPrep:
+        plan = (base_plan if base_plan is not None
+                else build_plan(self.model, g_old, g_new, batch, self.L))
         hp = hybrid_plan(plan, self.S, hwm=self.hwm)
         return _HybridPrep(plan=plan, batch=batch, layers=hp.layers)
 
@@ -1597,8 +1928,31 @@ class ChunkedBackend(StateBackend):
         return prep.rows_per_layer[-1]
 
     # ------------------------------------------------------------------ #
-    def plan(self, g_old: CSRGraph, g_new: CSRGraph, batch: UpdateBatch) -> _ChunkedPrep:
-        plan = build_plan(self.model, g_old, g_new, batch, self.L)
+    # policy-execution primitives: this substrate's native dispatch *is*
+    # the chunked mode — the policy path shares its scheduler (and its
+    # reuse/transfer counters), making policy-chosen chunked batches
+    # bitwise-identical to native ones
+    # ------------------------------------------------------------------ #
+    def chunk_scheduler(self):
+        return self.scheduler
+
+    def apply_feature_updates(self, rows: np.ndarray, vals: np.ndarray) -> None:
+        self.h[0][np.asarray(rows, np.int64)] = np.asarray(vals, np.float32)
+
+    def layer_input_host(self, l: int) -> np.ndarray:
+        return self.h[l]
+
+    def scatter_layer_rows(self, l: int, rows: np.ndarray, a_rows: np.ndarray,
+                           nct_rows: np.ndarray, h_rows: np.ndarray) -> None:
+        self.a[l][rows] = a_rows
+        self.nct[l][rows] = nct_rows
+        self.h[l + 1][rows] = h_rows
+
+    # ------------------------------------------------------------------ #
+    def plan(self, g_old: CSRGraph, g_new: CSRGraph, batch: UpdateBatch,
+             base_plan: Optional[BatchPlan] = None) -> _ChunkedPrep:
+        plan = (base_plan if base_plan is not None
+                else build_plan(self.model, g_old, g_new, batch, self.L))
         rows = [np.unique(lp.out_rows[lp.out_mask].astype(np.int64))
                 for lp in plan.layers]
         return _ChunkedPrep(plan=plan, batch=batch, g_new=g_new,

@@ -61,13 +61,15 @@ class RTECEngine:
         refresh_every: int = 0,
         fused: bool = True,
         use_pallas_delta: bool = False,
+        policy=None,
     ):
         self._backend = DeviceBackend(
             model, params, graph, jnp.asarray(x),
             store_h=store_h, fused=fused, use_pallas_delta=use_pallas_delta,
         )
         self._orch = StreamOrchestrator(self._backend, graph,
-                                        refresh_every=refresh_every)
+                                        refresh_every=refresh_every,
+                                        policy=policy)
 
     # ------------------------------------------------------------------ #
     # public API: delegates to orchestrator (control) + backend (state)

@@ -1,0 +1,244 @@
+"""Adaptive execution policy: incremental vs chunked-subset vs full recompute.
+
+The paper's incremental RTEC wins only while the affected subgraph stays
+small (InkStream's affected-area blow-up, PAPERS.md): a hub burst or a
+delete-heavy batch drives the monotone frontier toward V and the signed
+delta-record stream costs more than just recomputing the touched rows — or
+the whole graph.  All three execution shapes already exist behind the
+:class:`~repro.core.backend.StateBackend` protocol; this module adds the
+plan-time *choice*:
+
+* :func:`estimate_plan_cost` — a :class:`PlanCostEstimate` derived from one
+  Alg.-4 :class:`~repro.core.affected.BatchPlan` and its degree tables.
+  Everything is a deterministic integer count (record counts, per-row
+  new-graph in-degrees, staged rows/bytes per mode) — no state values, no
+  timings — so decisions are reproducible and CI can gate them exactly.
+* :class:`ExecutionPolicy` — per batch, scores the three modes with the
+  estimate and a small per-mode weight model, and returns a
+  :class:`PolicyDecision`.  ``force_mode`` pins the decision (a single mode
+  for a whole stream, or a per-batch schedule), which is how the bitwise
+  policy≡forced equivalence tests and the best-fixed-mode CI baselines are
+  built.
+
+The cost model (edge-work units, value-independent):
+
+* ``incremental`` — the signed delta records plus the constrained-branch
+  full edges the plan would execute, plus one unit per written row.  The
+  smallest raw count by construction (only changed contributions are
+  touched), but the most expensive *per edge*: every record is a
+  random-access gather + scatter-add (``incremental_weight``).
+* ``chunked`` — Σ over layers of the *new-graph in-degree* of the planned
+  out rows: constrained recompute of each affected row re-aggregates its
+  whole in-neighborhood through the §V-C chunked scheduler, in dense
+  gathered segments (``chunked_weight``, between the two).
+* ``full`` — ``L·|E(g_new)|`` plus one unit per row: a dense
+  :func:`~repro.core.full.full_forward` over the post-batch graph.  Always
+  an upper bound on chunked in raw edges, but the cheapest per edge
+  (``full_weight``) — at frontier saturation the policy flips to it.
+
+:class:`~repro.core.backend.StreamOrchestrator` consults the policy between
+graph apply and backend planning, records the decision in
+``BatchStats.mode``/``est_edges`` (aggregated into ``StreamStats``), and
+executes chunked/full batches through three substrate-generic backend
+primitives (``apply_feature_updates`` / ``layer_input_host`` /
+``scatter_layer_rows``) so every backend supports every mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.affected import BatchPlan
+
+#: execution modes, in tie-break preference order (cheapest-to-switch first)
+MODES = ("incremental", "chunked", "full")
+
+#: Default per-edge weights — the relative cost of one unit of edge-work in
+#: each execution shape.  A signed delta record is a random-access gather +
+#: scatter-add plus index bookkeeping (the most expensive per-edge shape);
+#: the §V-C chunked scheduler re-gathers each affected row's whole
+#: in-neighborhood through compact remap tables and pays per-chunk staging
+#: but aggregates in dense segments; full_forward is one dense segment-sum
+#: over CSR (the cheapest per edge).  The 2 : 1.5 : 1 ratio puts the
+#: incremental→chunked flip where changed contributions cover ~3/4 of the
+#: affected rows' in-edges, and the chunked→full flip where the affected
+#: subgraph covers ~2/3 of all in-edges.
+DEFAULT_INCREMENTAL_WEIGHT = 2.0
+DEFAULT_CHUNKED_WEIGHT = 1.5
+DEFAULT_FULL_WEIGHT = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanCostEstimate:
+    """Deterministic per-mode cost counts for one batch plan.
+
+    All fields derive from the Alg.-4 plan and its degree tables at plan
+    time (value-independent, host-only): the estimate can be computed —
+    and the mode decided — while the previous batch still executes."""
+
+    inc_edges: int  #: signed records + constrained-branch edges (incremental)
+    chunked_edges: int  #: Σ_l new-graph in-degree of the live out rows
+    full_edges: int  #: L · |E(g_new)|
+    affected_rows: int  #: Σ_l live out rows (rows written by inc/chunked)
+    frontier_rows: int  #: final-layer live out rows (serving write set)
+    n: int  #: vertices
+    L: int  #: layers
+    row_bytes: int  #: bytes per staged state row (h + a + nct, float32)
+
+    def edges(self, mode: str) -> int:
+        """Edge-work the mode would execute (raw counts, unweighted)."""
+        return {"incremental": self.inc_edges, "chunked": self.chunked_edges,
+                "full": self.full_edges}[mode]
+
+    def staged_rows(self, mode: str) -> int:
+        """State rows the mode moves between tiers (host↔device staging for
+        the offload substrates; scatter volume for the resident ones)."""
+        if mode == "incremental":
+            # per layer: gather need_h (~affected + sources) + scatter out
+            return 2 * self.affected_rows + min(self.inc_edges,
+                                                self.n * self.L)
+        if mode == "chunked":
+            # each affected row plus its gathered in-neighborhood
+            return self.affected_rows + self.chunked_edges
+        return self.n * (self.L + 1)  # full: every layer state rewritten
+
+    def staged_bytes(self, mode: str) -> int:
+        return self.staged_rows(mode) * self.row_bytes
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+def estimate_plan_cost(plan: BatchPlan, row_bytes: int = 0) -> PlanCostEstimate:
+    """Build a :class:`PlanCostEstimate` from one Alg.-4 plan.
+
+    ``chunked_edges`` sums the **new-graph** in-degree over each layer's
+    live out rows — the §V-C scheduler recomputes exactly these rows from
+    their full post-batch in-neighborhoods.  ``full_edges`` is the dense
+    L-layer pass over the same degree table."""
+    inc = plan.total_inc_edges() + plan.total_full_edges()
+    deg_new = plan.deg_new[:-1]  # [n] (drop the scratch slot)
+    n = int(deg_new.shape[0])
+    L = len(plan.layers)
+    chunked = 0
+    affected = 0
+    frontier = 0
+    for lp in plan.layers:
+        rows = np.unique(lp.out_rows[lp.out_mask].astype(np.int64))
+        affected += int(rows.shape[0])
+        frontier = int(rows.shape[0])
+        if rows.size:
+            chunked += int(deg_new[rows].sum())
+    full = L * int(deg_new.sum())
+    return PlanCostEstimate(
+        inc_edges=int(inc), chunked_edges=chunked, full_edges=full,
+        affected_rows=affected, frontier_rows=frontier, n=n, L=L,
+        row_bytes=int(row_bytes),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyDecision:
+    """One batch's mode choice plus the evidence it was made on."""
+
+    mode: str
+    estimate: PlanCostEstimate
+    costs: Dict[str, float]  #: weighted edge-work per mode
+    forced: bool = False  #: True when ``force_mode`` pinned the choice
+
+    @property
+    def est_edges(self) -> int:
+        """Raw edge-work of the chosen mode (``StreamStats`` accounting)."""
+        return self.estimate.edges(self.mode)
+
+
+class ExecutionPolicy:
+    """Plan-time per-batch mode selection over the three execution shapes.
+
+    Cost of each mode is its raw edge-work plus one unit per written row,
+    scaled by a per-mode weight; the argmin wins, ties resolved in
+    :data:`MODES` order (incremental preferred — it is the only mode that
+    keeps the serving undo log and the plan/execute overlap intact).
+
+    ``force_mode`` pins decisions instead of scoring: a mode name applies
+    to every batch (the fixed-mode CI baselines), a sequence is consumed
+    one entry per batch (the bitwise policy≡forced equivalence tests replay
+    an adaptive run's recorded decisions through it).  Estimates are still
+    computed and recorded, so forced runs report the same ``est_edges``
+    accounting as adaptive ones.
+    """
+
+    def __init__(
+        self,
+        incremental_weight: float = DEFAULT_INCREMENTAL_WEIGHT,
+        chunked_weight: float = DEFAULT_CHUNKED_WEIGHT,
+        full_weight: float = DEFAULT_FULL_WEIGHT,
+        force_mode: Union[None, str, Sequence[str]] = None,
+    ):
+        self.weights = {"incremental": float(incremental_weight),
+                        "chunked": float(chunked_weight),
+                        "full": float(full_weight)}
+        if isinstance(force_mode, str):
+            _check_mode(force_mode)
+        elif force_mode is not None:
+            force_mode = tuple(force_mode)
+            for m in force_mode:
+                _check_mode(m)
+        self.force_mode = force_mode
+        self.decisions: Dict[str, int] = {m: 0 for m in MODES}
+        self.history: List[PolicyDecision] = []
+
+    # ------------------------------------------------------------------ #
+    def costs(self, est: PlanCostEstimate) -> Dict[str, float]:
+        """Weighted edge-work per mode (the decision surface)."""
+        per_row = {"incremental": est.affected_rows,
+                   "chunked": est.affected_rows,
+                   "full": est.n}
+        return {m: self.weights[m] * (est.edges(m) + per_row[m])
+                for m in MODES}
+
+    def decide(self, plan: BatchPlan) -> PolicyDecision:
+        """Score one batch plan and record the decision."""
+        est = estimate_plan_cost(plan)
+        costs = self.costs(est)
+        forced = self.force_mode is not None
+        if isinstance(self.force_mode, str):
+            mode = self.force_mode
+        elif forced:
+            i = len(self.history)
+            if i >= len(self.force_mode):
+                raise ValueError(
+                    f"force_mode schedule exhausted after {i} batches")
+            mode = self.force_mode[i]
+        else:
+            mode = min(MODES, key=lambda m: (costs[m], MODES.index(m)))
+        decision = PolicyDecision(mode=mode, estimate=est, costs=costs,
+                                  forced=forced)
+        self.decisions[mode] += 1
+        self.history.append(decision)
+        return decision
+
+
+def _check_mode(mode: str) -> None:
+    if mode not in MODES:
+        raise ValueError(f"unknown execution mode {mode!r}; "
+                         f"expected one of {MODES}")
+
+
+def make_policy(spec: Union[None, str, ExecutionPolicy],
+                chunked_weight: float = DEFAULT_CHUNKED_WEIGHT,
+                ) -> Optional[ExecutionPolicy]:
+    """Resolve an :class:`~repro.serve.api.EngineConfig` policy knob.
+
+    ``None`` → no policy (the pre-policy incremental-only orchestrator
+    path, byte-identical behavior); ``"adaptive"`` → cost-model scoring;
+    a mode name → that mode forced on every batch; an
+    :class:`ExecutionPolicy` instance passes through unchanged."""
+    if spec is None or isinstance(spec, ExecutionPolicy):
+        return spec
+    if spec == "adaptive":
+        return ExecutionPolicy(chunked_weight=chunked_weight)
+    _check_mode(spec)
+    return ExecutionPolicy(chunked_weight=chunked_weight, force_mode=spec)

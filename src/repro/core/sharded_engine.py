@@ -62,13 +62,15 @@ class ShardedRTECEngine:
         shcfg: Optional[ShardingConfig] = None,
         refresh_every: int = 0,
         use_pallas_delta: bool = False,
+        policy=None,
     ):
         self._backend = ShardBackend(
             model, params, graph, x, mesh=mesh, num_shards=num_shards,
             shcfg=shcfg, use_pallas_delta=use_pallas_delta,
         )
         self._orch = StreamOrchestrator(self._backend, graph,
-                                        refresh_every=refresh_every)
+                                        refresh_every=refresh_every,
+                                        policy=policy)
 
     # ------------------------------------------------------------------ #
     def apply_batch(self, batch: UpdateBatch, block: bool = True) -> BatchStats:

@@ -4,7 +4,14 @@ synthetic generators, and update-stream workloads."""
 from repro.graph.csr import CSRGraph
 from repro.graph.generators import barabasi_albert, erdos_renyi, make_graph
 from repro.graph.pma import PMAGraph
-from repro.graph.streaming import EdgeUpdate, StreamWorkload, UpdateBatch, make_stream
+from repro.graph.streaming import (
+    ADVERSARIAL_REGIMES,
+    EdgeUpdate,
+    StreamWorkload,
+    UpdateBatch,
+    make_adversarial_stream,
+    make_stream,
+)
 
 __all__ = [
     "CSRGraph",
@@ -13,6 +20,8 @@ __all__ = [
     "UpdateBatch",
     "StreamWorkload",
     "make_stream",
+    "make_adversarial_stream",
+    "ADVERSARIAL_REGIMES",
     "barabasi_albert",
     "erdos_renyi",
     "make_graph",

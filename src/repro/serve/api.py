@@ -42,6 +42,7 @@ from repro.core.backend import (
 )
 from repro.core.engine import RTECEngine
 from repro.core.operators import GNNModel, Params
+from repro.core.policy import DEFAULT_CHUNKED_WEIGHT, make_policy
 from repro.core.sharded_engine import ShardedRTECEngine
 from repro.graph.csr import CSRGraph
 from repro.graph.streaming import UpdateBatch
@@ -84,6 +85,19 @@ class EngineConfig:
     # chunked backend
     chunk_size: int = 8192
     chunk_reuse: bool = True
+    # adaptive execution policy (ISSUE 7): None → every batch takes the
+    # substrate's native incremental path (pre-policy behavior);
+    # "adaptive" → per-batch cost-model selection over
+    # incremental/chunked/full; a mode name forces that mode on every
+    # batch; an ExecutionPolicy instance passes through as-is (shared
+    # across engines built from this config — pass a spec string to give
+    # each engine its own decision state)
+    policy: object = None
+    policy_chunked_weight: float = DEFAULT_CHUNKED_WEIGHT
+
+    def resolved_policy(self):
+        return make_policy(self.policy,
+                           chunked_weight=self.policy_chunked_weight)
 
     def resolved_params(self) -> Sequence[Params]:
         if self.params is not None:
@@ -105,12 +119,14 @@ class ChunkedRTECEngine:
 
     def __init__(self, model: GNNModel, params: Sequence[Params],
                  graph: CSRGraph, x: np.ndarray, chunk_size: int = 8192,
-                 chunk_reuse: bool = True, refresh_every: int = 0):
+                 chunk_reuse: bool = True, refresh_every: int = 0,
+                 policy=None):
         self._backend = ChunkedBackend(model, params, graph, x,
                                        chunk_size=chunk_size,
                                        chunk_reuse=chunk_reuse)
         self._orch = StreamOrchestrator(self._backend, graph,
-                                        refresh_every=refresh_every)
+                                        refresh_every=refresh_every,
+                                        policy=policy)
 
     def apply_batch(self, batch: UpdateBatch, block: bool = True) -> BatchStats:
         return self._orch.apply_batch(batch, block=block)
@@ -191,16 +207,18 @@ def create_engine(backend: str, config: EngineConfig):
     ``backend`` ∈ :data:`BACKENDS`.  Calls the same constructors as direct
     instantiation, so the result is bitwise-equal to the legacy path."""
     params = config.resolved_params()
+    policy = config.resolved_policy()
     if backend == "device":
         return RTECEngine(
             config.model, params, config.graph, config.x,
             store_h=config.store_h, refresh_every=config.refresh_every,
             fused=config.fused, use_pallas_delta=config.use_pallas_delta,
+            policy=policy,
         )
     if backend == "offload":
         return OffloadedRTECEngine(
             config.model, params, config.graph, config.x,
-            async_staging=config.async_staging,
+            async_staging=config.async_staging, policy=policy,
         )
     if backend == "sharded":
         return ShardedRTECEngine(
@@ -208,6 +226,7 @@ def create_engine(backend: str, config: EngineConfig):
             num_shards=config.num_shards, shcfg=config.shcfg,
             refresh_every=config.refresh_every,
             use_pallas_delta=config.use_pallas_delta,
+            policy=policy,
         )
     if backend == "sharded_offload":
         return ShardedOffloadRTECEngine(
@@ -215,12 +234,13 @@ def create_engine(backend: str, config: EngineConfig):
             num_shards=config.num_shards, shcfg=config.shcfg,
             refresh_every=config.refresh_every,
             async_staging=config.async_staging,
+            policy=policy,
         )
     if backend == "chunked":
         return ChunkedRTECEngine(
             config.model, params, config.graph, config.x,
             chunk_size=config.chunk_size, chunk_reuse=config.chunk_reuse,
-            refresh_every=config.refresh_every,
+            refresh_every=config.refresh_every, policy=policy,
         )
     raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
 

@@ -253,7 +253,11 @@ class ServingFrontend:
         captured: List[_UndoRecord] = []
 
         def on_plan(prep) -> None:
-            rows = np.asarray(self._orch.backend.changed_rows(prep), np.int64)
+            # write_set resolves the plan's final-layer rows whatever
+            # execution mode the orchestrator's policy chose; the hook is
+            # never invoked for full-recompute batches (their pre-images
+            # would be a whole-state copy) — those reset the history below
+            rows = np.asarray(self._orch.write_set(prep), np.int64)
             captured.append(_UndoRecord(
                 version=self.version + 1, rows=rows,
                 vals=np.array(self._orch.backend.snapshot_rows(rows))))
@@ -261,9 +265,12 @@ class ServingFrontend:
         bs = self._orch.apply_batch(batch, block=True, on_plan=on_plan)
         self.version += 1
         orch = self._orch
-        if orch.refresh_every and orch._batches_seen % orch.refresh_every == 0:
-            # a refresh recomputed state from scratch: older versions are
-            # no longer bitwise-reconstructible — drop the undo history
+        refreshed = (orch.refresh_every
+                     and orch._batches_seen % orch.refresh_every == 0)
+        if refreshed or bs.mode == "full":
+            # a refresh — cadence-driven or policy-chosen full recompute —
+            # rebuilt state from scratch: older versions are no longer
+            # bitwise-reconstructible — drop the undo history
             self._undo.clear()
             self._floor = self.version
         else:

@@ -139,10 +139,10 @@ class OffloadedRTECEngine(_OffloadFacadeMixin):
     """Incremental RTEC with host-resident state (CPU-offload engine)."""
 
     def __init__(self, model: GNNModel, params: Sequence[Params], graph: CSRGraph,
-                 x: np.ndarray, async_staging: bool = True):
+                 x: np.ndarray, async_staging: bool = True, policy=None):
         self._backend = OffloadBackend(model, params, graph, x,
                                        async_staging=async_staging)
-        self._orch = StreamOrchestrator(self._backend, graph)
+        self._orch = StreamOrchestrator(self._backend, graph, policy=policy)
 
     @property
     def x(self) -> np.ndarray:
@@ -172,13 +172,15 @@ class ShardedOffloadRTECEngine(_OffloadFacadeMixin):
 
     def __init__(self, model: GNNModel, params: Sequence[Params], graph: CSRGraph,
                  x: np.ndarray, mesh=None, num_shards: Optional[int] = None,
-                 shcfg=None, refresh_every: int = 0, async_staging: bool = True):
+                 shcfg=None, refresh_every: int = 0, async_staging: bool = True,
+                 policy=None):
         self._backend = ShardedOffloadBackend(
             model, params, graph, x, mesh=mesh, num_shards=num_shards,
             shcfg=shcfg, async_staging=async_staging,
         )
         self._orch = StreamOrchestrator(self._backend, graph,
-                                        refresh_every=refresh_every)
+                                        refresh_every=refresh_every,
+                                        policy=policy)
 
     @property
     def S(self) -> int:
