@@ -20,6 +20,13 @@ The gate watches a small **metric matrix** (``SPECS``), not a single cell:
   serving front-end's deterministic read counters from its fixed
   interleaving schedule (ISSUE 6), gated exactly; the read-latency rows
   stay non-blocking telemetry.
+* ``fig7/smoke/gcn/cache_staged_bytes`` + ``cache_hit_rows`` /
+  ``cache_miss_rows`` / ``cache_evictions`` — the hot-row cache set
+  (ISSUE 8): the staged-bytes row carries the uncached/cached reduction
+  ratio on the deterministic hub_burst cell (floor 1.43x, i.e. the
+  ≥30% reduction acceptance bound with margin) and the counters are
+  exact (``CACHE_EXPECTED``, shared with the emitting cell; the sharded
+  suite gates the hybrid's ``hybrid_cache_*`` mirror rows).
 
 Every gated cell now reports through ``StreamStats.as_dict()`` (the single
 result type) via ``benchmarks.common.emit_stream_stats``.
@@ -93,6 +100,17 @@ SPECS = (
     MetricSpec(name="fig7/smoke/gcn/frontend_reads_served", kind="exact"),
     MetricSpec(name="fig7/smoke/gcn/frontend_staleness_batches",
                kind="exact"),
+    # device hot-row cache (ISSUE 8): the hub_burst cell runs the offload
+    # engine cached vs uncached on the same deterministic stream.  The
+    # staged-bytes row is gated as a *ratio* (uncached/cached ≥ 1.43x —
+    # the acceptance's ≥30% reduction), and the hit/miss/eviction counters
+    # gate exactly (tolerance 0): residency is a pure function of the
+    # plans, so any drift is a cache or planner change, never noise.
+    MetricSpec(name="fig7/smoke/gcn/cache_staged_bytes", kind="speedup",
+               floor=1.43, tolerance=0.10),
+    MetricSpec(name="fig7/smoke/gcn/cache_hit_rows", kind="exact"),
+    MetricSpec(name="fig7/smoke/gcn/cache_miss_rows", kind="exact"),
+    MetricSpec(name="fig7/smoke/gcn/cache_evictions", kind="exact"),
 )
 
 # Gated against BENCH_sharded.json by the multi-device CI job
@@ -109,7 +127,26 @@ SHARDED_SPECS = (
     # measured 568320B (S=8, cap-padded per-shard staging buffers)
     MetricSpec(name="fig7/sharded/gcn/hybrid_staged_bytes", kind="volume",
                ceiling=750_000.0, tolerance=0.05),
+    # hot-row cache on the hybrid (ISSUE 8): same contract as the smoke
+    # suite's cache set — ratio-gated staged bytes, exact residency counts
+    MetricSpec(name="fig7/sharded/gcn/hybrid_cache_staged_bytes",
+               kind="speedup", floor=1.43, tolerance=0.10),
+    MetricSpec(name="fig7/sharded/gcn/hybrid_cache_hit_rows", kind="exact"),
+    MetricSpec(name="fig7/sharded/gcn/hybrid_cache_miss_rows", kind="exact"),
+    MetricSpec(name="fig7/sharded/gcn/hybrid_cache_evictions", kind="exact"),
 )
+
+#: ISSUE-8 hot-row-cache expectations on the deterministic hub_burst smoke
+#: stream (n=256, 6 batches, CacheConfig(capacity_rows=256)), shared by the
+#: emitting cells (benchmarks/fig7_response_time.py) and the exact gates
+#: above so bench and gate cannot drift apart.  Residency is a pure
+#:  function of the Alg.-4 plans: hit/miss/eviction counts are bit-stable
+#: run to run.  The ``sharded`` row is pinned for the CI multi-device
+#: job's 8-way mesh (per-shard halo rows make the counts S-dependent).
+CACHE_EXPECTED = {
+    "smoke": {"hit_rows": 580, "miss_rows": 504, "evictions": 0},
+    "sharded": {"hit_rows": 616, "miss_rows": 532, "evictions": 0},
+}
 
 #: per-regime structural expectations for the adaptive policy on the
 #: default adversarial streams (benchmarks/adversarial.py imports this

@@ -84,6 +84,54 @@ def smoke():
     emit("fig7/smoke/gcn/offload_transfer_rows",
          float(off.transfers.total_rows), f"{off.transfers.total_rows}rows")
     smoke_frontend(model, params, wl, x)
+    smoke_cache()
+
+
+def smoke_cache():
+    """Device hot-row cache cell (ISSUE 8): the offload engine over the
+    deterministic hub_burst stream, cached vs uncached.  Emits the gated
+    ratio row (uncached/cached staged bytes — the acceptance's ≥30%
+    reduction is a 1.43x floor) and the exact hit/miss/eviction counters
+    (expectations shared with the gate via
+    ``check_regression.CACHE_EXPECTED``), and fails the step outright on
+    any cached-vs-uncached embedding divergence — the cache must be
+    bitwise invisible to the math."""
+    import numpy as np
+
+    from benchmarks.check_regression import CACHE_EXPECTED
+    from repro.core import make_model
+    from repro.graph import make_adversarial_stream
+    from repro.graph.generators import random_features
+    from repro.serve import CacheConfig, EngineConfig, create_engine
+
+    wl = make_adversarial_stream("hub_burst", num_batches=6)
+    x, _ = random_features(wl.base.n, 8, seed=0)
+    model = make_model("gcn")
+    params = gnn_params(model, [8, 8])
+    runs = {}
+    for cached in (False, True):
+        eng = create_engine("offload", EngineConfig(
+            model=model, graph=wl.base, x=x, params=params,
+            cache=CacheConfig(capacity_rows=256) if cached else None))
+        ss = eng.apply_stream(wl.batches)
+        runs[cached] = (np.asarray(eng.embeddings), ss.as_dict())
+    emb_u, d_u = runs[False]
+    emb_c, d_c = runs[True]
+    exp = CACHE_EXPECTED["smoke"]
+    ratio = d_u["staged_bytes"] / max(d_c["staged_bytes"], 1)
+    emit("fig7/smoke/gcn/cache_staged_bytes", float(d_c["staged_bytes"]),
+         f"{ratio:.2f}x")
+    emit("fig7/smoke/gcn/cache_hit_rows", float(d_c["cache_hit_rows"]),
+         f"expect_{exp['hit_rows']}")
+    emit("fig7/smoke/gcn/cache_miss_rows", float(d_c["cache_miss_rows"]),
+         f"expect_{exp['miss_rows']}")
+    emit("fig7/smoke/gcn/cache_evictions", float(d_c["cache_evictions"]),
+         f"expect_{exp['evictions']}")
+    if not np.array_equal(emb_u, emb_c):
+        diff = float(np.abs(emb_u - emb_c).max())
+        raise SystemExit(
+            f"cache smoke gate FAILED: cached-vs-uncached max|diff|={diff:g} "
+            "(expected bitwise 0)")
 
 
 def smoke_frontend(model, params, wl, x):
@@ -186,8 +234,53 @@ def smoke_sharded(num_shards: int):
             f"hybrid-stream-vs-single max|diff|={diff_p:g} (expected 0)")
     if halo_per_batch > 64:
         failures.append(f"halo_rows_per_batch={halo_per_batch:.1f} exceeds 64")
+    failures += _sharded_cache_cell(num_shards)
     if failures:
         raise SystemExit("sharded smoke gate FAILED: " + "; ".join(failures))
+
+
+def _sharded_cache_cell(num_shards: int):
+    """Hot-row cache on the sharded offload hybrid (ISSUE 8): hub_burst
+    cached vs uncached, same contract as ``smoke_cache`` — ratio-gated
+    staged bytes plus exact residency counters.  Returns failure strings
+    (the caller folds them into the sharded gate's SystemExit).  The
+    pinned ``CACHE_EXPECTED['sharded']`` counts assume the CI job's 8-way
+    mesh: per-shard halo rows make residency S-dependent."""
+    import numpy as np
+
+    from benchmarks.check_regression import CACHE_EXPECTED
+    from repro.graph import make_adversarial_stream
+    from repro.graph.generators import random_features
+    from repro.serve import CacheConfig, EngineConfig, create_engine
+
+    wl = make_adversarial_stream("hub_burst", num_batches=6)
+    x, _ = random_features(wl.base.n, 8, seed=0)
+    model = make_model("gcn")
+    params = gnn_params(model, [8, 8])
+    runs = {}
+    for cached in (False, True):
+        eng = create_engine("sharded_offload", EngineConfig(
+            model=model, graph=wl.base, x=x, params=params,
+            num_shards=num_shards,
+            cache=CacheConfig(capacity_rows=256) if cached else None))
+        ss = eng.apply_stream(wl.batches)
+        runs[cached] = (np.asarray(eng.embeddings), ss.as_dict())
+    emb_u, d_u = runs[False]
+    emb_c, d_c = runs[True]
+    exp = CACHE_EXPECTED["sharded"]
+    ratio = d_u["staged_bytes"] / max(d_c["staged_bytes"], 1)
+    emit("fig7/sharded/gcn/hybrid_cache_staged_bytes",
+         float(d_c["staged_bytes"]), f"{ratio:.2f}x")
+    emit("fig7/sharded/gcn/hybrid_cache_hit_rows",
+         float(d_c["cache_hit_rows"]), f"expect_{exp['hit_rows']}")
+    emit("fig7/sharded/gcn/hybrid_cache_miss_rows",
+         float(d_c["cache_miss_rows"]), f"expect_{exp['miss_rows']}")
+    emit("fig7/sharded/gcn/hybrid_cache_evictions",
+         float(d_c["cache_evictions"]), f"expect_{exp['evictions']}")
+    if not np.array_equal(emb_u, emb_c):
+        diff = float(np.abs(emb_u - emb_c).max())
+        return [f"hybrid cached-vs-uncached max|diff|={diff:g} (expected 0)"]
+    return []
 
 
 def run(quick: bool = True):

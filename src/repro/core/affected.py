@@ -1115,6 +1115,52 @@ def _remap_sorted(indices: np.ndarray, rows: np.ndarray, cap: int) -> np.ndarray
     return np.where(rows[pos] == v, pos, cap).astype(np.int32)
 
 
+@dataclasses.dataclass(frozen=True)
+class ResidencySplit:
+    """Plan-time ``[cached | miss]`` partition of one layer's needed rows —
+    the residency analogue of the ``[halo | local]`` remap above, consumed
+    by the device hot-row cache (repro.serve.hotcache).
+
+    Positions index the *original* ``rows`` array; ``hit`` positions are
+    served from device cache slots, ``miss`` positions from the host
+    staging gather.  ``admit_midx``/``admit_slots`` (filled in by
+    ``HotRowCache.plan_reads``) name the miss positions whose staged
+    values should additionally be installed into fresh cache slots."""
+
+    hit_pos: np.ndarray  # int64 positions into rows (cached)
+    hit_slots: np.ndarray  # int32 device slot per hit position
+    miss_pos: np.ndarray  # int64 positions into rows (staged from host)
+    miss_rows: np.ndarray  # int64 global row ids, = rows[miss_pos]
+    admit_midx: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    admit_slots: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.int32))
+
+
+def split_residency(rows: np.ndarray, slot_of: np.ndarray,
+                    exclude_rows: Optional[np.ndarray] = None) -> ResidencySplit:
+    """Split ``rows`` into cached hits and staged misses against a slot
+    table (``slot_of[r] < 0`` → not cached).  Rows in ``exclude_rows`` are
+    forced to miss even when cached — the cache uses this for rows written
+    earlier in the same batch, whose cached value is mid-update (see the
+    coherence notes in repro.serve.hotcache).  Pure metadata: never reads
+    state values, so it is safe on the plan side of the plan/execute
+    overlap."""
+    rows = np.asarray(rows, np.int64)
+    slots = slot_of[rows]
+    hit = slots >= 0
+    if exclude_rows is not None and np.asarray(exclude_rows).size:
+        hit &= ~np.isin(rows, np.asarray(exclude_rows, np.int64))
+    hit_pos = np.flatnonzero(hit).astype(np.int64)
+    miss_pos = np.flatnonzero(~hit).astype(np.int64)
+    return ResidencySplit(
+        hit_pos=hit_pos,
+        hit_slots=slots[hit_pos].astype(np.int32),
+        miss_pos=miss_pos,
+        miss_rows=rows[miss_pos],
+    )
+
+
 # Per-layer cap tuple: (e, r, f, fe, o, nh, ns) — nh is the compact h^{l-1}
 # workspace (gather space), ns the compact state workspace (scatter space);
 # both get one scratch slot at index cap when staged.  Field kinds index the

@@ -62,7 +62,7 @@ import threading
 import time
 import warnings
 from functools import partial
-from typing import Any, List, Optional, Sequence
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -95,6 +95,7 @@ from repro.core.operators import GNNModel, Params
 from repro.core.policy import ExecutionPolicy, PlanCostEstimate
 from repro.graph.csr import CSRGraph
 from repro.graph.streaming import UpdateBatch
+from repro.serve.hotcache import CacheStats, HotRowCache
 from repro.serve.staging import HostStagingPipeline, StagingStats, StagingTicket
 
 
@@ -158,6 +159,13 @@ class StreamStats:
     are submit→serve latency percentiles (telemetry, never gated).  All
     default to zero so pre-serving baselines and gates keep passing.
 
+    Device hot-row cache counters (ISSUE 8): ``cache_hit_rows`` /
+    ``cache_miss_rows`` / ``cache_evictions`` mirror the backend's
+    :class:`repro.serve.hotcache.CacheStats` over the stream —
+    deterministic (admission and eviction are value-independent plan-time
+    decisions), CI-gated exactly on the hub_burst smoke cell.  All three
+    stay zero for backends without a cache (or with ``enabled=False``).
+
     ``StreamStats`` is the single result type for *every* entry point
     (``apply_stream``, the serving front-end, the bench cells);
     :meth:`as_dict` is the normalized scalar view the benchmark emitters
@@ -176,6 +184,10 @@ class StreamStats:
     read_p50_s: float = 0.0
     read_p99_s: float = 0.0
     staleness_batches: int = 0
+    # device hot-row cache counters (repro.serve.hotcache)
+    cache_hit_rows: int = 0
+    cache_miss_rows: int = 0
+    cache_evictions: int = 0
 
     @property
     def mean_batch_s(self) -> float:
@@ -183,7 +195,41 @@ class StreamStats:
 
     def as_dict(self) -> dict:
         """Normalized scalar view: every entry point reports through these
-        keys (benchmarks/common.py ``emit_stream_stats`` renders them)."""
+        keys (benchmarks/common.py ``emit_stream_stats`` renders them).
+
+        THE documented key namespace — benchmarks and
+        ``benchmarks/check_regression.py`` consume only these names
+        (pinned by ``STREAM_STAT_KEYS`` and tests/test_hotcache.py, so a
+        rename can never silently drop a CI gate):
+
+        ==========================  =========================================
+        key                         meaning (D = deterministic, CI-gateable)
+        ==========================  =========================================
+        n_batches                   batches in the stream (D)
+        wall_s                      honest end-to-end wall, incl. final sync
+        plan_s                      host planning time (hidden behind exec)
+        mean_batch_s                wall_s / n_batches
+        inc_edges                   signed incremental records executed (D)
+        full_edges                  constrained full-recompute edges (D)
+        out_vertices                rows written, summed over layers (D)
+        staged_bytes                bytes through HostStagingPipeline (D)
+        prefetch_hits               plans built with no backend barrier (D)
+        sync_wait_s                 caller time blocked on host staging
+        compute_s                   caller time blocked on the device
+        reads_served                frontend reads answered (D)
+        reads_rejected              frontend reads shed by admission (D)
+        read_p50_s / read_p99_s     read latency percentiles (telemetry)
+        staleness_batches           versions behind head at serve time (D)
+        cache_hit_rows              rows served from device cache slots (D)
+        cache_miss_rows             rows staged from host (D)
+        cache_evictions             cache capacity evictions (D)
+        policy_incremental_batches  batches decided incremental (D)
+        policy_chunked_batches      batches decided chunked-subset (D)
+        policy_full_batches         batches decided full recompute (D)
+        policy_edges                cost model's raw edge-work estimate (D)
+        policy_cost                 chosen-mode weighted cost total (D)
+        ==========================  =========================================
+        """
         return {
             "n_batches": len(self.batches),
             "wall_s": self.wall_s,
@@ -201,6 +247,9 @@ class StreamStats:
             "read_p50_s": self.read_p50_s,
             "read_p99_s": self.read_p99_s,
             "staleness_batches": self.staleness_batches,
+            "cache_hit_rows": self.cache_hit_rows,
+            "cache_miss_rows": self.cache_miss_rows,
+            "cache_evictions": self.cache_evictions,
             # adaptive-execution-policy accounting (ISSUE 7): per-mode
             # decision counts and the cost model's raw edge-work, both
             # deterministic (CI-gated exactly in the adversarial suite).
@@ -215,6 +264,14 @@ class StreamStats:
 
     def _mode_count(self, mode: str) -> int:
         return sum(1 for b in self.batches if b.mode == mode)
+
+
+#: the complete documented ``StreamStats.as_dict`` key namespace (see the
+#: table in :meth:`StreamStats.as_dict`) — consumers assert against this
+#: instead of hard-coding strings, so a rename fails loudly
+STREAM_STAT_KEYS: Tuple[str, ...] = tuple(
+    StreamStats([], 0.0, 0.0).as_dict().keys()
+)
 
 
 # ====================================================================== #
@@ -259,6 +316,12 @@ class StateBackend(abc.ABC):
     def staging_snapshot(self) -> Optional[StagingStats]:
         """Snapshot of the backend's host-staging counters (None when the
         substrate has no :class:`HostStagingPipeline`)."""
+        return None
+
+    def cache_snapshot(self) -> Optional[CacheStats]:
+        """Snapshot of the backend's device hot-row-cache counters (None
+        when the substrate has no :class:`repro.serve.hotcache.HotRowCache`
+        attached)."""
         return None
 
     # ------------------------------------------------------------------ #
@@ -597,6 +660,7 @@ class StreamOrchestrator:
         plan_total = 0.0
         prefetch_hits = 0  # batches whose plan was built behind execution
         staging0 = self.backend.staging_snapshot()
+        cache0 = self.backend.cache_snapshot()
 
         tp = time.perf_counter()
         g_new = self._apply_graph(batches[0])
@@ -651,6 +715,11 @@ class StreamOrchestrator:
             ss.sync_wait_s = ((s1.wait_gather_s + s1.drain_wait_s)
                               - (staging0.wait_gather_s + staging0.drain_wait_s))
             ss.compute_s = s1.wait_device_s - staging0.wait_device_s
+        if cache0 is not None:
+            c1 = self.backend.cache_snapshot()
+            ss.cache_hit_rows = c1.hit_rows - cache0.hit_rows
+            ss.cache_miss_rows = c1.miss_rows - cache0.miss_rows
+            ss.cache_evictions = c1.evictions - cache0.evictions
         return ss
 
 
@@ -974,6 +1043,68 @@ def _override_rows(dst_vals: np.ndarray, dst_rows: np.ndarray,
 
 
 @dataclasses.dataclass
+class _CacheLayerOps:
+    """Plan-time device hot-row-cache schedule for one layer (ISSUE 8).
+
+    Built by the host-resident backends' ``_plan_cache`` next to the
+    transfer tables (value-independent, so it keeps the plan/execute
+    overlap contract) and consumed by their cached gather/exec paths at
+    dispatch.  All ``*_pos`` arrays are positions in the layer's device
+    workspace — ``[nh]``/``[ns]`` compact space for the flat offload,
+    flat ``[S·cap]`` stacked space for the hybrid; ``h_miss_src``/
+    ``s_miss_src`` are the global row ids the staging worker still
+    gathers (the cold misses); ``patch_src`` / ``*_wb_pos`` index the
+    previous / current layer's compact device outputs."""
+
+    # h^{l-1} gather space ("h", l): hits read device slots, misses stage
+    h_hit_pos: np.ndarray
+    h_hit_slots: np.ndarray
+    h_miss_pos: np.ndarray
+    h_miss_src: np.ndarray
+    h_admit_midx: np.ndarray  # miss-buffer rows to install into fresh slots
+    h_admit_slots: np.ndarray
+    # device-side new-view patch (previous layer's still-resident outputs)
+    patch_pos: np.ndarray
+    patch_src: np.ndarray
+    # state gather space ("s", l): a/nct/h_cur rows
+    s_hit_pos: np.ndarray
+    s_hit_slots: np.ndarray
+    s_miss_pos: np.ndarray
+    s_miss_src: np.ndarray
+    # in-place slot refresh from this layer's kernel outputs
+    s_wb_pos: np.ndarray
+    s_wb_slots: np.ndarray
+    hnext_wb_pos: np.ndarray
+    hnext_wb_slots: np.ndarray
+
+
+def _patch_positions(dst_keys: np.ndarray, src_rows: np.ndarray):
+    """Workspace positions (and source indices) of the new-view patch —
+    the same match :func:`_override_rows` performs on the host path, so
+    the cached device patch is position-for-position identical."""
+    idx = np.full(dst_keys.shape[0], -1, np.int64)
+    _override_rows(idx, np.asarray(dst_keys, np.int64), src_rows,
+                   np.arange(src_rows.shape[0], dtype=np.int64))
+    pos = np.flatnonzero(idx >= 0).astype(np.int64)
+    return pos, idx[pos]
+
+
+def _cache_assemble(n_rows: int, dim: int, miss_pos: np.ndarray, miss_vals,
+                    hit_pos: np.ndarray, hit_vals):
+    """Device workspace assembly: scatter the staged cold misses and the
+    cached hot rows into a zeroed ``[n_rows, dim]`` array.  Hit and miss
+    positions partition the live rows (dead stacked-hybrid positions stay
+    0.0, matching the host gather's zeroing), so the result is bitwise
+    identical to the staged workspace it replaces."""
+    out = jnp.zeros((n_rows, dim), jnp.float32)
+    if miss_pos.size:
+        out = out.at[miss_pos].set(miss_vals)
+    if hit_pos.size:
+        out = out.at[hit_pos].set(hit_vals)
+    return out
+
+
+@dataclasses.dataclass
 class _LayerTransfer:
     """Plan-time (value-independent) compact transfer tables for one layer."""
 
@@ -998,6 +1129,7 @@ class _OffloadPrep:
     plan: BatchPlan
     batch: UpdateBatch
     transfers: List[_LayerTransfer]
+    cache_ops: Optional[List[_CacheLayerOps]] = None
 
     @property
     def n_inc_edges(self) -> int:
@@ -1025,6 +1157,7 @@ class _DeferredWritebackMixin:
 
     _pending = None
     _staging: Optional[HostStagingPipeline] = None
+    _cache: Optional[HotRowCache] = None
 
     def flush(self) -> None:
         self.barrier_epoch += 1
@@ -1040,9 +1173,46 @@ class _DeferredWritebackMixin:
     def staging_snapshot(self) -> Optional[StagingStats]:
         return self._staging.stats.snapshot()
 
+    def cache_snapshot(self) -> Optional[CacheStats]:
+        return None if self._cache is None else self._cache.stats.snapshot()
+
     @property
     def async_staging(self) -> bool:
         return self._staging.async_mode
+
+    def _cache_layer_ops(self, l: int, n: int, rows_h: np.ndarray,
+                         rows_s: np.ndarray, prev_rows: np.ndarray,
+                         deg: np.ndarray):
+        """Shared per-layer cache planning for the host-resident
+        substrates: the read splits for the ``("h", l)`` / ``("s", l)``
+        spaces and the write-back slot refresh for ``("s", l)`` and
+        ``("h", l+1)``.  ``prev_rows`` (the rows the batch wrote earlier —
+        layer l-1's scatter set, or the feature vertices for l=0) are
+        excluded from hits *and* staged-value admission: their cached
+        slots were just refreshed with post-write values, while layer l's
+        old view needs the pristine pre-batch rows (see the coherence
+        notes in repro.serve.hotcache)."""
+        cache = self._cache
+        h_split = cache.plan_reads(("h", l), n, rows_h, deg[rows_h],
+                                   exclude_rows=prev_rows)
+        s_split = cache.plan_reads(("s", l), n, rows_s, deg[rows_s],
+                                   admit=False)
+        s_wb = cache.plan_writeback(("s", l), n, rows_s, deg[rows_s])
+        if l + 1 < self.L:
+            hn_wb = cache.plan_writeback(("h", l + 1), n, rows_s, deg[rows_s])
+        else:  # h^L is never re-read through the cache
+            hn_wb = (np.zeros(0, np.int64), np.zeros(0, np.int32))
+        return h_split, s_split, s_wb, hn_wb
+
+    def _cache_invalidate_feats(self, batch: UpdateBatch) -> np.ndarray:
+        """Plan-time, value-independent invalidation for a batch's feature
+        scatter (it rewrites h[0] rows outside the kernel write-back path);
+        returns the feature rows as layer 0's exclusion set."""
+        if batch.feat_vertices is not None and np.asarray(batch.feat_vertices).size:
+            rows = np.asarray(batch.feat_vertices, np.int64)
+            self._cache.invalidate(("h", 0), rows)
+            return rows
+        return np.zeros(0, np.int64)
 
     def _defer_final(self, payload) -> None:
         """Queue the final layer's write-back: on the worker (async) or as
@@ -1076,13 +1246,16 @@ class OffloadBackend(_DeferredWritebackMixin, StateBackend):
     (bitwise-identical output; tests/test_staging.py)."""
 
     def __init__(self, model: GNNModel, params: Sequence[Params],
-                 graph: CSRGraph, x: np.ndarray, async_staging: bool = True):
+                 graph: CSRGraph, x: np.ndarray, async_staging: bool = True,
+                 cache: Optional[HotRowCache] = None, staging_depth: int = 2):
         self.model = model
         self.params = list(params)
         self.L = len(self.params)
         self.x = np.asarray(x, np.float32)
         self.transfers = TransferStats()
-        self._staging = HostStagingPipeline(self.L, async_mode=async_staging,
+        self._cache = cache
+        self._staging = HostStagingPipeline(self.L, depth=staging_depth,
+                                            async_mode=async_staging,
                                             name="offload")
         states = full_forward(model, params, jnp.asarray(self.x), graph)
         self.h: List[np.ndarray] = [self.x.copy()] + [np.array(s.h) for s in states]
@@ -1108,6 +1281,8 @@ class OffloadBackend(_DeferredWritebackMixin, StateBackend):
         self.h = [self.h[0]] + [np.array(s.h) for s in states]
         self.a = [np.array(s.a) for s in states]
         self.nct = [np.array(s.nct) for s in states]
+        if self._cache is not None:  # every cached row may now be stale
+            self._cache.invalidate_all()
 
     # ------------------------------------------------------------------ #
     # Serving API: host-numpy gather; flush() first so a deferred final
@@ -1126,7 +1301,10 @@ class OffloadBackend(_DeferredWritebackMixin, StateBackend):
     # orchestrator flushes first, so no deferred write-back is in flight)
     # ------------------------------------------------------------------ #
     def apply_feature_updates(self, rows: np.ndarray, vals: np.ndarray) -> None:
-        self.h[0][np.asarray(rows, np.int64)] = np.asarray(vals, np.float32)
+        rows = np.asarray(rows, np.int64)
+        self.h[0][rows] = np.asarray(vals, np.float32)
+        if self._cache is not None:
+            self._cache.invalidate(("h", 0), rows)
 
     def layer_input_host(self, l: int) -> np.ndarray:
         return self.h[l]
@@ -1136,6 +1314,9 @@ class OffloadBackend(_DeferredWritebackMixin, StateBackend):
         self.a[l][rows] = a_rows
         self.nct[l][rows] = nct_rows
         self.h[l + 1][rows] = h_rows
+        if self._cache is not None:  # value-independent: keyed by rows only
+            self._cache.invalidate(("s", l), rows)
+            self._cache.invalidate(("h", l + 1), rows)
 
     # ------------------------------------------------------------------ #
     # planning phase (host only, value-independent)
@@ -1179,7 +1360,38 @@ class OffloadBackend(_DeferredWritebackMixin, StateBackend):
                     [plan.deg_new[need_h], [0.0]]).astype(np.float32),
             ))
             prev_rows = srows
-        return _OffloadPrep(plan=plan, batch=batch, transfers=transfers)
+        cache_ops = (self._plan_cache(plan, batch, transfers)
+                     if self._cache is not None else None)
+        return _OffloadPrep(plan=plan, batch=batch, transfers=transfers,
+                            cache_ops=cache_ops)
+
+    def _plan_cache(self, plan: BatchPlan, batch: UpdateBatch,
+                    transfers: List[_LayerTransfer]) -> List[_CacheLayerOps]:
+        """Plan-time residency split for every layer (host only,
+        value-independent — it touches slot metadata and degree tables,
+        never row values).  Runs after dispatch(t-1) returned, so all of
+        batch t-1's cache-store updates are already recorded."""
+        cache = self._cache
+        n = plan.deg_old.shape[0] - 1  # deg tables carry a scratch slot
+        deg = plan.deg_new
+        prev_rows = self._cache_invalidate_feats(batch)
+        ops: List[_CacheLayerOps] = []
+        for l, tr in enumerate(transfers):
+            h_split, s_split, s_wb, hn_wb = self._cache_layer_ops(
+                l, n, tr.need_h, tr.srows, prev_rows, deg)
+            patch_pos, patch_src = _patch_positions(tr.need_h, prev_rows)
+            ops.append(_CacheLayerOps(
+                h_hit_pos=h_split.hit_pos, h_hit_slots=h_split.hit_slots,
+                h_miss_pos=h_split.miss_pos, h_miss_src=h_split.miss_rows,
+                h_admit_midx=h_split.admit_midx,
+                h_admit_slots=h_split.admit_slots,
+                patch_pos=patch_pos, patch_src=patch_src,
+                s_hit_pos=s_split.hit_pos, s_hit_slots=s_split.hit_slots,
+                s_miss_pos=s_split.miss_pos, s_miss_src=s_split.miss_rows,
+                s_wb_pos=s_wb[0], s_wb_slots=s_wb[1],
+                hnext_wb_pos=hn_wb[0], hnext_wb_slots=hn_wb[1]))
+            prev_rows = tr.srows
+        return ops
 
     # ------------------------------------------------------------------ #
     def dispatch(self, prep: _OffloadPrep) -> None:
@@ -1210,9 +1422,12 @@ class OffloadBackend(_DeferredWritebackMixin, StateBackend):
             prev_rows = np.zeros(0, np.int64)
             prev_new = np.zeros((0, self.h[0].shape[1]), np.float32)
 
+        ops = prep.cache_ops
         tickets = [
             pipe.submit_gather(partial(self._gather_layer, l, tr,
-                                       pipe.buffers(l)), tag=l)
+                                       pipe.buffers(l),
+                                       None if ops is None else ops[l]),
+                               tag=l)
             for l, tr in enumerate(prep.transfers)
         ]
         if prev_rows.size:
@@ -1222,10 +1437,18 @@ class OffloadBackend(_DeferredWritebackMixin, StateBackend):
                 partial(self._scatter_feats, prev_rows, prev_new),
                 nbytes=int(prev_new.nbytes), tag="feat")
 
+        # cached path: the previous layer's outputs stay device-resident so
+        # the new-view patch happens on device instead of via staged h_new
+        prev_dev = jnp.asarray(prev_new) if prev_rows.size else None
         final = None
         for l, (lp, tr) in enumerate(zip(prep.plan.layers, prep.transfers)):
             staged = pipe.wait_gather(tickets[l])
-            outs = self._layer_exec(l, lp, tr, staged, prev_rows, prev_new)
+            if ops is None:
+                outs = self._layer_exec(l, lp, tr, staged, prev_rows, prev_new)
+            else:
+                outs = self._layer_exec_cached(l, lp, tr, staged, ops[l],
+                                               prev_dev)
+                prev_dev = None if outs is None else outs[2]
             if l + 1 < self.L:
                 if outs is None:  # empty layer: nothing written back
                     prev_rows = tr.srows
@@ -1245,14 +1468,30 @@ class OffloadBackend(_DeferredWritebackMixin, StateBackend):
     def _scatter_feats(self, rows: np.ndarray, vals: np.ndarray) -> None:
         self.h[0][rows] = vals
 
-    def _gather_layer(self, l: int, tr: _LayerTransfer, bufs):
+    def _gather_layer(self, l: int, tr: _LayerTransfer, bufs,
+                      cops: Optional[_CacheLayerOps] = None):
         """Staging-worker job: pristine gather of layer ``l``'s compact
         rows into the double-buffered staging set (``h_new`` starts as a
-        copy of ``h_old``; the caller patches it before H2D)."""
+        copy of ``h_old``; the caller patches it before H2D).  With the
+        hot-row cache enabled, only the plan's cold misses stage — hits
+        are served from device slots at exec and no ``h_new`` view stages
+        at all (the new-view patch happens on device)."""
         need_h, srows = tr.need_h, tr.srows
         nh, ns = need_h.shape[0], srows.shape[0]
         if nh == 0 and ns == 0:
             return None
+        if cops is not None:
+            nh_m, ns_m = cops.h_miss_src.shape[0], cops.s_miss_src.shape[0]
+            h_old = bufs.take("h_old", nh_m, self.h[l].shape[1:])
+            np.take(self.h[l], cops.h_miss_src, axis=0, out=h_old)
+            a_rows = bufs.take("a", ns_m, self.a[l].shape[1:])
+            np.take(self.a[l], cops.s_miss_src, axis=0, out=a_rows)
+            nct_rows = bufs.take("nct", ns_m, self.nct[l].shape[1:])
+            np.take(self.nct[l], cops.s_miss_src, axis=0, out=nct_rows)
+            h_cur = bufs.take("h_cur", ns_m, self.h[l + 1].shape[1:])
+            np.take(self.h[l + 1], cops.s_miss_src, axis=0, out=h_cur)
+            return {"h_old": h_old, "a": a_rows, "nct": nct_rows,
+                    "h_cur": h_cur}
         h_old = bufs.take("h_old", nh, self.h[l].shape[1:])
         np.take(self.h[l], need_h, axis=0, out=h_old)
         h_new = bufs.take("h_new", nh, self.h[l].shape[1:])
@@ -1308,6 +1547,94 @@ class OffloadBackend(_DeferredWritebackMixin, StateBackend):
             out_rows_s, out_mask,
             f_rows_h=f_rows_h, out_rows_h=out_rows_h,
         )
+
+    def _layer_exec_cached(self, l: int, lp: LayerPlan, tr: _LayerTransfer,
+                           staged, cops: _CacheLayerOps, prev_dev):
+        """Cached variant of :meth:`_layer_exec`: assemble the device
+        workspaces from staged cold misses + cached hot slots, patch the
+        new view on device from the previous layer's still-resident
+        outputs, run the identical kernel, then refresh written slots in
+        place from the kernel outputs (bitwise-equal to the uncached path
+        — hits/misses partition the rows, and the float32 D2H→H2D
+        round-trip the uncached patch takes is value-preserving)."""
+        if staged is None:
+            return None
+        cache = self._cache
+        nh, ns = tr.need_h.shape[0], tr.srows.shape[0]
+        h_old_m, a_m, nct_m, h_cur_m = (staged["h_old"], staged["a"],
+                                        staged["nct"], staged["h_cur"])
+        self.transfers.rows_up += h_old_m.shape[0] + 3 * a_m.shape[0]
+        self.transfers.bytes_up += (h_old_m.nbytes + a_m.nbytes
+                                    + nct_m.nbytes + h_cur_m.nbytes)
+
+        dev = jax.device_put((
+            h_old_m, a_m, nct_m, h_cur_m,
+            tr.deg_old_rows, tr.deg_new_rows,
+            tr.e_src, tr.e_dst, lp.e_rowidx, lp.e_sign, lp.e_use_new,
+            lp.e_w, lp.e_t, lp.e_mask,
+            tr.touch_rows_s, lp.touch_mask,
+            tr.f_rows_s, lp.f_mask, tr.f_src, lp.f_rowidx, lp.f_w,
+            lp.f_t, lp.f_emask,
+            tr.out_rows_s, lp.out_mask, tr.f_rows_h, tr.out_rows_h,
+        ))
+        (h_old_md, a_md, nct_md, h_cur_md, deg_old_d, deg_new_d,
+         e_src, e_dst, e_rowidx, e_sign, e_use_new, e_w, e_t, e_mask,
+         touch_rows_s, touch_mask, f_rows_s, f_mask, f_src, f_rowidx, f_w,
+         f_t, f_emask, out_rows_s, out_mask, f_rows_h, out_rows_h) = dev
+
+        d_in = self.h[l].shape[1]
+        h_old_d = _cache_assemble(
+            nh, d_in, cops.h_miss_pos, h_old_md, cops.h_hit_pos,
+            cache.store(("h", l), "h", (d_in,))[cops.h_hit_slots]
+            if cops.h_hit_pos.size else None)
+        # install freshly admitted rows from the staged pristine values
+        if cops.h_admit_midx.size:
+            cache.update_store(("h", l), "h", cops.h_admit_slots,
+                               h_old_md[cops.h_admit_midx])
+        if cops.patch_pos.size:
+            h_new_d = h_old_d.at[cops.patch_pos].set(prev_dev[cops.patch_src])
+        else:
+            h_new_d = h_old_d
+
+        da, dn, dc = (self.a[l].shape[1], self.nct[l].shape[1],
+                      self.h[l + 1].shape[1])
+        s_key = ("s", l)
+        a_d = _cache_assemble(
+            ns, da, cops.s_miss_pos, a_md, cops.s_hit_pos,
+            cache.store(s_key, "a", (da,))[cops.s_hit_slots]
+            if cops.s_hit_pos.size else None)
+        nct_d = _cache_assemble(
+            ns, dn, cops.s_miss_pos, nct_md, cops.s_hit_pos,
+            cache.store(s_key, "nct", (dn,))[cops.s_hit_slots]
+            if cops.s_hit_pos.size else None)
+        h_cur_d = _cache_assemble(
+            ns, dc, cops.s_miss_pos, h_cur_md, cops.s_hit_pos,
+            cache.store(s_key, "h", (dc,))[cops.s_hit_slots]
+            if cops.s_hit_pos.size else None)
+
+        outs = incremental_layer(
+            self.model, self.params[l],
+            with_scratch(h_old_d), with_scratch(h_new_d),
+            deg_old_d, deg_new_d, a_d, nct_d, h_cur_d,
+            e_src, e_dst, e_rowidx, e_sign, e_use_new, e_w, e_t, e_mask,
+            touch_rows_s, touch_mask,
+            f_rows_s, f_mask, f_src, f_rowidx, f_w, f_t, f_emask,
+            out_rows_s, out_mask,
+            f_rows_h=f_rows_h, out_rows_h=out_rows_h,
+        )
+        # in-place slot refresh from the kernel outputs: hot written rows
+        # skip the D2H→host→H2D re-staging round-trip on the next batch
+        if cops.s_wb_pos.size:
+            cache.update_store(s_key, "a", cops.s_wb_slots,
+                               outs[0][cops.s_wb_pos])
+            cache.update_store(s_key, "nct", cops.s_wb_slots,
+                               outs[1][cops.s_wb_pos])
+            cache.update_store(s_key, "h", cops.s_wb_slots,
+                               outs[2][cops.s_wb_pos])
+        if cops.hnext_wb_pos.size:
+            cache.update_store(("h", l + 1), "h", cops.hnext_wb_slots,
+                               outs[2][cops.hnext_wb_pos])
+        return outs
 
     def _writeback_host(self, l: int, srows: np.ndarray, a_new: np.ndarray,
                         nct_new: np.ndarray, h_new: np.ndarray) -> None:
@@ -1529,6 +1856,7 @@ class _HybridPrep:
     plan: BatchPlan
     batch: UpdateBatch
     layers: List[HybridLayerPlan]
+    cache_ops: Optional[List[_CacheLayerOps]] = None
 
     @property
     def n_inc_edges(self) -> int:
@@ -1578,6 +1906,8 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
         num_shards: Optional[int] = None,
         shcfg=None,
         async_staging: bool = True,
+        cache: Optional[HotRowCache] = None,
+        staging_depth: int = 2,
     ):
         self.model = model
         self.params = list(params)
@@ -1588,7 +1918,9 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
         self._step = hybrid_layer_step_fn(model, self.mesh, self.axis)
         self.hwm = BucketHysteresis()
         self.transfers = TransferStats()
-        self._staging = HostStagingPipeline(self.L, async_mode=async_staging,
+        self._cache = cache
+        self._staging = HostStagingPipeline(self.L, depth=staging_depth,
+                                            async_mode=async_staging,
                                             name="hybrid")
         # caller (rows_up) and staging worker (rows_down) both touch the
         # per-shard accumulators — serialize the read-modify-write updates
@@ -1638,6 +1970,8 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
     def refresh(self, graph: CSRGraph) -> None:
         self.flush()
         self._init_state(graph)
+        if self._cache is not None:  # every cached row may now be stale
+            self._cache.invalidate_all()
 
     @property
     def embeddings(self) -> np.ndarray:
@@ -1668,8 +2002,10 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
     # (the orchestrator flushes first, so the staging worker is drained)
     # ------------------------------------------------------------------ #
     def apply_feature_updates(self, rows: np.ndarray, vals: np.ndarray) -> None:
-        self._scatter_rows(self.h[0], np.asarray(rows, np.int64),
-                           np.asarray(vals, np.float32))
+        rows = np.asarray(rows, np.int64)
+        self._scatter_rows(self.h[0], rows, np.asarray(vals, np.float32))
+        if self._cache is not None:
+            self._cache.invalidate(("h", 0), rows)
 
     def layer_input_host(self, l: int) -> np.ndarray:
         return self._from_blocks(self.h[l])
@@ -1680,6 +2016,9 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
         self._scatter_rows(self.a[l], r, a_rows)
         self._scatter_rows(self.nct[l], r, nct_rows)
         self._scatter_rows(self.h[l + 1], r, h_rows)
+        if self._cache is not None:  # value-independent: keyed by rows only
+            self._cache.invalidate(("s", l), r)
+            self._cache.invalidate(("h", l + 1), r)
 
     # ------------------------------------------------------------------ #
     # planning phase (host only, value-independent)
@@ -1689,7 +2028,51 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
         plan = (base_plan if base_plan is not None
                 else build_plan(self.model, g_old, g_new, batch, self.L))
         hp = hybrid_plan(plan, self.S, hwm=self.hwm)
-        return _HybridPrep(plan=plan, batch=batch, layers=hp.layers)
+        cache_ops = (self._plan_cache(plan, batch, hp.layers)
+                     if self._cache is not None else None)
+        return _HybridPrep(plan=plan, batch=batch, layers=hp.layers,
+                           cache_ops=cache_ops)
+
+    def _plan_cache(self, plan: BatchPlan, batch: UpdateBatch,
+                    layers: List[HybridLayerPlan]) -> List[_CacheLayerOps]:
+        """Plan-time residency split over the stacked ``[S, cap]`` hybrid
+        workspaces.  Cache keys are global row ids (a hot halo row is
+        cached once, served to every shard that stages it); all positions
+        are flattened ``[S·cap]`` indices so the cached exec scatters
+        straight into the flat workspace view."""
+        cache = self._cache
+        n = plan.deg_old.shape[0] - 1  # deg tables carry a scratch slot
+        deg = plan.deg_new
+        prev_rows = self._cache_invalidate_feats(batch)
+        prev_live_pos: Optional[np.ndarray] = None
+        ops: List[_CacheLayerOps] = []
+        for l, tr in enumerate(layers):
+            live_pos_h = np.flatnonzero(tr.need_mask.reshape(-1)).astype(np.int64)
+            rows_h = tr.need_h.reshape(-1)[live_pos_h].astype(np.int64)
+            live_pos_s = np.flatnonzero(tr.srows_mask.reshape(-1)).astype(np.int64)
+            rows_s = tr.srows.reshape(-1)[live_pos_s].astype(np.int64)
+            h_split, s_split, s_wb, hn_wb = self._cache_layer_ops(
+                l, n, rows_h, rows_s, prev_rows, deg)
+            dst_keys = np.where(tr.need_mask, tr.need_h, -1).reshape(-1)
+            patch_pos, patch_src = _patch_positions(dst_keys, prev_rows)
+            if l > 0:  # compose: index into srows_flat → flat ws position
+                patch_src = prev_live_pos[patch_src]
+            ops.append(_CacheLayerOps(
+                h_hit_pos=live_pos_h[h_split.hit_pos],
+                h_hit_slots=h_split.hit_slots,
+                h_miss_pos=live_pos_h[h_split.miss_pos],
+                h_miss_src=h_split.miss_rows,
+                h_admit_midx=h_split.admit_midx,
+                h_admit_slots=h_split.admit_slots,
+                patch_pos=patch_pos, patch_src=patch_src,
+                s_hit_pos=live_pos_s[s_split.hit_pos],
+                s_hit_slots=s_split.hit_slots,
+                s_miss_pos=live_pos_s[s_split.miss_pos],
+                s_miss_src=s_split.miss_rows,
+                s_wb_pos=live_pos_s[s_wb[0]], s_wb_slots=s_wb[1],
+                hnext_wb_pos=live_pos_s[hn_wb[0]], hnext_wb_slots=hn_wb[1]))
+            prev_rows, prev_live_pos = rows_s, live_pos_s
+        return ops
 
     # ------------------------------------------------------------------ #
     def dispatch(self, prep: _HybridPrep) -> None:
@@ -1712,9 +2095,12 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
             prev_rows = np.zeros(0, np.int64)
             prev_new = np.zeros((0, self.h[0].shape[2]), np.float32)
 
+        ops = prep.cache_ops
         tickets = [
             pipe.submit_gather(partial(self._gather_layer, l, tr,
-                                       pipe.buffers(l)), tag=l)
+                                       pipe.buffers(l),
+                                       None if ops is None else ops[l]),
+                               tag=l)
             for l, tr in enumerate(prep.layers)
         ]
         if prev_rows.size:
@@ -1722,10 +2108,17 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
                 partial(self._scatter_feats, prev_rows, prev_new),
                 nbytes=int(prev_new.nbytes), tag="feat")
 
+        # cached path: the previous layer's stacked outputs stay resident
+        # so the new-view patch happens on device (flat [S·cap] positions)
+        prev_dev = jnp.asarray(prev_new) if prev_rows.size else None
         final = None
         for l, tr in enumerate(prep.layers):
             staged = pipe.wait_gather(tickets[l])
-            outs = self._layer_exec(l, tr, staged, prev_rows, prev_new)
+            if ops is None:
+                outs = self._layer_exec(l, tr, staged, prev_rows, prev_new)
+            else:
+                outs = self._layer_exec_cached(l, tr, staged, ops[l], prev_dev)
+                prev_dev = outs[2].reshape(self.S * tr.ns_cap, -1)
             srows_flat = tr.srows[tr.srows_mask]
             if l + 1 < self.L:
                 a_np, nct_np, h_np = pipe.wait_device(outs)
@@ -1742,12 +2135,32 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
     def _scatter_feats(self, rows: np.ndarray, vals: np.ndarray) -> None:
         self._scatter_rows(self.h[0], rows, vals)
 
-    def _gather_layer(self, l: int, tr: HybridLayerPlan, bufs):
+    def _gather_layer(self, l: int, tr: HybridLayerPlan, bufs,
+                      cops: Optional[_CacheLayerOps] = None):
         """Staging-worker job: pristine per-shard gather of layer ``l``'s
         stacked ``[S, cap, ·]`` workspace rows.  Block-contiguous row
         ownership makes the flat view's index the global row id, so the
         gathers fill the double-buffered staging sets with one ``np.take``
-        each."""
+        each.  With the hot-row cache enabled only the plan's cold misses
+        stage (flat row lists; every miss is a live position, and the
+        assembled workspace's dead positions are zero by construction)."""
+        if cops is not None:
+            d_in = self.h[l].shape[2]
+            nh_m, ns_m = cops.h_miss_src.shape[0], cops.s_miss_src.shape[0]
+            h_old = bufs.take("h_old", nh_m, (d_in,))
+            np.take(self.h[l].reshape(self.S * self.rows_per, d_in),
+                    cops.h_miss_src, axis=0, out=h_old)
+
+            def gather_miss(name, blocks):
+                d = blocks.shape[2]
+                rows = bufs.take(name, ns_m, (d,))
+                np.take(blocks.reshape(self.S * self.rows_per, d),
+                        cops.s_miss_src, axis=0, out=rows)
+                return rows
+
+            return {"h_old": h_old, "a": gather_miss("a", self.a[l]),
+                    "nct": gather_miss("nct", self.nct[l]),
+                    "h_cur": gather_miss("h_cur", self.h[l + 1])}
         S, nh_cap, ns_cap = self.S, tr.nh_cap, tr.ns_cap
         live_h, live_s = tr.need_mask, tr.srows_mask
         d_in = self.h[l].shape[2]
@@ -1809,6 +2222,90 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
         return self._step(tr.layout, self._params_dev[l],
                           h_old_d, h_new_d, a_d, nct_d, h_cur_d,
                           idx_d, flt_d, msk_d)
+
+    def _layer_exec_cached(self, l: int, tr: HybridLayerPlan, staged,
+                           cops: _CacheLayerOps, prev_dev):
+        """Cached variant of :meth:`_layer_exec`: assemble the flat
+        ``[S·cap, ·]`` workspaces from staged cold misses + cached hot
+        slots (dead positions stay 0.0, matching the host gather's
+        zeroing), patch the new view on device, reshard to the stacked
+        per-shard layout, run the identical step, then refresh written
+        slots in place from the stacked outputs."""
+        cache = self._cache
+        S, nh_cap, ns_cap = self.S, tr.nh_cap, tr.ns_cap
+        h_old_m, a_m, nct_m, h_cur_m = (staged["h_old"], staged["a"],
+                                        staged["nct"], staged["h_cur"])
+        h_miss_sh = np.bincount(cops.h_miss_pos // nh_cap, minlength=S)
+        s_miss_sh = np.bincount(cops.s_miss_pos // ns_cap, minlength=S)
+        with self._acc_lock:
+            self.transfers.rows_up += int(h_miss_sh.sum() + 3 * s_miss_sh.sum())
+            self.transfers.bytes_up += (h_old_m.nbytes + a_m.nbytes
+                                        + nct_m.nbytes + h_cur_m.nbytes)
+            self.per_shard_rows += h_miss_sh + 3 * s_miss_sh
+
+        h_old_md, a_md, nct_md, h_cur_md = jax.device_put(
+            (h_old_m, a_m, nct_m, h_cur_m))
+        d_in = self.h[l].shape[2]
+        h_old_flat = _cache_assemble(
+            S * nh_cap, d_in, cops.h_miss_pos, h_old_md, cops.h_hit_pos,
+            cache.store(("h", l), "h", (d_in,))[cops.h_hit_slots]
+            if cops.h_hit_pos.size else None)
+        if cops.h_admit_midx.size:
+            cache.update_store(("h", l), "h", cops.h_admit_slots,
+                               h_old_md[cops.h_admit_midx])
+        if cops.patch_pos.size:
+            h_new_flat = h_old_flat.at[cops.patch_pos].set(
+                prev_dev[cops.patch_src])
+        else:
+            h_new_flat = h_old_flat
+
+        da, dn, dc = (self.a[l].shape[2], self.nct[l].shape[2],
+                      self.h[l + 1].shape[2])
+        s_key = ("s", l)
+        a_flat = _cache_assemble(
+            S * ns_cap, da, cops.s_miss_pos, a_md, cops.s_hit_pos,
+            cache.store(s_key, "a", (da,))[cops.s_hit_slots]
+            if cops.s_hit_pos.size else None)
+        nct_flat = _cache_assemble(
+            S * ns_cap, dn, cops.s_miss_pos, nct_md, cops.s_hit_pos,
+            cache.store(s_key, "nct", (dn,))[cops.s_hit_slots]
+            if cops.s_hit_pos.size else None)
+        h_cur_flat = _cache_assemble(
+            S * ns_cap, dc, cops.s_miss_pos, h_cur_md, cops.s_hit_pos,
+            cache.store(s_key, "h", (dc,))[cops.s_hit_slots]
+            if cops.s_hit_pos.size else None)
+
+        # explicit reshard to the stacked per-shard layout for shard_map
+        dev = jax.device_put(
+            (h_old_flat.reshape(S, nh_cap, d_in),
+             h_new_flat.reshape(S, nh_cap, d_in),
+             a_flat.reshape(S, ns_cap, da), nct_flat.reshape(S, ns_cap, dn),
+             h_cur_flat.reshape(S, ns_cap, dc),
+             tr.idx_sh, tr.flt_sh, tr.msk_sh),
+            self._plan_sh,
+        )
+        self.peak_device_bytes = max(
+            self.peak_device_bytes, sum(int(d.nbytes) for d in dev)
+        )
+        (h_old_d, h_new_d, a_d, nct_d, h_cur_d, idx_d, flt_d, msk_d) = dev
+        outs = self._step(tr.layout, self._params_dev[l],
+                          h_old_d, h_new_d, a_d, nct_d, h_cur_d,
+                          idx_d, flt_d, msk_d)
+        if cops.s_wb_pos.size:
+            a_o = outs[0].reshape(S * ns_cap, -1)
+            nct_o = outs[1].reshape(S * ns_cap, -1)
+            h_o = outs[2].reshape(S * ns_cap, -1)
+            cache.update_store(s_key, "a", cops.s_wb_slots,
+                               a_o[cops.s_wb_pos])
+            cache.update_store(s_key, "nct", cops.s_wb_slots,
+                               nct_o[cops.s_wb_pos])
+            cache.update_store(s_key, "h", cops.s_wb_slots,
+                               h_o[cops.s_wb_pos])
+        if cops.hnext_wb_pos.size:
+            cache.update_store(
+                ("h", l + 1), "h", cops.hnext_wb_slots,
+                outs[2].reshape(S * ns_cap, -1)[cops.hnext_wb_pos])
+        return outs
 
     def _writeback_host(self, l: int, tr: HybridLayerPlan,
                         srows_flat: np.ndarray, a_new: np.ndarray,

@@ -41,8 +41,6 @@ import jax.numpy as jnp
 
 from repro.core.backend import (  # noqa: F401  (BatchStats/StreamStats re-export)
     BatchStats,
-    DeviceBackend,
-    StreamOrchestrator,
     StreamStats,
 )
 from repro.core.operators import GNNModel, Params
@@ -51,6 +49,10 @@ from repro.graph.streaming import UpdateBatch
 
 
 class RTECEngine:
+    """Device-resident engine facade.  Constructing it directly is a
+    **deprecated alias** of ``create_engine("device", EngineConfig(...))``
+    (:mod:`repro.serve.api`), which is the one documented entry point."""
+
     def __init__(
         self,
         model: GNNModel,
@@ -63,13 +65,15 @@ class RTECEngine:
         use_pallas_delta: bool = False,
         policy=None,
     ):
-        self._backend = DeviceBackend(
-            model, params, graph, jnp.asarray(x),
-            store_h=store_h, fused=fused, use_pallas_delta=use_pallas_delta,
-        )
-        self._orch = StreamOrchestrator(self._backend, graph,
-                                        refresh_every=refresh_every,
-                                        policy=policy)
+        # deferred import: repro.serve.api imports this module at load time
+        from repro.serve.api import EngineConfig, _alias_deprecated, create_engine
+
+        _alias_deprecated("RTECEngine")
+        eng = create_engine("device", EngineConfig(
+            model=model, graph=graph, x=jnp.asarray(x), params=params,
+            store_h=store_h, refresh_every=refresh_every, fused=fused,
+            use_pallas_delta=use_pallas_delta, policy=policy))
+        self._backend, self._orch = eng._backend, eng._orch
 
     # ------------------------------------------------------------------ #
     # public API: delegates to orchestrator (control) + backend (state)

@@ -168,6 +168,17 @@ class ExecutionPolicy:
     an adaptive run's recorded decisions through it).  Estimates are still
     computed and recorded, so forced runs report the same ``est_edges``
     accounting as adaptive ones.
+
+    ``hysteresis`` (ISSUE 8) adds a relative switching band: after the
+    first batch, the policy stays on the previously chosen mode unless the
+    cheapest mode is at least ``hysteresis`` cheaper *relative to the
+    previous mode's current cost* — i.e. it switches only when
+    ``costs[best] < (1 - hysteresis) * costs[prev]``.  With the default
+    ``0.0`` the argmin is taken every batch (pre-ISSUE-8 behavior, and the
+    behavior the exact adversarial CI gates pin); a band of 0.1–0.3 damps
+    mode flapping on regimes that oscillate around a cost crossover while
+    still following genuine regime shifts.  Forced decisions bypass the
+    band entirely and do not update its notion of "previous mode".
     """
 
     def __init__(
@@ -176,6 +187,7 @@ class ExecutionPolicy:
         chunked_weight: float = DEFAULT_CHUNKED_WEIGHT,
         full_weight: float = DEFAULT_FULL_WEIGHT,
         force_mode: Union[None, str, Sequence[str]] = None,
+        hysteresis: float = 0.0,
     ):
         self.weights = {"incremental": float(incremental_weight),
                         "chunked": float(chunked_weight),
@@ -186,7 +198,12 @@ class ExecutionPolicy:
             force_mode = tuple(force_mode)
             for m in force_mode:
                 _check_mode(m)
+        if not 0.0 <= float(hysteresis) < 1.0:
+            raise ValueError(
+                f"hysteresis must be in [0, 1), got {hysteresis!r}")
         self.force_mode = force_mode
+        self.hysteresis = float(hysteresis)
+        self._prev_mode: Optional[str] = None
         self.decisions: Dict[str, int] = {m: 0 for m in MODES}
         self.history: List[PolicyDecision] = []
 
@@ -214,6 +231,16 @@ class ExecutionPolicy:
             mode = self.force_mode[i]
         else:
             mode = min(MODES, key=lambda m: (costs[m], MODES.index(m)))
+            # the band only engages when configured: hysteresis=0.0 must
+            # reproduce the plain argmin bit-for-bit (exact-tie tie-breaks
+            # included) — the adversarial CI gates pin those decisions
+            if self.hysteresis > 0.0:
+                prev = self._prev_mode
+                if (prev is not None and mode != prev
+                        and not costs[mode]
+                        < (1.0 - self.hysteresis) * costs[prev]):
+                    mode = prev  # inside the band: hold the previous mode
+            self._prev_mode = mode
         decision = PolicyDecision(mode=mode, estimate=est, costs=costs,
                                   forced=forced)
         self.decisions[mode] += 1
@@ -229,16 +256,19 @@ def _check_mode(mode: str) -> None:
 
 def make_policy(spec: Union[None, str, ExecutionPolicy],
                 chunked_weight: float = DEFAULT_CHUNKED_WEIGHT,
+                hysteresis: float = 0.0,
                 ) -> Optional[ExecutionPolicy]:
     """Resolve an :class:`~repro.serve.api.EngineConfig` policy knob.
 
     ``None`` → no policy (the pre-policy incremental-only orchestrator
-    path, byte-identical behavior); ``"adaptive"`` → cost-model scoring;
-    a mode name → that mode forced on every batch; an
-    :class:`ExecutionPolicy` instance passes through unchanged."""
+    path, byte-identical behavior); ``"adaptive"`` → cost-model scoring
+    with the given switching ``hysteresis`` band; a mode name → that mode
+    forced on every batch; an :class:`ExecutionPolicy` instance passes
+    through unchanged (``chunked_weight``/``hysteresis`` ignored)."""
     if spec is None or isinstance(spec, ExecutionPolicy):
         return spec
     if spec == "adaptive":
-        return ExecutionPolicy(chunked_weight=chunked_weight)
+        return ExecutionPolicy(chunked_weight=chunked_weight,
+                               hysteresis=hysteresis)
     _check_mode(spec)
     return ExecutionPolicy(chunked_weight=chunked_weight, force_mode=spec)

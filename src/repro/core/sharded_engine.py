@@ -40,8 +40,6 @@ import numpy as np
 
 from repro.core.backend import (
     BatchStats,
-    ShardBackend,
-    StreamOrchestrator,
     StreamStats,
 )
 from repro.core.operators import GNNModel, Params
@@ -51,6 +49,10 @@ from repro.graph.streaming import UpdateBatch
 
 
 class ShardedRTECEngine:
+    """Row-sharded engine facade.  Constructing it directly is a
+    **deprecated alias** of ``create_engine("sharded", EngineConfig(...))``
+    (:mod:`repro.serve.api`), which is the one documented entry point."""
+
     def __init__(
         self,
         model: GNNModel,
@@ -64,13 +66,15 @@ class ShardedRTECEngine:
         use_pallas_delta: bool = False,
         policy=None,
     ):
-        self._backend = ShardBackend(
-            model, params, graph, x, mesh=mesh, num_shards=num_shards,
-            shcfg=shcfg, use_pallas_delta=use_pallas_delta,
-        )
-        self._orch = StreamOrchestrator(self._backend, graph,
-                                        refresh_every=refresh_every,
-                                        policy=policy)
+        # deferred import: repro.serve.api imports this module at load time
+        from repro.serve.api import EngineConfig, _alias_deprecated, create_engine
+
+        _alias_deprecated("ShardedRTECEngine")
+        eng = create_engine("sharded", EngineConfig(
+            model=model, graph=graph, x=x, params=params, mesh=mesh,
+            num_shards=num_shards, shcfg=shcfg, refresh_every=refresh_every,
+            use_pallas_delta=use_pallas_delta, policy=policy))
+        self._backend, self._orch = eng._backend, eng._orch
 
     # ------------------------------------------------------------------ #
     def apply_batch(self, batch: UpdateBatch, block: bool = True) -> BatchStats:

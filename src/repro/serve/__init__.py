@@ -14,8 +14,10 @@ _API = ("create_engine", "EngineConfig", "BACKENDS", "ChunkedRTECEngine",
         "serving_frontend")
 _FRONTEND = ("ServingFrontend", "ReadTicket", "ReadRejectedError",
              "StaleVersionError")
+_CACHE = ("CacheConfig", "CacheStats", "HotRowCache")
+_STAGING = ("StagingConfig",)
 
-__all__ = list(_API + _FRONTEND)
+__all__ = list(_API + _FRONTEND + _CACHE + _STAGING)
 
 
 def __getattr__(name: str):
@@ -27,4 +29,12 @@ def __getattr__(name: str):
         from repro.serve import frontend
 
         return getattr(frontend, name)
+    if name in _CACHE:
+        from repro.serve import hotcache
+
+        return getattr(hotcache, name)
+    if name in _STAGING:
+        from repro.serve import staging
+
+        return getattr(staging, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

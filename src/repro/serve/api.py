@@ -1,4 +1,4 @@
-"""Unified public engine API: one config, one factory, five backends.
+"""THE public engine API: one config, one factory, five backends.
 
 Five PRs of engine growth left four parallel constructor surfaces
 (``RTECEngine``, ``OffloadedRTECEngine``, ``ShardedRTECEngine``,
@@ -8,35 +8,43 @@ interface over many models):
 
 * :class:`EngineConfig` — a single dataclass naming every construction
   knob any backend understands (model/params/graph/features, the device
-  flags, the async-staging flag, the mesh/shard knobs, the chunk knobs).
-  Knobs a backend does not consume are simply ignored by it, so one config
-  can drive a backend sweep.
+  flags, the typed :class:`~repro.serve.staging.StagingConfig` /
+  :class:`~repro.serve.hotcache.CacheConfig` sub-configs for the
+  host-resident backends, the mesh/shard knobs, the chunk knobs, the
+  execution-policy spec).  Knobs a backend does not consume are simply
+  ignored by it, so one config can drive a backend sweep.
 * :func:`create_engine` — ``create_engine(backend, config)`` for
-  ``backend`` in :data:`BACKENDS`.  The factory calls the *same*
-  constructors as direct instantiation — no extra wrapping — so factory
-  construction is bitwise-equal to the legacy path (pinned by
-  tests/test_frontend.py).
-* :class:`ChunkedRTECEngine` — public facade for the §V-C chunked
-  substrate (:class:`~repro.core.backend.ChunkedBackend`), previously dead
-  code behind ``repro.serve.scheduler``; now constructible as
+  ``backend`` in :data:`BACKENDS`.  **This is the only documented
+  constructor**: it owns the canonical backend + orchestrator assembly
+  (including the ISSUE-8 device hot-row cache wiring), and the legacy
+  ``*RTECEngine`` constructors are deprecated aliases that route through
+  it — calling one emits :class:`DeprecationWarning` and produces an
+  engine bitwise-equal to the factory path (pinned per backend by
+  tests/test_hotcache.py).
+* :class:`ChunkedRTECEngine` — facade for the §V-C chunked substrate
+  (:class:`~repro.core.backend.ChunkedBackend`), constructible as
   ``backend="chunked"`` and covered by the cross-backend matrix.
 
-The legacy engine classes remain as thin back-compat facades; this factory
-is the recommended entry point, and
 :func:`serving_frontend` / :meth:`ServingFrontend <repro.serve.frontend.ServingFrontend>`
-attaches the read/write serving layer to whatever it returns.
+attaches the read/write serving layer to whatever the factory returns.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.backend import (
     BatchStats,
     ChunkedBackend,
+    DeviceBackend,
+    OffloadBackend,
+    ShardBackend,
+    ShardedOffloadBackend,
     StreamOrchestrator,
     StreamStats,
 )
@@ -46,7 +54,9 @@ from repro.core.policy import DEFAULT_CHUNKED_WEIGHT, make_policy
 from repro.core.sharded_engine import ShardedRTECEngine
 from repro.graph.csr import CSRGraph
 from repro.graph.streaming import UpdateBatch
+from repro.serve.hotcache import CacheConfig, HotRowCache
 from repro.serve.offload import OffloadedRTECEngine, ShardedOffloadRTECEngine
+from repro.serve.staging import StagingConfig
 
 #: every backend name `create_engine` accepts
 BACKENDS: Tuple[str, ...] = (
@@ -61,7 +71,8 @@ class EngineConfig:
     Required: ``model``, ``graph``, ``x``, and either ``params`` or
     ``dims`` (+ ``seed``) to initialize them.  Backend-specific knobs are
     ignored by backends that do not consume them (e.g. ``num_shards`` by
-    ``backend="device"``), so one config can drive a backend sweep."""
+    ``backend="device"``, ``cache`` by everything that is not
+    host-resident), so one config can drive a backend sweep."""
 
     model: GNNModel
     graph: CSRGraph
@@ -76,8 +87,13 @@ class EngineConfig:
     store_h: bool = True
     fused: bool = True
     use_pallas_delta: bool = False
-    # host-resident backends
+    # host-resident backends: staging pipeline + device hot-row cache.
+    # `staging=None` resolves to StagingConfig(async_enabled=async_staging)
+    # (the legacy flag keeps working); an explicit StagingConfig wins.
+    # `cache=None` (or CacheConfig(enabled=False)) runs uncached.
     async_staging: bool = True
+    staging: Optional[StagingConfig] = None
+    cache: Optional[CacheConfig] = None
     # mesh backends
     mesh: Optional[object] = None
     num_shards: Optional[int] = None
@@ -94,10 +110,26 @@ class EngineConfig:
     # each engine its own decision state)
     policy: object = None
     policy_chunked_weight: float = DEFAULT_CHUNKED_WEIGHT
+    #: relative hysteresis band for policy mode switches (ISSUE 8): stay
+    #: on the previous mode unless the best mode beats it by this margin
+    policy_hysteresis: float = 0.0
 
     def resolved_policy(self):
         return make_policy(self.policy,
-                           chunked_weight=self.policy_chunked_weight)
+                           chunked_weight=self.policy_chunked_weight,
+                           hysteresis=self.policy_hysteresis)
+
+    def resolved_staging(self) -> StagingConfig:
+        if self.staging is not None:
+            return self.staging
+        return StagingConfig(async_enabled=self.async_staging)
+
+    def resolved_cache(self) -> Optional[HotRowCache]:
+        """A fresh :class:`HotRowCache` per engine (slot state is engine
+        state), or None when caching is off."""
+        if self.cache is None or not self.cache.enabled:
+            return None
+        return HotRowCache(self.cache)
 
     def resolved_params(self) -> Sequence[Params]:
         if self.params is not None:
@@ -106,6 +138,23 @@ class EngineConfig:
             raise ValueError("EngineConfig needs params or dims")
         return self.model.init_layers(jax.random.PRNGKey(self.seed),
                                       list(self.dims))
+
+
+def _alias_deprecated(name: str) -> None:
+    """Every legacy ``*RTECEngine`` constructor funnels through here."""
+    warnings.warn(
+        f"{name}(...) is a deprecated alias; construct engines with "
+        f"repro.serve.create_engine(backend, EngineConfig(...)) instead",
+        DeprecationWarning, stacklevel=3)
+
+
+def _shell(cls, backend, orch):
+    """Assemble a facade around an already-built backend + orchestrator
+    without re-running the deprecated alias ``__init__``."""
+    eng = object.__new__(cls)
+    eng._backend = backend
+    eng._orch = orch
+    return eng
 
 
 class ChunkedRTECEngine:
@@ -121,12 +170,13 @@ class ChunkedRTECEngine:
                  graph: CSRGraph, x: np.ndarray, chunk_size: int = 8192,
                  chunk_reuse: bool = True, refresh_every: int = 0,
                  policy=None):
-        self._backend = ChunkedBackend(model, params, graph, x,
-                                       chunk_size=chunk_size,
-                                       chunk_reuse=chunk_reuse)
-        self._orch = StreamOrchestrator(self._backend, graph,
-                                        refresh_every=refresh_every,
-                                        policy=policy)
+        # deprecated alias (kept for back-compat): route through the factory
+        _alias_deprecated("ChunkedRTECEngine")
+        eng = create_engine("chunked", EngineConfig(
+            model=model, graph=graph, x=x, params=params,
+            chunk_size=chunk_size, chunk_reuse=chunk_reuse,
+            refresh_every=refresh_every, policy=policy))
+        self._backend, self._orch = eng._backend, eng._orch
 
     def apply_batch(self, batch: UpdateBatch, block: bool = True) -> BatchStats:
         return self._orch.apply_batch(batch, block=block)
@@ -204,45 +254,59 @@ class ChunkedRTECEngine:
 def create_engine(backend: str, config: EngineConfig):
     """Construct a streaming engine for ``backend`` from one config.
 
-    ``backend`` ∈ :data:`BACKENDS`.  Calls the same constructors as direct
-    instantiation, so the result is bitwise-equal to the legacy path."""
+    ``backend`` ∈ :data:`BACKENDS`.  This is the canonical (and only
+    documented) construction path: it builds the
+    :class:`~repro.core.backend.StateBackend` substrate — threading the
+    staging pipeline and device hot-row cache knobs through to the
+    host-resident ones — wraps it in a
+    :class:`~repro.core.backend.StreamOrchestrator`, and returns the
+    matching facade.  The legacy ``*RTECEngine`` constructors are
+    deprecated aliases of this function (bitwise-equal by construction)."""
     params = config.resolved_params()
     policy = config.resolved_policy()
+    staging = config.resolved_staging()
     if backend == "device":
-        return RTECEngine(
-            config.model, params, config.graph, config.x,
-            store_h=config.store_h, refresh_every=config.refresh_every,
-            fused=config.fused, use_pallas_delta=config.use_pallas_delta,
-            policy=policy,
-        )
-    if backend == "offload":
-        return OffloadedRTECEngine(
-            config.model, params, config.graph, config.x,
-            async_staging=config.async_staging, policy=policy,
-        )
-    if backend == "sharded":
-        return ShardedRTECEngine(
-            config.model, params, config.graph, config.x, mesh=config.mesh,
-            num_shards=config.num_shards, shcfg=config.shcfg,
-            refresh_every=config.refresh_every,
+        sb = DeviceBackend(
+            config.model, params, config.graph, jnp.asarray(config.x),
+            store_h=config.store_h, fused=config.fused,
             use_pallas_delta=config.use_pallas_delta,
-            policy=policy,
         )
-    if backend == "sharded_offload":
-        return ShardedOffloadRTECEngine(
+        cls = RTECEngine
+    elif backend == "offload":
+        sb = OffloadBackend(
+            config.model, params, config.graph, config.x,
+            async_staging=staging.async_enabled,
+            cache=config.resolved_cache(), staging_depth=staging.depth,
+        )
+        cls = OffloadedRTECEngine
+    elif backend == "sharded":
+        sb = ShardBackend(
             config.model, params, config.graph, config.x, mesh=config.mesh,
             num_shards=config.num_shards, shcfg=config.shcfg,
-            refresh_every=config.refresh_every,
-            async_staging=config.async_staging,
-            policy=policy,
+            use_pallas_delta=config.use_pallas_delta,
         )
-    if backend == "chunked":
-        return ChunkedRTECEngine(
+        cls = ShardedRTECEngine
+    elif backend == "sharded_offload":
+        sb = ShardedOffloadBackend(
+            config.model, params, config.graph, config.x, mesh=config.mesh,
+            num_shards=config.num_shards, shcfg=config.shcfg,
+            async_staging=staging.async_enabled,
+            cache=config.resolved_cache(), staging_depth=staging.depth,
+        )
+        cls = ShardedOffloadRTECEngine
+    elif backend == "chunked":
+        sb = ChunkedBackend(
             config.model, params, config.graph, config.x,
             chunk_size=config.chunk_size, chunk_reuse=config.chunk_reuse,
-            refresh_every=config.refresh_every, policy=policy,
         )
-    raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+        cls = ChunkedRTECEngine
+    else:
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    orch = StreamOrchestrator(sb, config.graph,
+                              refresh_every=config.refresh_every,
+                              policy=policy)
+    return _shell(cls, sb, orch)
 
 
 def serving_frontend(engine, max_pending_reads: int = 64,

@@ -1,0 +1,305 @@
+"""Degree-aware device-resident hot-row cache for the host-resident backends.
+
+The paper's §V co-processing argument is that communication-optimized
+scheduling — not just overlap — keeps the device busy when the embedding
+tables live in host memory, and ``table5_degree.py`` measures exactly the
+degree skew that makes a small hot set absorb most row traffic.  This
+module pins that hot set on the device so the
+:class:`~repro.serve.staging.HostStagingPipeline` gathers only cold
+misses per layer:
+
+::
+
+    plan (host, value-independent)           dispatch (device)
+    ─────────────────────────────            ────────────────────────────
+    need_h ──┬── [cached] ── slot ids ─────▶ store[slots] ──┐ scatter
+             └── [miss]   ── gather rows ──▶ H2D (staged) ──┤   ▼
+                                                       workspace [nh, d]
+    srows  ──┬── [cached] ── slot ids ─────▶ store[slots] ──┐ scatter
+             └── [miss]   ── gather rows ──▶ H2D (staged) ──┤   ▼
+                                                       a/nct/h_cur [ns, ·]
+                                             kernel outs ──▶ store.at[wb
+                                             (in-place slot update; host
+                                              write-back unchanged)
+
+    admission  = frequency × (1 + degree), from the plan's degree tables
+    eviction   = deterministic lowest-priority victim (ties: smallest row)
+    invalidate = value-independent, driven by the plan's write sets
+                 (feature updates, policy chunked scatters, full refresh)
+
+Coherence invariant (what the tests pin): *a cached slot always holds
+exactly the host-state value of its row as of the last completed batch.*
+It is maintained without ever reading state values at plan time:
+
+* The split of each layer's needed rows into ``[cached | miss]`` is
+  computed at **plan time** (:func:`repro.core.affected.split_residency`,
+  next to the ``[halo | local]`` remap) from slot metadata only, so it
+  keeps the §V overlap contract — plan(t+1) may run while batch t still
+  executes, because all metadata mutation happens in ``plan`` and all
+  device data movement in ``dispatch``, and the orchestrator serializes
+  plan(t+1) after dispatch(t).
+* Rows written *earlier in the same batch* (the previous layer's write
+  set / the batch's feature vertices) are excluded from hits and from
+  staged-value admission: their pre-batch staged value would go stale
+  within the batch.  Their cached slots are instead updated **in place on
+  device from the kernel outputs** at write-back — hot rows therefore
+  skip the per-batch D2H→host→H2D re-staging round-trip entirely (the
+  host write-back itself is unchanged: host state stays authoritative
+  for snapshot reads, the serving undo log, and the hybrid's halo
+  exchange).
+* Writes that do not flow through the incremental write-back (feature
+  scatters, the policy's chunked ``scatter_layer_rows``, full refresh)
+  **invalidate** instead — value-independent, driven by the same row
+  sets ``changed_rows`` reports, so the serving front-end's snapshot/undo
+  contract and the staging worker's pristine-gather contract both hold
+  with the cache enabled.
+
+Row spaces: one per (kind, layer) — ``("h", l)`` caches rows of
+``h[l]`` (the layer-``l`` gather view), ``("s", l)`` caches the
+``(a[l], nct[l], h[l+1])`` row triple (the layer-``l`` state view).
+Keys are **global row ids** for both host-resident substrates; under the
+sharded hybrid a hot halo row is therefore cached once and served to
+every shard that needs it (the store is one un-sharded device array — a
+per-shard slab split is future work, noted in ROADMAP).
+
+Everything here is deterministic: admission order, eviction victims and
+the hit/miss/eviction counters (surfaced as
+``StreamStats.cache_hit_rows`` / ``cache_miss_rows`` /
+``cache_evictions``) depend only on the update stream, so CI gates them
+exactly (``benchmarks/check_regression.py --suite smoke|sharded``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.affected import ResidencySplit, split_residency
+
+#: admission priority models ``CacheConfig.admission`` accepts
+ADMISSION_POLICIES = ("freq_degree", "freq")
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Typed knobs for the device hot-row cache (nested in
+    :class:`repro.serve.api.EngineConfig` as ``cache=``).
+
+    ``capacity_rows`` is the slot count *per row space* (2 spaces per
+    layer); ``admission`` picks the priority model (``"freq_degree"`` —
+    touch frequency × (1 + plan degree), the paper-motivated default — or
+    ``"freq"`` — pure touch frequency); ``enabled=False`` keeps the
+    config inert (identical to passing no cache at all)."""
+
+    capacity_rows: int = 256
+    admission: str = "freq_degree"
+    enabled: bool = True
+
+    def __post_init__(self) -> None:
+        if self.capacity_rows <= 0:
+            raise ValueError(f"capacity_rows must be positive, got "
+                             f"{self.capacity_rows}")
+        if self.admission not in ADMISSION_POLICIES:
+            raise ValueError(f"unknown admission policy {self.admission!r}; "
+                             f"expected one of {ADMISSION_POLICIES}")
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Deterministic cache counters (documented subset surfaced through
+    ``StreamStats.as_dict``; see the table there)."""
+
+    hit_rows: int = 0  #: rows served from device slots instead of staging
+    miss_rows: int = 0  #: rows staged from host (cold or excluded)
+    evictions: int = 0  #: capacity evictions (invalidations counted apart)
+    admitted_rows: int = 0
+    invalidated_rows: int = 0
+
+    def snapshot(self) -> "CacheStats":
+        return dataclasses.replace(self)
+
+
+class _Space:
+    """Slot metadata for one cached row space (host-side, value-free)."""
+
+    __slots__ = ("slot_of", "row_of", "freq", "degw", "free", "stores")
+
+    def __init__(self, n_keys: int, capacity: int) -> None:
+        self.slot_of = np.full(n_keys, -1, np.int32)
+        self.row_of = np.full(capacity, -1, np.int64)
+        self.freq = np.zeros(n_keys, np.int64)
+        self.degw = np.zeros(n_keys, np.float32)
+        # grow-only slot table: pop() always yields the smallest free slot
+        self.free = list(range(capacity - 1, -1, -1))
+        self.stores: Dict[str, object] = {}  # name -> jax.Array [cap, ·]
+
+
+class HotRowCache:
+    """Pinned device hot-row cache: host-side slot metadata (this class)
+    plus grow-only per-space device stores the owning backend scatters
+    into.  All admission/eviction/split decisions happen at plan time and
+    are value-independent; the backend performs the corresponding device
+    data movement at dispatch in the same order (see the module
+    docstring's coherence invariant)."""
+
+    def __init__(self, config: Optional[CacheConfig] = None) -> None:
+        self.config = config or CacheConfig()
+        self.capacity = int(self.config.capacity_rows)
+        self.stats = CacheStats()
+        self._spaces: Dict[Tuple[str, int], _Space] = {}
+
+    # ------------------------------------------------------------------ #
+    # metadata (plan time, host only)
+    # ------------------------------------------------------------------ #
+    def _space(self, key: Tuple[str, int], n_keys: int) -> _Space:
+        sp = self._spaces.get(key)
+        if sp is None:
+            sp = self._spaces[key] = _Space(n_keys, self.capacity)
+        return sp
+
+    def _priority(self, sp: _Space, rows: np.ndarray) -> np.ndarray:
+        if self.config.admission == "freq":
+            return sp.freq[rows].astype(np.float64)
+        return sp.freq[rows] * (1.0 + sp.degw[rows].astype(np.float64))
+
+    def _touch(self, sp: _Space, rows: np.ndarray, deg: np.ndarray) -> None:
+        np.add.at(sp.freq, rows, 1)
+        sp.degw[rows] = np.asarray(deg, np.float32)
+
+    def _admit(self, sp: _Space, cand_rows: np.ndarray) -> np.ndarray:
+        """Deterministically admit candidate rows (unique, uncached).
+
+        Free slots fill first (highest priority first, ties to the
+        smallest row); once full, a candidate evicts the lowest-priority
+        cached victim only if strictly hotter (victim ties break to the
+        smallest row).  Returns the admitted rows (slot assignment is in
+        ``slot_of``)."""
+        if not cand_rows.size:
+            return cand_rows
+        prio = self._priority(sp, cand_rows)
+        order = np.lexsort((cand_rows, -prio))
+        admitted = []
+        for i in order:
+            row = int(cand_rows[i])
+            if sp.free:
+                slot = sp.free.pop()
+            else:
+                occ = sp.row_of  # all slots occupied once free is empty
+                vprio = self._priority(sp, occ)
+                v = int(np.lexsort((occ, vprio))[0])
+                if not prio[i] > vprio[v]:
+                    # candidates are sorted by descending priority and the
+                    # victim pool only gets hotter on eviction, so no later
+                    # candidate can succeed either
+                    break
+                slot = v
+                sp.slot_of[occ[v]] = -1
+                self.stats.evictions += 1
+            sp.slot_of[row] = slot
+            sp.row_of[slot] = row
+            admitted.append(row)
+            self.stats.admitted_rows += 1
+        return np.asarray(admitted, np.int64)
+
+    def plan_reads(self, key: Tuple[str, int], n_keys: int, rows: np.ndarray,
+                   deg: np.ndarray, exclude_rows: Optional[np.ndarray] = None,
+                   admit: bool = True) -> ResidencySplit:
+        """Plan-time ``[cached | miss]`` split of one layer's needed rows.
+
+        Bumps the touch frequency, splits against the slot table
+        (excluding rows written earlier in this batch — see module
+        docstring), and optionally admits the hottest *non-excluded*
+        misses so dispatch can fill their slots from the staged (pristine,
+        pre-batch) values.  Returns the split with admission indices into
+        its miss list."""
+        sp = self._space(key, n_keys)
+        self._touch(sp, rows, deg)
+        split = split_residency(rows, sp.slot_of, exclude_rows=exclude_rows)
+        self.stats.hit_rows += int(split.hit_pos.size)
+        self.stats.miss_rows += int(split.miss_pos.size)
+        if admit and split.miss_rows.size:
+            cand, first = np.unique(split.miss_rows, return_index=True)
+            if exclude_rows is not None and exclude_rows.size:
+                keep = ~np.isin(cand, exclude_rows)
+                cand, first = cand[keep], first[keep]
+            got = self._admit(sp, cand)
+            if got.size:
+                sel = np.isin(cand, got)
+                midx = np.sort(first[sel]).astype(np.int64)
+                split = dataclasses.replace(
+                    split,
+                    admit_midx=midx,
+                    admit_slots=sp.slot_of[split.miss_rows[midx]].astype(
+                        np.int32),
+                )
+        return split
+
+    def plan_writeback(self, key: Tuple[str, int], n_keys: int,
+                       rows: np.ndarray, deg: np.ndarray,
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """Plan the in-place device slot updates for one layer's written
+        rows: already-cached rows refresh their slots from the kernel
+        outputs, and the hottest uncached written rows are admitted (their
+        fresh values are free — they are already on device).  Returns
+        ``(positions into rows, slots)``."""
+        sp = self._space(key, n_keys)
+        self._touch(sp, rows, deg)
+        uncached = rows[sp.slot_of[rows] < 0]
+        if uncached.size:
+            self._admit(sp, np.unique(uncached))
+        pos = np.flatnonzero(sp.slot_of[rows] >= 0).astype(np.int64)
+        return pos, sp.slot_of[rows[pos]].astype(np.int32)
+
+    def invalidate(self, key: Tuple[str, int], rows: np.ndarray) -> None:
+        """Value-independent invalidation of cached rows (feature scatters
+        and the policy's chunked host scatters route here)."""
+        sp = self._spaces.get(key)
+        if sp is None or not np.asarray(rows).size:
+            return
+        rows = np.asarray(rows, np.int64)
+        slots = sp.slot_of[rows]
+        slots = np.unique(slots[slots >= 0])
+        if not slots.size:
+            return
+        sp.row_of[slots] = -1
+        sp.slot_of[rows] = -1
+        # keep pop() = smallest-free deterministic after arbitrary frees
+        sp.free = sorted(set(sp.free) | set(int(s) for s in slots),
+                         reverse=True)
+        self.stats.invalidated_rows += int(slots.size)
+
+    def invalidate_all(self) -> None:
+        """Full invalidation (refresh / policy-forced full recompute: the
+        whole state is rewritten host-side)."""
+        n = sum(int((sp.row_of >= 0).sum()) for sp in self._spaces.values())
+        self.stats.invalidated_rows += n
+        self._spaces.clear()
+
+    # ------------------------------------------------------------------ #
+    # device stores (dispatch time)
+    # ------------------------------------------------------------------ #
+    def store(self, key: Tuple[str, int], name: str, trailing: Tuple[int, ...]):
+        """The device slot store for (space, tensor) — lazily allocated
+        ``[capacity, ·]`` zeros on first use (grow-only: capacity is
+        fixed, rows recycle through the deterministic eviction order)."""
+        import jax.numpy as jnp
+
+        sp = self._spaces[key]
+        st = sp.stores.get(name)
+        if st is None:
+            st = sp.stores[name] = jnp.zeros(
+                (self.capacity,) + tuple(trailing), jnp.float32)
+        return st
+
+    def update_store(self, key: Tuple[str, int], name: str,
+                     slots: np.ndarray, values) -> None:
+        """Scatter fresh row values into their slots (device-side, eager —
+        the in-place write-back update of the module docstring)."""
+        st = self.store(key, name, values.shape[1:])
+        self._spaces[key].stores[name] = st.at[np.asarray(slots)].set(values)
+
+    def state_bytes(self) -> int:
+        """Device bytes pinned by all slot stores (telemetry)."""
+        return sum(int(st.nbytes) for sp in self._spaces.values()
+                   for st in sp.stores.values())

@@ -40,9 +40,6 @@ import numpy as np
 
 from repro.core.backend import (  # noqa: F401  (TransferStats re-export)
     BatchStats,
-    OffloadBackend,
-    ShardedOffloadBackend,
-    StreamOrchestrator,
     StreamStats,
     TransferStats,
 )
@@ -136,13 +133,22 @@ class _OffloadFacadeMixin:
 
 
 class OffloadedRTECEngine(_OffloadFacadeMixin):
-    """Incremental RTEC with host-resident state (CPU-offload engine)."""
+    """Incremental RTEC with host-resident state (CPU-offload engine).
+    Constructing it directly is a **deprecated alias** of
+    ``create_engine("offload", EngineConfig(...))`` (:mod:`repro.serve.api`),
+    which is the one documented entry point (and the only surface exposing
+    the staging/cache sub-configs)."""
 
     def __init__(self, model: GNNModel, params: Sequence[Params], graph: CSRGraph,
                  x: np.ndarray, async_staging: bool = True, policy=None):
-        self._backend = OffloadBackend(model, params, graph, x,
-                                       async_staging=async_staging)
-        self._orch = StreamOrchestrator(self._backend, graph, policy=policy)
+        # deferred import: repro.serve.api imports this module at load time
+        from repro.serve.api import EngineConfig, _alias_deprecated, create_engine
+
+        _alias_deprecated("OffloadedRTECEngine")
+        eng = create_engine("offload", EngineConfig(
+            model=model, graph=graph, x=x, params=params,
+            async_staging=async_staging, policy=policy))
+        self._backend, self._orch = eng._backend, eng._orch
 
     @property
     def x(self) -> np.ndarray:
@@ -174,13 +180,15 @@ class ShardedOffloadRTECEngine(_OffloadFacadeMixin):
                  x: np.ndarray, mesh=None, num_shards: Optional[int] = None,
                  shcfg=None, refresh_every: int = 0, async_staging: bool = True,
                  policy=None):
-        self._backend = ShardedOffloadBackend(
-            model, params, graph, x, mesh=mesh, num_shards=num_shards,
-            shcfg=shcfg, async_staging=async_staging,
-        )
-        self._orch = StreamOrchestrator(self._backend, graph,
-                                        refresh_every=refresh_every,
-                                        policy=policy)
+        # deferred import: repro.serve.api imports this module at load time
+        from repro.serve.api import EngineConfig, _alias_deprecated, create_engine
+
+        _alias_deprecated("ShardedOffloadRTECEngine")
+        eng = create_engine("sharded_offload", EngineConfig(
+            model=model, graph=graph, x=x, params=params, mesh=mesh,
+            num_shards=num_shards, shcfg=shcfg, refresh_every=refresh_every,
+            async_staging=async_staging, policy=policy))
+        self._backend, self._orch = eng._backend, eng._orch
 
     @property
     def S(self) -> int:

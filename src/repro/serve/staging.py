@@ -61,6 +61,14 @@ the CI overlap gate (`benchmarks/check_regression.py`); the timing
 counters (``wait_gather_s``/``wait_device_s``/``work_*``) are telemetry
 for `StreamStats.sync_wait_s` vs `compute_s` and are never gated.
 
+Hot-row cache coexistence (ISSUE 8): with the device hot-row cache
+(:mod:`repro.serve.hotcache`) enabled, the backends submit **miss-only
+gather jobs** — the same pristine-gather contract over the plan's cold
+miss row lists instead of the full per-layer row sets.  Nothing here
+changes: the staged payload (and therefore ``staged_bytes``) simply
+shrinks by the cached fraction, which is exactly the reduction the CI
+cache gate measures.
+
 Serving coexistence (ISSUE 6): the pipeline's pristine-gather contract —
 worker jobs read host state in submission order, so a layer's staged view
 is exactly the pre-batch state — also protects snapshot reads.  The
@@ -79,6 +87,25 @@ import weakref
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class StagingConfig:
+    """Typed knobs for the host staging pipeline (nested in
+    :class:`repro.serve.api.EngineConfig` as ``staging=``).
+
+    ``async_enabled`` selects the background worker (False = the inline
+    bitwise-identical escape hatch); ``depth`` bounds the in-flight job
+    queue (2 = the double-buffered one-ahead prefetch the module
+    docstring's schedule needs; larger values deepen the prefetch window
+    at the cost of host staging memory)."""
+
+    async_enabled: bool = True
+    depth: int = 2
+
+    def __post_init__(self) -> None:
+        if self.depth < 1:
+            raise ValueError(f"staging depth must be >= 1, got {self.depth}")
 
 
 @dataclasses.dataclass

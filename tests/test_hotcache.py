@@ -1,0 +1,385 @@
+"""Device hot-row cache (ISSUE 8) + the redesigned single engine API.
+
+Covers the tentpole and its API front: deterministic admission/eviction
+slot mechanics, the plan-time [cached | miss] residency split, bitwise
+cached≡uncached equivalence on both host-resident backends × async flag
+× gcn/gat over 20-batch streams, the exact hub_burst counters the CI
+gates pin (shared table: benchmarks.check_regression.CACHE_EXPECTED),
+value-independent invalidation across policy-forced full recompute,
+versioned snapshot reads with the cache enabled, the documented
+StreamStats key namespace, and factory-vs-deprecated-alias parity for
+every backend.
+"""
+from __future__ import annotations
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import make_model
+from repro.core.affected import split_residency
+from repro.core.backend import STREAM_STAT_KEYS, StreamStats
+from repro.graph import make_adversarial_stream, make_graph, make_stream
+from repro.graph.generators import random_features
+from repro.serve import (
+    BACKENDS,
+    CacheConfig,
+    EngineConfig,
+    HotRowCache,
+    ServingFrontend,
+    StagingConfig,
+    create_engine,
+)
+
+
+def _mk_stream(n=120, num_batches=20, seed=0, feature_dim=8, batch_edges=8):
+    g = make_graph("powerlaw", n, avg_degree=5, seed=seed, weighted=True)
+    x, _ = random_features(n, 8, seed=seed)
+    wl = make_stream(g, num_batches=num_batches, batch_edges=batch_edges,
+                     delete_frac=0.35, seed=seed + 1,
+                     feature_dim=feature_dim, feature_frac=0.02)
+    return x, wl
+
+
+def _cfg(model, wl, x, params, **kw) -> EngineConfig:
+    return EngineConfig(model=model, graph=wl.base, x=x, params=params, **kw)
+
+
+# ---------------------------------------------------------------------- #
+# CacheConfig + slot-table mechanics (unit)
+# ---------------------------------------------------------------------- #
+def test_cache_config_validation():
+    with pytest.raises(ValueError, match="capacity_rows"):
+        CacheConfig(capacity_rows=0)
+    with pytest.raises(ValueError, match="admission"):
+        CacheConfig(admission="lru")
+    assert CacheConfig().enabled is True
+
+
+def test_split_residency_exclusion():
+    slot_of = np.full(10, -1, np.int32)
+    slot_of[[2, 5, 7]] = [0, 1, 2]
+    rows = np.array([2, 3, 5, 7, 9], np.int64)
+    sp = split_residency(rows, slot_of)
+    np.testing.assert_array_equal(sp.hit_pos, [0, 2, 3])
+    np.testing.assert_array_equal(sp.hit_slots, [0, 1, 2])
+    np.testing.assert_array_equal(sp.miss_pos, [1, 4])
+    np.testing.assert_array_equal(sp.miss_rows, [3, 9])
+    # excluded rows miss even when cached (their slots are stale mid-batch)
+    sp = split_residency(rows, slot_of, exclude_rows=np.array([5], np.int64))
+    np.testing.assert_array_equal(sp.hit_pos, [0, 3])
+    np.testing.assert_array_equal(sp.miss_rows, [3, 5, 9])
+
+
+def test_admission_fills_hottest_first_then_evicts_strictly_hotter():
+    cache = HotRowCache(CacheConfig(capacity_rows=2))
+    key, n = ("h", 0), 10
+    deg = np.zeros(3)
+    # freq becomes 1 for rows {1,2,3}; all miss, 2 slots → the two
+    # smallest rows win the tie (equal priority, ties to smallest row)
+    sp = cache.plan_reads(key, n, np.array([1, 2, 3]), deg)
+    assert sp.hit_pos.size == 0 and sp.miss_pos.size == 3
+    np.testing.assert_array_equal(sp.admit_midx, [0, 1])
+    assert cache.stats.admitted_rows == 2 and cache.stats.evictions == 0
+    # a second touch makes row 3 strictly hotter (freq 2 > 1): it must
+    # evict the coldest incumbent (row 1, smallest-row victim tie-break)
+    sp = cache.plan_reads(key, n, np.array([3]), np.zeros(1))
+    assert cache.stats.evictions == 1
+    assert sp.admit_midx.size == 1  # 3 admitted on this read
+    # rows 2,3 cached now; 1 misses
+    sp = cache.plan_reads(key, n, np.array([1, 2, 3]), deg, admit=False)
+    np.testing.assert_array_equal(sp.miss_rows, [1])
+    np.testing.assert_array_equal(sp.hit_pos, [1, 2])
+
+
+def test_degree_weighted_admission_prefers_hubs():
+    cache = HotRowCache(CacheConfig(capacity_rows=1, admission="freq_degree"))
+    key, n = ("h", 0), 10
+    # equal frequency, row 7 has 50x the plan degree → it wins the slot
+    sp = cache.plan_reads(key, n, np.array([2, 7]), np.array([1.0, 50.0]))
+    np.testing.assert_array_equal(sp.admit_midx, [1])
+    sp = cache.plan_reads(key, n, np.array([2, 7]), np.array([1.0, 50.0]),
+                          admit=False)
+    np.testing.assert_array_equal(sp.hit_pos, [1])
+    # pure-freq admission ignores degree: first-touch tie goes to row 2
+    cache = HotRowCache(CacheConfig(capacity_rows=1, admission="freq"))
+    sp = cache.plan_reads(key, n, np.array([2, 7]), np.array([1.0, 50.0]))
+    np.testing.assert_array_equal(sp.admit_midx, [0])
+
+
+def test_invalidate_frees_slots_and_keeps_free_list_deterministic():
+    cache = HotRowCache(CacheConfig(capacity_rows=4))
+    key, n = ("s", 1), 16
+    cache.plan_reads(key, n, np.arange(4), np.zeros(4))
+    assert cache.stats.admitted_rows == 4
+    cache.invalidate(key, np.array([1, 3]))
+    assert cache.stats.invalidated_rows == 2
+    sp = cache.plan_reads(key, n, np.arange(4), np.zeros(4), admit=False)
+    np.testing.assert_array_equal(sp.miss_rows, [1, 3])
+    # freed slots readmit smallest-slot-first (grow-only determinism)
+    sp = cache.plan_reads(key, n, np.array([8, 9]), np.zeros(2))
+    np.testing.assert_array_equal(np.sort(sp.admit_slots), [1, 3])
+    cache.invalidate_all()
+    assert cache._spaces == {}
+    assert cache.stats.invalidated_rows == 6  # 2 targeted + 4 occupied
+
+
+def test_writeback_admits_uncached_written_rows():
+    cache = HotRowCache(CacheConfig(capacity_rows=8))
+    key, n = ("h", 1), 32
+    pos, slots = cache.plan_writeback(key, n, np.array([4, 9]), np.zeros(2))
+    np.testing.assert_array_equal(pos, [0, 1])  # both admitted (free slots)
+    sp = cache.plan_reads(key, n, np.array([4, 9]), np.zeros(2), admit=False)
+    assert sp.miss_pos.size == 0
+    np.testing.assert_array_equal(np.sort(sp.hit_slots), np.sort(slots))
+
+
+# ---------------------------------------------------------------------- #
+# cached ≡ uncached, bitwise: backends × async flag × gcn/gat, 20 batches
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("kind", ["offload", "sharded_offload"])
+@pytest.mark.parametrize("name", ["gcn", "gat"])  # unconstrained + constrained
+@pytest.mark.parametrize("async_staging", [False, True])
+def test_cached_bitwise_equals_uncached_20_batches(kind, name, async_staging):
+    """The cache must be invisible to the math: identical kernels run over
+    cache-assembled workspaces, so embeddings AND per-layer host state
+    match bitwise, while the staged-byte volume strictly shrinks."""
+    x, wl = _mk_stream(n=120, num_batches=20, seed=5)
+    model = make_model(name)
+    params = model.init_layers(jax.random.PRNGKey(0), [8, 8])
+    shards = {"num_shards": jax.device_count()} if kind != "offload" else {}
+    runs = {}
+    for cached in (False, True):
+        eng = create_engine(kind, _cfg(
+            model, wl, x, params,
+            staging=StagingConfig(async_enabled=async_staging),
+            cache=CacheConfig(capacity_rows=64) if cached else None,
+            **shards))
+        ss = eng.apply_stream(wl.batches)
+        runs[cached] = (eng, ss.as_dict())
+    base, d0 = runs[False]
+    hot, d1 = runs[True]
+    np.testing.assert_array_equal(np.asarray(base.embeddings),
+                                  np.asarray(hot.embeddings))
+    for hu, hc in zip(base.h, hot.h):
+        np.testing.assert_array_equal(np.asarray(hu), np.asarray(hc))
+    assert d0["cache_hit_rows"] == 0 and d0["cache_miss_rows"] == 0
+    assert d1["cache_hit_rows"] > 0
+    assert d1["staged_bytes"] < d0["staged_bytes"]
+    snap = hot._backend.cache_snapshot()
+    assert snap.hit_rows == d1["cache_hit_rows"]
+    assert snap.evictions == d1["cache_evictions"]
+
+
+def test_cache_counters_deterministic_across_async_modes():
+    """Residency is planned host-side from the batch plans only, so the
+    counters cannot depend on staging concurrency."""
+    x, wl = _mk_stream(n=120, num_batches=12, seed=5)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(0), [8, 8])
+    counts = []
+    for async_staging in (False, True):
+        eng = create_engine("offload", _cfg(
+            model, wl, x, params,
+            staging=StagingConfig(async_enabled=async_staging),
+            cache=CacheConfig(capacity_rows=64)))
+        d = eng.apply_stream(wl.batches).as_dict()
+        counts.append((d["cache_hit_rows"], d["cache_miss_rows"],
+                       d["cache_evictions"], d["staged_bytes"]))
+    assert counts[0] == counts[1]
+    assert counts[0][2] > 0  # capacity 64 on this stream must evict
+
+
+# ---------------------------------------------------------------------- #
+# the exact hub_burst counters the CI gates pin
+# ---------------------------------------------------------------------- #
+def test_hub_burst_counters_match_ci_expectations():
+    """The smoke-cell residency counts are THE blocking CI contract
+    (check_regression.CACHE_EXPECTED['smoke']): pin them here too so a
+    cache/planner change fails tier-1 before it fails the bench gate."""
+    from benchmarks.check_regression import CACHE_EXPECTED
+
+    wl = make_adversarial_stream("hub_burst", num_batches=6)
+    x, _ = random_features(wl.base.n, 8, seed=0)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(0), [8, 8])
+    eng = create_engine("offload", _cfg(
+        model, wl, x, params, cache=CacheConfig(capacity_rows=256)))
+    d = eng.apply_stream(wl.batches).as_dict()
+    exp = CACHE_EXPECTED["smoke"]
+    assert d["cache_hit_rows"] == exp["hit_rows"]
+    assert d["cache_miss_rows"] == exp["miss_rows"]
+    assert d["cache_evictions"] == exp["evictions"]
+
+    hyb = create_engine("sharded_offload", _cfg(
+        model, wl, x, params, num_shards=jax.device_count(),
+        cache=CacheConfig(capacity_rows=256)))
+    dh = hyb.apply_stream(wl.batches).as_dict()
+    if jax.device_count() == 8:
+        # the sharded expectations are pinned for the CI 8-way mesh
+        exp = CACHE_EXPECTED["sharded"]
+        assert dh["cache_hit_rows"] == exp["hit_rows"]
+        assert dh["cache_miss_rows"] == exp["miss_rows"]
+        assert dh["cache_evictions"] == exp["evictions"]
+    else:
+        assert dh["cache_hit_rows"] > 0
+
+
+# ---------------------------------------------------------------------- #
+# invalidation coherence: feature scatters, policy full recompute, refresh
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("kind", ["offload", "sharded_offload"])
+def test_cache_coherent_across_policy_full_recompute(kind):
+    """hub_burst's adaptive schedule interleaves full-recompute batches
+    (which rewrite the whole host state → invalidate_all) with
+    incremental ones: cached vs uncached must stay bitwise through the
+    mode changes, and the invalidation counter must show the flushes."""
+    wl = make_adversarial_stream("hub_burst", num_batches=6)
+    x, _ = random_features(wl.base.n, 8, seed=0)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(0), [8, 8])
+    shards = ({"num_shards": jax.device_count()}
+              if kind != "offload" else {})
+    runs = {}
+    for cached in (False, True):
+        eng = create_engine(kind, _cfg(
+            model, wl, x, params, policy="adaptive",
+            cache=CacheConfig(capacity_rows=256) if cached else None,
+            **shards))
+        ss = eng.apply_stream(wl.batches)
+        runs[cached] = (eng, ss.as_dict())
+    base, d0 = runs[False]
+    hot, d1 = runs[True]
+    assert d1["policy_full_batches"] > 0  # the regime guarantees it
+    assert d1["policy_full_batches"] == d0["policy_full_batches"]
+    np.testing.assert_array_equal(np.asarray(base.embeddings),
+                                  np.asarray(hot.embeddings))
+    assert hot._backend.cache_snapshot().invalidated_rows > 0
+
+
+def test_refresh_invalidates_cache_and_stays_bitwise():
+    x, wl = _mk_stream(n=120, num_batches=10, seed=5)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(0), [8, 8])
+    runs = {}
+    for cached in (False, True):
+        eng = create_engine("offload", _cfg(
+            model, wl, x, params, refresh_every=4,
+            cache=CacheConfig(capacity_rows=64) if cached else None))
+        for b in wl.batches:
+            eng.apply_batch(b)
+        runs[cached] = eng
+    np.testing.assert_array_equal(np.asarray(runs[False].embeddings),
+                                  np.asarray(runs[True].embeddings))
+    # two refreshes over 10 batches flushed every occupied slot
+    assert runs[True]._backend.cache_snapshot().invalidated_rows > 0
+
+
+# ---------------------------------------------------------------------- #
+# versioned snapshot reads with the cache enabled
+# ---------------------------------------------------------------------- #
+def test_snapshot_reads_at_retained_versions_with_cache():
+    """The cache only short-circuits H2D staging; the host state and the
+    frontend's undo log stay authoritative, so reads pinned at retained
+    versions are bitwise identical with and without the cache."""
+    x, wl = _mk_stream(n=120, num_batches=8, seed=5)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(0), [8, 8])
+    rows = np.arange(0, wl.base.n, 7)
+    reads = {}
+    for cached in (False, True):
+        eng = create_engine("offload", _cfg(
+            model, wl, x, params,
+            cache=CacheConfig(capacity_rows=64) if cached else None))
+        fe = ServingFrontend(eng, max_versions=len(wl.batches) + 1)
+        for b in wl.batches:
+            fe.apply_batch(b)
+        reads[cached] = [np.array(fe.read(rows, version=v))
+                         for v in range(fe.version + 1)]
+    for ru, rc in zip(reads[False], reads[True]):
+        np.testing.assert_array_equal(ru, rc)
+
+
+# ---------------------------------------------------------------------- #
+# StreamStats key namespace (documented, CI-consumed)
+# ---------------------------------------------------------------------- #
+def test_stream_stats_keys_are_pinned_and_documented():
+    """`as_dict` is the single result surface benchmarks and
+    check_regression consume: its key set is pinned by STREAM_STAT_KEYS
+    and every key must appear in the as_dict docstring table."""
+    d = StreamStats([], 0.0, 0.0).as_dict()
+    assert tuple(d.keys()) == STREAM_STAT_KEYS
+    for key in ("cache_hit_rows", "cache_miss_rows", "cache_evictions"):
+        assert key in STREAM_STAT_KEYS
+    doc = StreamStats.as_dict.__doc__
+    for key in STREAM_STAT_KEYS:
+        assert key in doc, f"undocumented StreamStats key {key!r}"
+
+
+# ---------------------------------------------------------------------- #
+# the single public API: factory ≡ deprecated alias, per backend
+# ---------------------------------------------------------------------- #
+def _alias_ctor(backend):
+    from repro.core.engine import RTECEngine
+    from repro.core.sharded_engine import ShardedRTECEngine
+    from repro.serve.api import ChunkedRTECEngine
+    from repro.serve.offload import (
+        OffloadedRTECEngine,
+        ShardedOffloadRTECEngine,
+    )
+
+    return {"device": RTECEngine, "offload": OffloadedRTECEngine,
+            "sharded": ShardedRTECEngine,
+            "sharded_offload": ShardedOffloadRTECEngine,
+            "chunked": ChunkedRTECEngine}[backend]
+
+
+@pytest.mark.parametrize("backend", sorted(BACKENDS))
+def test_factory_matches_deprecated_alias_bitwise(backend):
+    """Every legacy ``*RTECEngine`` constructor is a deprecated alias of
+    ``create_engine``: it must emit DeprecationWarning and produce an
+    engine whose stream output is bitwise equal to the factory's."""
+    x, wl = _mk_stream(n=120, num_batches=6, seed=5)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(0), [8, 8])
+    eng_f = create_engine(backend, _cfg(model, wl, x, params))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        eng_a = _alias_ctor(backend)(model, params, wl.base, x)
+    assert any(issubclass(w.category, DeprecationWarning) and
+               "create_engine" in str(w.message) for w in caught), backend
+    eng_f.apply_stream(wl.batches)
+    eng_a.apply_stream(wl.batches)
+    np.testing.assert_array_equal(np.asarray(eng_f.embeddings),
+                                  np.asarray(eng_a.embeddings))
+
+
+def test_factory_is_warning_free():
+    x, wl = _mk_stream(n=120, num_batches=1, seed=5)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(0), [8, 8])
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        create_engine("offload", _cfg(model, wl, x, params))
+
+
+def test_engine_config_cache_resolution():
+    x, wl = _mk_stream(n=120, num_batches=1, seed=5)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(0), [8, 8])
+    # disabled or absent config → no cache on the backend
+    for cache in (None, CacheConfig(enabled=False)):
+        eng = create_engine("offload", _cfg(model, wl, x, params, cache=cache))
+        assert eng._backend._cache is None
+        assert eng._backend.cache_snapshot() is None
+    # each engine owns a fresh HotRowCache (slot state is engine state)
+    cfg = _cfg(model, wl, x, params, cache=CacheConfig(capacity_rows=32))
+    a = create_engine("offload", cfg)
+    b = create_engine("offload", cfg)
+    assert a._backend._cache is not b._backend._cache
+    assert a._backend._cache.capacity == 32
+    # the cache knob is ignored by backends without host staging
+    dev = create_engine("device", cfg)
+    assert not hasattr(dev._backend, "_cache") or dev._backend._cache is None

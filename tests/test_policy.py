@@ -306,6 +306,88 @@ def test_frontend_bitwise_reads_across_chunked_batches():
 
 
 # ---------------------------------------------------------------------- #
+# hysteresis band (ISSUE 8): damp mode flapping, follow genuine shifts
+# ---------------------------------------------------------------------- #
+def _adaptive_modes(regime: str, hysteresis: float):
+    model, wl, x, params = _setup(regime)
+    be = DeviceBackend(model, params, wl.base, x)
+    orch = StreamOrchestrator(
+        be, wl.base, policy=make_policy("adaptive", hysteresis=hysteresis))
+    orch.apply_stream(wl.batches)
+    return [d.mode for d in orch.policy.history], np.asarray(be.embeddings)
+
+
+def _flips(modes) -> int:
+    return sum(a != b for a, b in zip(modes, modes[1:]))
+
+
+def test_hysteresis_validation():
+    with pytest.raises(ValueError, match="hysteresis"):
+        ExecutionPolicy(hysteresis=-0.1)
+    with pytest.raises(ValueError, match="hysteresis"):
+        ExecutionPolicy(hysteresis=1.0)
+    assert make_policy("adaptive", hysteresis=0.25).hysteresis == 0.25
+    # default band is 0.0 — the exact adversarial CI gates depend on it
+    assert make_policy("adaptive").hysteresis == 0.0
+
+
+def test_hysteresis_damps_feature_churn_flapping():
+    """feature_churn oscillates around the incremental/chunked cost
+    crossover (the costs differ by ~20% each way): the 0.0 band flips
+    mode every batch, a 0.15 band holds incremental throughout.  The
+    damped run's embeddings must still match the flapping run's to
+    float32 tolerance — modes only pick the execution shape."""
+    modes0, emb0 = _adaptive_modes("feature_churn", 0.0)
+    assert _flips(modes0) == 5  # the adversarial construction guarantees it
+    modes_h, emb_h = _adaptive_modes("feature_churn", 0.15)
+    assert _flips(modes_h) == 0
+    assert set(modes_h) == {"incremental"}
+    np.testing.assert_allclose(emb_h, emb0, atol=5e-6)
+
+
+def test_hysteresis_follows_genuine_regime_shift():
+    """delete_heavy alternates between regimes whose costs differ by far
+    more than the band (full is ~3x cheaper on the delete batches): even
+    a 0.3 band must follow every shift — hysteresis damps flapping
+    around a crossover, it must not freeze the policy."""
+    modes0, _ = _adaptive_modes("delete_heavy", 0.0)
+    modes_h, _ = _adaptive_modes("delete_heavy", 0.3)
+    assert modes_h == modes0
+    assert _flips(modes_h) == 5
+
+
+def test_hysteresis_zero_is_bitwise_argmin():
+    """hysteresis=0.0 must reproduce the plain per-batch argmin decision
+    for decision — the adversarial CI gates pin those counts exactly."""
+    for regime in ADVERSARIAL_REGIMES:
+        modes0, _ = _adaptive_modes(regime, 0.0)
+        model, wl, x, params = _setup(regime)
+        be = DeviceBackend(model, params, wl.base, x)
+        orch = StreamOrchestrator(be, wl.base, policy=make_policy("adaptive"))
+        orch.apply_stream(wl.batches)
+        assert [d.mode for d in orch.policy.history] == modes0, regime
+
+
+def test_hysteresis_forced_bypasses_band():
+    """force_mode pins decisions regardless of the band (and must not
+    seed its previous-mode state)."""
+    model, wl, x, params = _setup("hub_burst")
+    pol = ExecutionPolicy(force_mode="chunked", hysteresis=0.5)
+    for g_old, g_new, b in _graphs_along(wl):
+        d = pol.decide(build_plan(model, g_old, g_new, b, 2))
+        assert d.forced and d.mode == "chunked"
+    assert pol._prev_mode is None
+
+
+def test_engine_config_policy_hysteresis_threading():
+    model, wl, x, params = _setup("hub_burst")
+    cfg = EngineConfig(model=model, graph=wl.base, x=x, params=params,
+                       policy="adaptive", policy_hysteresis=0.3)
+    eng = create_engine("device", cfg)
+    assert eng._orch.policy.hysteresis == 0.3
+
+
+# ---------------------------------------------------------------------- #
 # StreamStats accounting and the EngineConfig knob
 # ---------------------------------------------------------------------- #
 def test_stream_stats_policy_keys_default_zero():
