@@ -111,6 +111,17 @@ SPECS = (
     MetricSpec(name="fig7/smoke/gcn/cache_hit_rows", kind="exact"),
     MetricSpec(name="fig7/smoke/gcn/cache_miss_rows", kind="exact"),
     MetricSpec(name="fig7/smoke/gcn/cache_evictions", kind="exact"),
+    # batch-window fusion (ISSUE 9): the high-rate small-batch cell's
+    # stream is structurally fusable (region-disjoint updates on a ring
+    # lattice), so the window/absorbed-batch counters and the resulting
+    # dispatch count — n_batches − (fused_batches − fusion_windows) — are
+    # pure functions of the plans and gate exactly (tolerance 0).  Any
+    # drift means the footprint-disjointness check or the lookahead
+    # window regressed; the emitting cell additionally fails the step on
+    # any fused-vs-serial embedding divergence (bitwise contract).
+    MetricSpec(name="fig7/smoke/gcn/fusion_windows", kind="exact"),
+    MetricSpec(name="fig7/smoke/gcn/fusion_fused_batches", kind="exact"),
+    MetricSpec(name="fig7/smoke/gcn/fusion_dispatches", kind="exact"),
 )
 
 # Gated against BENCH_sharded.json by the multi-device CI job
@@ -147,6 +158,15 @@ CACHE_EXPECTED = {
     "smoke": {"hit_rows": 580, "miss_rows": 504, "evictions": 0},
     "sharded": {"hit_rows": 616, "miss_rows": 532, "evictions": 0},
 }
+
+#: ISSUE-9 batch-window-fusion expectations on the deterministic fusable
+#: smoke stream (ring lattice n=600, 12 region-disjoint batches,
+#: FusionConfig(window=4)), shared by the emitting cell
+#: (fig7_response_time.smoke_fusion) and the exact gates above.  The
+#: greedy maximal-prefix fuser packs 12 independent batches under a
+#: 4-deep lookahead into 3 full windows, so the stream executes in
+#: 12 − (12 − 3) = 3 device dispatches.
+FUSION_EXPECTED = {"windows": 3, "fused_batches": 12, "dispatches": 3}
 
 #: per-regime structural expectations for the adaptive policy on the
 #: default adversarial streams (benchmarks/adversarial.py imports this

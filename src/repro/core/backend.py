@@ -71,12 +71,15 @@ import numpy as np
 from repro.core.affected import (
     BatchPlan,
     BucketHysteresis,
+    FusionConfig,
+    FusionWindow,
     HybridLayerPlan,
     LayerPlan,
     PackedPlan,
     ShardedPlan,
     build_packed_plan,
     build_plan,
+    final_write_rows,
     hybrid_plan,
     pack_plan,
     remap_compact,
@@ -125,6 +128,12 @@ class BatchStats:
     #: construction; the CI wall-clock-free "policy matches the best fixed
     #: mode" gate compares these.  0.0 when no policy is attached.
     est_cost: float = 0.0
+    #: batch-window fusion (ISSUE 9): how many logical batches shared this
+    #: batch's device dispatch.  1 = dispatched alone (the serial path);
+    #: k ≥ 2 on every constituent of a fused window (the window's one
+    #: dispatch time is charged to its first constituent, the others
+    #: report ``exec_time_s == 0``).
+    fused_window: int = 1
 
     @property
     def edges_processed(self) -> int:
@@ -188,6 +197,11 @@ class StreamStats:
     cache_hit_rows: int = 0
     cache_miss_rows: int = 0
     cache_evictions: int = 0
+    # batch-window fusion counters (ISSUE 9): deterministic — which batches
+    # fuse depends only on the update stream's plan footprints
+    fusion_windows: int = 0
+    fused_batches: int = 0
+    fusion_fallbacks: int = 0
 
     @property
     def mean_batch_s(self) -> float:
@@ -223,6 +237,9 @@ class StreamStats:
         cache_hit_rows              rows served from device cache slots (D)
         cache_miss_rows             rows staged from host (D)
         cache_evictions             cache capacity evictions (D)
+        fusion_windows              fused multi-batch dispatches (D)
+        fused_batches               batches absorbed into fused windows (D)
+        fusion_fallbacks            windows broken up by overlap/policy (D)
         policy_incremental_batches  batches decided incremental (D)
         policy_chunked_batches      batches decided chunked-subset (D)
         policy_full_batches         batches decided full recompute (D)
@@ -250,6 +267,12 @@ class StreamStats:
             "cache_hit_rows": self.cache_hit_rows,
             "cache_miss_rows": self.cache_miss_rows,
             "cache_evictions": self.cache_evictions,
+            # batch-window fusion counters (ISSUE 9): deterministic, gated
+            # exactly on the high-rate smoke cell.  All three stay zero
+            # without a FusionConfig (or with window=1/enabled=False).
+            "fusion_windows": self.fusion_windows,
+            "fused_batches": self.fused_batches,
+            "fusion_fallbacks": self.fusion_fallbacks,
             # adaptive-execution-policy accounting (ISSUE 7): per-mode
             # decision counts and the cost model's raw edge-work, both
             # deterministic (CI-gated exactly in the adversarial suite).
@@ -470,6 +493,20 @@ class _PolicyFullPrep:
         return self.est.n * self.est.L
 
 
+@dataclasses.dataclass
+class _PendingPlan:
+    """One planned-but-not-dispatched batch in the fusion lookahead window
+    (ISSUE 9).  Everything here is host-only and value-independent (graph
+    snapshots, the Alg.-4 plan, its footprint), so the window may run
+    arbitrarily far ahead of device execution."""
+
+    batch: UpdateBatch
+    g_old: CSRGraph
+    g_new: CSRGraph
+    plan: BatchPlan
+    fp: np.ndarray  # sorted unique row footprint (FusionWindow.footprint)
+
+
 # ====================================================================== #
 # StreamOrchestrator — the single plan/pack/overlap loop
 # ====================================================================== #
@@ -485,11 +522,23 @@ class StreamOrchestrator:
 
     def __init__(self, backend: StateBackend, graph: CSRGraph,
                  refresh_every: int = 0,
-                 policy: Optional[ExecutionPolicy] = None):
+                 policy: Optional[ExecutionPolicy] = None,
+                 fusion: Optional[FusionConfig] = None):
         self.backend = backend
         self.graph = graph
         self.refresh_every = refresh_every
         self.policy = policy
+        # batch-window fusion (ISSUE 9): inert unless a FusionConfig with
+        # window >= 2 is attached — None keeps every entry point on the
+        # serial per-batch loop, byte-identical to pre-fusion behavior
+        if fusion is not None and (not fusion.enabled or fusion.window < 2):
+            fusion = None
+        self.fusion = fusion
+        # cumulative fusion counters (deterministic; StreamStats reports
+        # per-stream deltas of these)
+        self.fusion_windows = 0
+        self.fused_batches = 0
+        self.fusion_fallbacks = 0
         self._batches_seen = 0
         self._chunk_sched = None  # lazy generic §V-C scheduler (policy path)
 
@@ -517,17 +566,26 @@ class StreamOrchestrator:
     # shapes on the Alg.-4 plan and dispatch the winner.  Without a
     # policy every batch takes the pre-policy incremental path unchanged.
     # ------------------------------------------------------------------ #
-    def _prepare(self, g_new: CSRGraph, batch: UpdateBatch):
+    def _prepare(self, g_new: CSRGraph, batch: UpdateBatch,
+                 base: Optional[BatchPlan] = None):
         """Plan one batch → ``(mode, payload, decision)``.
 
         Host-only and value-independent (the decision reads plan counters
         and degree tables, never state values), so it keeps the §V overlap
         contract: ``apply_stream`` runs it behind the previous batch's
-        device execution."""
+        device execution.  ``base`` short-circuits the Alg.-4 build when
+        the caller already planned the batch (the fusion lookahead's serial
+        fallback) — ``build_plan`` is deterministic, so reusing the
+        lookahead's plan is bitwise-identical to rebuilding it."""
         if self.policy is None:
+            if base is not None:
+                return ("incremental",
+                        self.backend.plan(self.graph, g_new, batch,
+                                          base_plan=base), None)
             return "incremental", self.backend.plan(self.graph, g_new, batch), None
-        base = build_plan(self.backend.model, self.graph, g_new, batch,
-                          self.backend.L)
+        if base is None:
+            base = build_plan(self.backend.model, self.graph, g_new, batch,
+                              self.backend.L)
         decision = self.policy.decide(base)
         if decision.mode == "incremental":
             prep = self.backend.plan(self.graph, g_new, batch, base_plan=base)
@@ -599,7 +657,12 @@ class StreamOrchestrator:
     def write_set(self, prep: Any) -> np.ndarray:
         """Serving write set of one prepared batch payload, whatever mode
         the policy chose (the frontend's undo-log hook goes through here;
-        full-recompute payloads never reach it — the frontend resets)."""
+        full-recompute payloads never reach it — the frontend resets).
+        Inside a fused window the hook receives each constituent's raw
+        :class:`BatchPlan` (the per-logical-batch write sets the undo log
+        needs), handled here directly."""
+        if isinstance(prep, BatchPlan):
+            return final_write_rows(prep)
         if isinstance(prep, _PolicyChunkedPrep):
             return prep.rows_per_layer[-1]
         return self.backend.changed_rows(prep)
@@ -629,6 +692,12 @@ class StreamOrchestrator:
             jax.block_until_ready(self.backend.sync_arrays())
         t3 = time.perf_counter()
         self.graph = g_new
+        if decision is not None:
+            # online cost-weight calibration (ISSUE 9): a no-op unless the
+            # policy was built with calibrate=True.  block=False feeds the
+            # dispatch-only time (the overlap pipeline cannot observe
+            # per-batch completion without breaking itself).
+            self.policy.observe(decision, t3 - t2)
         self._after_batch()
         return BatchStats(
             inc_edges=prep.n_inc_edges,
@@ -655,6 +724,8 @@ class StreamOrchestrator:
         batches = list(batches)
         if not batches:
             return StreamStats([], 0.0, 0.0)
+        if self._fusion_active():
+            return self._apply_stream_fused(batches)
         t_start = time.perf_counter()
         stats: List[BatchStats] = []
         plan_total = 0.0
@@ -690,6 +761,11 @@ class StreamOrchestrator:
                               if decision is not None else 0.0),
                 )
             )
+            if decision is not None:
+                # dispatch-time calibration proxy (a no-op unless the
+                # policy was built with calibrate=True): per-batch
+                # completion is unobservable inside the overlap pipeline
+                self.policy.observe(decision, dispatch_s)
             if i + 1 < len(batches):
                 tp = time.perf_counter()  # overlapped with device execution
                 nxt = self._apply_graph(batches[i + 1])
@@ -721,6 +797,287 @@ class StreamOrchestrator:
             ss.cache_miss_rows = c1.miss_rows - cache0.miss_rows
             ss.cache_evictions = c1.evictions - cache0.evictions
         return ss
+
+    # ------------------------------------------------------------------ #
+    # batch-window fusion (ISSUE 9): buffer up to fusion.window pending
+    # batches, fuse the maximal independent prefix into ONE packed plan /
+    # ONE device dispatch, fall back to serial on overlap.  Bitwise-equal
+    # to the serial loop on every backend (the disjoint-footprint proof
+    # lives on repro.core.affected.FusionWindow).
+    # ------------------------------------------------------------------ #
+    def _fusion_active(self) -> bool:
+        """Fusion runs only when configured AND the policy allows it: a
+        per-batch ``force_mode`` schedule is indexed by logical batch, so
+        fusing under one would desynchronize the schedule — those streams
+        take the serial loop unchanged."""
+        if self.fusion is None:
+            return False
+        if self.policy is not None and self.policy.force_mode is not None \
+                and not isinstance(self.policy.force_mode, str):
+            return False
+        return True
+
+    def _refresh_limit(self) -> int:
+        """Batches until the next refresh boundary (windows must not span
+        one: refresh recomputes state, so constituents after the boundary
+        would fuse against pre-refresh values)."""
+        if not self.refresh_every:
+            return 1 << 30
+        return self.refresh_every - self._batches_seen % self.refresh_every
+
+    def _plan_pending(self, g_old: CSRGraph, batch: UpdateBatch) -> _PendingPlan:
+        g_new = g_old.apply_updates(
+            batch.ins_src, batch.ins_dst, batch.del_src, batch.del_dst,
+            batch.ins_weights, batch.ins_etypes)
+        plan = build_plan(self.backend.model, g_old, g_new, batch,
+                          self.backend.L)
+        return _PendingPlan(batch=batch, g_old=g_old, g_new=g_new, plan=plan,
+                            fp=FusionWindow.footprint(plan, batch))
+
+    def _decide_window(self, merged_plan: BatchPlan):
+        """Policy check for a fused window (None → no policy → fuse)."""
+        if self.policy is None:
+            return None, "incremental"
+        decision = self.policy.decide_window(merged_plan)
+        return decision, decision.mode
+
+    def _fused_stats(self, group: List[_PendingPlan], dispatch_s: float,
+                     decision) -> List[BatchStats]:
+        """Per-constituent BatchStats of one fused dispatch: plan counters
+        stay per *logical* batch (each constituent reports its own plan's
+        edge/row work — the sums equal the merged plan's), the window's one
+        dispatch time and policy estimate are charged to the first."""
+        k = len(group)
+        out = []
+        for j, p in enumerate(group):
+            out.append(BatchStats(
+                inc_edges=p.plan.total_inc_edges(),
+                full_edges=p.plan.total_full_edges(),
+                out_vertices=p.plan.total_vertices(),
+                plan_time_s=0.0,
+                exec_time_s=dispatch_s if j == 0 else 0.0,
+                graph_time_s=0.0,
+                mode="incremental",
+                est_edges=(decision.est_edges
+                           if decision is not None and j == 0 else 0),
+                est_cost=(decision.costs["incremental"]
+                          if decision is not None and j == 0 else 0.0),
+                fused_window=k,
+            ))
+        return out
+
+    def _apply_stream_fused(self, batches: List[UpdateBatch]) -> StreamStats:
+        """The fused variant of :meth:`apply_stream`: same overlap schedule
+        (host planning of *future* batches runs behind the device execution
+        of the dispatch just issued), but each dispatch covers the maximal
+        independent prefix of the lookahead window."""
+        fw = FusionWindow(self.fusion)
+        t_start = time.perf_counter()
+        stats: List[BatchStats] = []
+        plan_total = 0.0
+        prefetch_hits = 0
+        fusion0 = (self.fusion_windows, self.fused_batches,
+                   self.fusion_fallbacks)
+        staging0 = self.backend.staging_snapshot()
+        cache0 = self.backend.cache_snapshot()
+
+        pending: List[_PendingPlan] = []
+        nxt = 0  # next batch index to plan
+        g_plan = self.graph  # graph snapshot after every *planned* batch
+
+        def top_up() -> int:
+            """Fill the lookahead window (host-only; overlaps execution)."""
+            nonlocal nxt, g_plan, plan_total
+            planned = 0
+            while len(pending) < self.fusion.window and nxt < len(batches):
+                tp = time.perf_counter()
+                pending.append(self._plan_pending(g_plan, batches[nxt]))
+                g_plan = pending[-1].g_new
+                nxt += 1
+                plan_total += time.perf_counter() - tp
+                planned += 1
+            return planned
+
+        top_up()
+        while pending:
+            limit = min(len(pending), self._refresh_limit())
+            k = fw.select_prefix([p.fp for p in pending[:limit]])
+            decision, mode = None, "incremental"
+            if k >= 2:
+                tp = time.perf_counter()
+                merged_plan, merged_batch = FusionWindow.merge(
+                    [p.plan for p in pending[:k]],
+                    [p.batch for p in pending[:k]])
+                decision, mode = self._decide_window(merged_plan)
+                if mode == "incremental":
+                    prep = self.backend.plan(
+                        pending[0].g_old, pending[k - 1].g_new, merged_batch,
+                        base_plan=merged_plan)
+                    plan_total += time.perf_counter() - tp
+                    group = pending[:k]
+                    del pending[:k]
+                    epoch0 = self.backend.barrier_epoch
+                    td = time.perf_counter()
+                    self.backend.dispatch(prep)
+                    dispatch_s = time.perf_counter() - td
+                    self.graph = group[-1].g_new
+                    self.fusion_windows += 1
+                    self.fused_batches += k
+                    stats.extend(self._fused_stats(group, dispatch_s,
+                                                   decision))
+                    if decision is not None:
+                        self.policy.observe(decision, dispatch_s)
+                    planned = top_up()  # overlapped with fused execution
+                    if self.backend.barrier_epoch == epoch0:
+                        prefetch_hits += planned
+                    for _ in range(k):
+                        self._after_batch(sync_before_refresh=True)
+                    continue
+                # the policy priced the fused unit off the incremental
+                # path: break the window up, re-decide per batch below
+                plan_total += time.perf_counter() - tp
+                self.fusion_fallbacks += 1
+            elif limit >= 2:
+                self.fusion_fallbacks += 1  # head pair overlaps
+            # serial dispatch of the window head (plan reused, not rebuilt)
+            p = pending.pop(0)
+            tp = time.perf_counter()
+            mode, prep, decision = self._prepare(p.g_new, p.batch,
+                                                 base=p.plan)
+            plan_total += time.perf_counter() - tp
+            epoch0 = self.backend.barrier_epoch
+            td = time.perf_counter()
+            self._dispatch_mode(mode, prep)
+            dispatch_s = time.perf_counter() - td
+            self.graph = p.g_new
+            stats.append(BatchStats(
+                inc_edges=prep.n_inc_edges,
+                full_edges=prep.n_full_edges,
+                out_vertices=prep.n_out_rows,
+                plan_time_s=0.0,
+                exec_time_s=dispatch_s,
+                graph_time_s=0.0,
+                mode=mode,
+                est_edges=decision.est_edges if decision is not None else 0,
+                est_cost=(decision.costs[mode]
+                          if decision is not None else 0.0),
+            ))
+            if decision is not None:
+                self.policy.observe(decision, dispatch_s)
+            planned = top_up()
+            if self.backend.barrier_epoch == epoch0:
+                prefetch_hits += planned
+            self._after_batch(sync_before_refresh=True)
+
+        self.backend.flush()
+        jax.block_until_ready(self.backend.sync_arrays())
+        ss = StreamStats(stats, time.perf_counter() - t_start, plan_total,
+                         prefetch_hits=prefetch_hits)
+        ss.fusion_windows = self.fusion_windows - fusion0[0]
+        ss.fused_batches = self.fused_batches - fusion0[1]
+        ss.fusion_fallbacks = self.fusion_fallbacks - fusion0[2]
+        if staging0 is not None:
+            s1 = self.backend.staging_snapshot()
+            ss.staged_bytes = s1.staged_bytes - staging0.staged_bytes
+            ss.sync_wait_s = ((s1.wait_gather_s + s1.drain_wait_s)
+                              - (staging0.wait_gather_s + staging0.drain_wait_s))
+            ss.compute_s = s1.wait_device_s - staging0.wait_device_s
+        if cache0 is not None:
+            c1 = self.backend.cache_snapshot()
+            ss.cache_hit_rows = c1.hit_rows - cache0.hit_rows
+            ss.cache_miss_rows = c1.miss_rows - cache0.miss_rows
+            ss.cache_evictions = c1.evictions - cache0.evictions
+        return ss
+
+    def apply_window(self, batches: Sequence[UpdateBatch],
+                     on_plan=None) -> List[BatchStats]:
+        """Blocking fused application of a *prefix* of ``batches``.
+
+        The serving front-end's fused write path: plans batches one at a
+        time from the current graph, stops at the first footprint overlap /
+        window cap / refresh boundary, dispatches the accumulated prefix as
+        one fused step (or one serial batch when the prefix is length 1),
+        and blocks until the state reflects it.  Returns one
+        :class:`BatchStats` per batch consumed (``len(result)`` tells the
+        caller how far the stream advanced).
+
+        ``on_plan`` runs once per *constituent* batch — in stream order,
+        before dispatch, with the constituent's own :class:`BatchPlan` —
+        while the substrate still holds the strictly pre-window state.
+        Disjoint write sets make the pre-window values on batch j's write
+        set identical to the post-batch-(j-1) values there, so the
+        front-end's per-version pre-images stay exact (skipped for
+        full-recompute fallbacks, matching :meth:`apply_batch`)."""
+        batches = list(batches)
+        if not batches:
+            return []
+        fw = FusionWindow(self.fusion) if self._fusion_active() \
+            else FusionWindow(FusionConfig(window=1))
+        limit = min(len(batches), fw.config.window, self._refresh_limit())
+        t0 = time.perf_counter()
+        group = [self._plan_pending(self.graph, batches[0])]
+        while len(group) < limit:
+            p = self._plan_pending(group[-1].g_new, batches[len(group)])
+            if not all(fw.disjoint(p.fp, q.fp) for q in group):
+                break  # one wasted (deterministic, value-independent) plan
+            group.append(p)
+        k = len(group)
+        decision, mode = None, "incremental"
+        if k >= 2:
+            merged_plan, merged_batch = FusionWindow.merge(
+                [p.plan for p in group], [p.batch for p in group])
+            decision, mode = self._decide_window(merged_plan)
+            if mode != "incremental":
+                self.fusion_fallbacks += 1
+                group, k = group[:1], 1
+        elif limit >= 2 and len(batches) >= 2:
+            self.fusion_fallbacks += 1
+        t1 = time.perf_counter()
+        if k >= 2:
+            prep = self.backend.plan(group[0].g_old, group[-1].g_new,
+                                     merged_batch, base_plan=merged_plan)
+            if on_plan is not None:
+                for p in group:
+                    on_plan(p.plan)
+            td = time.perf_counter()
+            self.backend.dispatch(prep)
+            self.backend.flush()
+            jax.block_until_ready(self.backend.sync_arrays())
+            dispatch_s = time.perf_counter() - td
+            self.graph = group[-1].g_new
+            self.fusion_windows += 1
+            self.fused_batches += k
+            out = self._fused_stats(group, dispatch_s, decision)
+            out[0].plan_time_s = t1 - t0
+            if decision is not None:
+                self.policy.observe(decision, dispatch_s)
+            for _ in range(k):
+                self._after_batch(sync_before_refresh=True)
+            return out
+        p = group[0]
+        mode, prep, decision = self._prepare(p.g_new, p.batch, base=p.plan)
+        if on_plan is not None and mode != "full":
+            on_plan(prep)
+        td = time.perf_counter()
+        self._dispatch_mode(mode, prep)
+        self.backend.flush()
+        jax.block_until_ready(self.backend.sync_arrays())
+        dispatch_s = time.perf_counter() - td
+        self.graph = p.g_new
+        if decision is not None:
+            self.policy.observe(decision, dispatch_s)
+        self._after_batch(sync_before_refresh=True)
+        return [BatchStats(
+            inc_edges=prep.n_inc_edges,
+            full_edges=prep.n_full_edges,
+            out_vertices=prep.n_out_rows,
+            plan_time_s=t1 - t0,
+            exec_time_s=dispatch_s,
+            graph_time_s=0.0,
+            mode=mode,
+            est_edges=decision.est_edges if decision is not None else 0,
+            est_cost=decision.costs[mode] if decision is not None else 0.0,
+        )]
 
 
 # ====================================================================== #
@@ -1204,6 +1561,36 @@ class _DeferredWritebackMixin:
             hn_wb = (np.zeros(0, np.int64), np.zeros(0, np.int32))
         return h_split, s_split, s_wb, hn_wb
 
+    def _gather_state_rows(self, arr: np.ndarray, rows: np.ndarray) -> np.ndarray:
+        """Gather global state rows (flat host arrays; the sharded hybrid
+        overrides with its per-shard block gather)."""
+        return arr[rows]
+
+    def _prewarm_cache(self, graph: CSRGraph) -> None:
+        """Seed every cache row space from the base graph's top-degree rows
+        before batch 0 (``CacheConfig.prewarm_rows``, ISSUE 9).
+
+        Runs at construction time, after the initial full forward: the
+        gathered values are the pristine base state, so the coherence
+        invariant holds trivially.  Degree ties admit the smallest row id
+        (stable argsort), keeping the seeded slot table — and every
+        downstream hit/miss/eviction counter — deterministic."""
+        cache = self._cache
+        if cache is None or not cache.config.prewarm_rows:
+            return
+        k = min(int(cache.config.prewarm_rows), graph.n)
+        deg = graph.in_degree().astype(np.int64)
+        top = np.argsort(-deg, kind="stable")[:k].astype(np.int64)
+        degs = deg[top].astype(np.float32)
+        for l in range(self.L):
+            cache.prewarm(("h", l), graph.n, top, degs,
+                          {"h": self._gather_state_rows(self.h[l], top)})
+            cache.prewarm(("s", l), graph.n, top, degs, {
+                "a": self._gather_state_rows(self.a[l], top),
+                "nct": self._gather_state_rows(self.nct[l], top),
+                "h": self._gather_state_rows(self.h[l + 1], top),
+            })
+
     def _cache_invalidate_feats(self, batch: UpdateBatch) -> np.ndarray:
         """Plan-time, value-independent invalidation for a batch's feature
         scatter (it rewrites h[0] rows outside the kernel write-back path);
@@ -1261,6 +1648,7 @@ class OffloadBackend(_DeferredWritebackMixin, StateBackend):
         self.h: List[np.ndarray] = [self.x.copy()] + [np.array(s.h) for s in states]
         self.a: List[np.ndarray] = [np.array(s.a) for s in states]
         self.nct: List[np.ndarray] = [np.array(s.nct) for s in states]
+        self._prewarm_cache(graph)
 
     @property
     def embeddings(self) -> np.ndarray:
@@ -1374,6 +1762,7 @@ class OffloadBackend(_DeferredWritebackMixin, StateBackend):
         cache = self._cache
         n = plan.deg_old.shape[0] - 1  # deg tables carry a scratch slot
         deg = plan.deg_new
+        cache.decay_tick()
         prev_rows = self._cache_invalidate_feats(batch)
         ops: List[_CacheLayerOps] = []
         for l, tr in enumerate(transfers):
@@ -1932,10 +2321,14 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
         # the backend's entire HBM footprint (state is host-resident)
         self.peak_device_bytes = 0
         self._init_state(graph, np.asarray(x, np.float32))
+        self._prewarm_cache(graph)
 
     # ------------------------------------------------------------------ #
     # state: host-resident per-shard row blocks [S, rows_per, ·]
     # ------------------------------------------------------------------ #
+    def _gather_state_rows(self, arr: np.ndarray, rows: np.ndarray) -> np.ndarray:
+        return self._gather_rows(arr, rows)
+
     def _to_blocks(self, arr: np.ndarray) -> np.ndarray:
         flat = np.asarray(arr, np.float32)
         out = np.zeros((self.S, self.rows_per) + flat.shape[1:], np.float32)
@@ -2043,6 +2436,7 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
         cache = self._cache
         n = plan.deg_old.shape[0] - 1  # deg tables carry a scratch slot
         deg = plan.deg_new
+        cache.decay_tick()
         prev_rows = self._cache_invalidate_feats(batch)
         prev_live_pos: Optional[np.ndarray] = None
         ops: List[_CacheLayerOps] = []

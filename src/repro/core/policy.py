@@ -179,6 +179,18 @@ class ExecutionPolicy:
     mode flapping on regimes that oscillate around a cost crossover while
     still following genuine regime shifts.  Forced decisions bypass the
     band entirely and do not update its notion of "previous mode".
+
+    ``calibrate`` (ISSUE 9) turns on online cost-weight calibration: the
+    orchestrator feeds each executed batch's measured wall back through
+    :meth:`observe`, which maintains a per-mode cost-per-work-unit EMA
+    (``calibrate_alpha``); :meth:`effective_weights` then blends the
+    static weights with the measured ratios (``calibrate_blend``,
+    rescaled so the blend perturbs *ratios*, not magnitudes) and
+    :meth:`costs` scores with the blend.  With the default ``False`` the
+    static 2.0/1.5/1.0 model is used untouched — bit-for-bit the
+    deterministic decision surface the CI gates pin; calibration is the
+    opt-in hardware-adaptive variant (wall times are nondeterministic, so
+    a calibrated run's decisions are not CI-gateable by construction).
     """
 
     def __init__(
@@ -188,6 +200,9 @@ class ExecutionPolicy:
         full_weight: float = DEFAULT_FULL_WEIGHT,
         force_mode: Union[None, str, Sequence[str]] = None,
         hysteresis: float = 0.0,
+        calibrate: bool = False,
+        calibrate_alpha: float = 0.25,
+        calibrate_blend: float = 0.5,
     ):
         self.weights = {"incremental": float(incremental_weight),
                         "chunked": float(chunked_weight),
@@ -201,20 +216,75 @@ class ExecutionPolicy:
         if not 0.0 <= float(hysteresis) < 1.0:
             raise ValueError(
                 f"hysteresis must be in [0, 1), got {hysteresis!r}")
+        if not 0.0 <= float(calibrate_blend) <= 1.0:
+            raise ValueError(
+                f"calibrate_blend must be in [0, 1], got {calibrate_blend!r}")
+        if not 0.0 < float(calibrate_alpha) <= 1.0:
+            raise ValueError(
+                f"calibrate_alpha must be in (0, 1], got {calibrate_alpha!r}")
         self.force_mode = force_mode
         self.hysteresis = float(hysteresis)
+        self.calibrate = bool(calibrate)
+        self.calibrate_alpha = float(calibrate_alpha)
+        self.calibrate_blend = float(calibrate_blend)
+        #: per-mode measured cost-per-work-unit EMA (None until observed)
+        self._ema: Dict[str, Optional[float]] = {m: None for m in MODES}
         self._prev_mode: Optional[str] = None
         self.decisions: Dict[str, int] = {m: 0 for m in MODES}
         self.history: List[PolicyDecision] = []
 
     # ------------------------------------------------------------------ #
-    def costs(self, est: PlanCostEstimate) -> Dict[str, float]:
-        """Weighted edge-work per mode (the decision surface)."""
+    @staticmethod
+    def _units(est: PlanCostEstimate, mode: str) -> int:
+        """Work units of one mode: raw edge-work + one per written row
+        (the unweighted quantity the weights multiply)."""
         per_row = {"incremental": est.affected_rows,
                    "chunked": est.affected_rows,
                    "full": est.n}
-        return {m: self.weights[m] * (est.edges(m) + per_row[m])
+        return est.edges(mode) + per_row[mode]
+
+    def effective_weights(self) -> Dict[str, float]:
+        """The decision weights actually in force.
+
+        Static (``self.weights``, returned as-is — same dict object, so
+        the uncalibrated path is bit-identical to pre-ISSUE-9) unless
+        ``calibrate=True`` and at least one mode has been measured.  The
+        measured EMAs are rescaled so their mean matches the static
+        weights' mean over the measured modes — the blend moves the
+        *ratios* toward hardware truth without inflating the absolute
+        scale — and unmeasured modes keep their static weight."""
+        if not self.calibrate:
+            return self.weights
+        measured = {m: v for m, v in self._ema.items() if v is not None}
+        if not measured or sum(measured.values()) <= 0.0:
+            return self.weights
+        scale = (sum(self.weights[m] for m in measured)
+                 / sum(measured.values()))
+        b = self.calibrate_blend
+        return {m: ((1.0 - b) * self.weights[m]
+                    + b * measured[m] * scale) if m in measured
+                else self.weights[m]
                 for m in MODES}
+
+    def observe(self, decision: PolicyDecision, wall_s: float) -> None:
+        """Feed one executed batch's measured wall back into the per-mode
+        cost-per-unit EMA (ISSUE 9).  A strict no-op unless
+        ``calibrate=True`` — the static decision surface never moves."""
+        if not self.calibrate or wall_s <= 0.0:
+            return
+        units = self._units(decision.estimate, decision.mode)
+        if units <= 0:
+            return
+        cpu_ = wall_s / units
+        prev = self._ema[decision.mode]
+        a = self.calibrate_alpha
+        self._ema[decision.mode] = (cpu_ if prev is None
+                                    else (1.0 - a) * prev + a * cpu_)
+
+    def costs(self, est: PlanCostEstimate) -> Dict[str, float]:
+        """Weighted edge-work per mode (the decision surface)."""
+        w = self.effective_weights()
+        return {m: w[m] * self._units(est, m) for m in MODES}
 
     def decide(self, plan: BatchPlan) -> PolicyDecision:
         """Score one batch plan and record the decision."""
@@ -247,6 +317,46 @@ class ExecutionPolicy:
         self.history.append(decision)
         return decision
 
+    def decide_window(self, plan: BatchPlan) -> PolicyDecision:
+        """Score a fused window's merged plan as ONE unit (ISSUE 9).
+
+        Same surface as :meth:`decide` — the merged plan's counters *are*
+        the window's total work, so one scoring prices the whole window —
+        but bookkeeping differs: the decision is recorded (``decisions`` /
+        ``history`` / the hysteresis band's previous mode) only when the
+        window is **accepted** (``mode == "incremental"``, the only mode a
+        fused dispatch exists for).  A declined window falls back to the
+        serial loop, where ``decide`` re-scores each constituent batch
+        individually — recording the declined window too would double-count
+        it.  Per-batch ``force_mode`` schedules are indexed by logical
+        batch and cannot price a window; the orchestrator disables fusion
+        for them before ever calling this."""
+        est = estimate_plan_cost(plan)
+        costs = self.costs(est)
+        forced = self.force_mode is not None
+        if isinstance(self.force_mode, str):
+            mode = self.force_mode
+        elif forced:
+            raise ValueError(
+                "per-batch force_mode schedules cannot score a fused "
+                "window; disable fusion for scheduled runs")
+        else:
+            mode = min(MODES, key=lambda m: (costs[m], MODES.index(m)))
+            if self.hysteresis > 0.0:
+                prev = self._prev_mode
+                if (prev is not None and mode != prev
+                        and not costs[mode]
+                        < (1.0 - self.hysteresis) * costs[prev]):
+                    mode = prev
+        decision = PolicyDecision(mode=mode, estimate=est, costs=costs,
+                                  forced=forced)
+        if mode == "incremental":
+            if not forced:
+                self._prev_mode = mode
+            self.decisions[mode] += 1
+            self.history.append(decision)
+        return decision
+
 
 def _check_mode(mode: str) -> None:
     if mode not in MODES:
@@ -257,18 +367,20 @@ def _check_mode(mode: str) -> None:
 def make_policy(spec: Union[None, str, ExecutionPolicy],
                 chunked_weight: float = DEFAULT_CHUNKED_WEIGHT,
                 hysteresis: float = 0.0,
+                calibrate: bool = False,
                 ) -> Optional[ExecutionPolicy]:
     """Resolve an :class:`~repro.serve.api.EngineConfig` policy knob.
 
     ``None`` → no policy (the pre-policy incremental-only orchestrator
     path, byte-identical behavior); ``"adaptive"`` → cost-model scoring
-    with the given switching ``hysteresis`` band; a mode name → that mode
-    forced on every batch; an :class:`ExecutionPolicy` instance passes
-    through unchanged (``chunked_weight``/``hysteresis`` ignored)."""
+    with the given switching ``hysteresis`` band and optional online
+    weight calibration (``calibrate``, ISSUE 9); a mode name → that mode forced on
+    every batch; an :class:`ExecutionPolicy` instance passes through
+    unchanged (``chunked_weight``/``hysteresis``/``calibrate`` ignored)."""
     if spec is None or isinstance(spec, ExecutionPolicy):
         return spec
     if spec == "adaptive":
         return ExecutionPolicy(chunked_weight=chunked_weight,
-                               hysteresis=hysteresis)
+                               hysteresis=hysteresis, calibrate=calibrate)
     _check_mode(spec)
     return ExecutionPolicy(chunked_weight=chunked_weight, force_mode=spec)

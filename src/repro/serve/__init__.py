@@ -11,7 +11,7 @@ package.
 from __future__ import annotations
 
 _API = ("create_engine", "EngineConfig", "BACKENDS", "ChunkedRTECEngine",
-        "serving_frontend")
+        "serving_frontend", "FusionConfig")
 _FRONTEND = ("ServingFrontend", "ReadTicket", "ReadRejectedError",
              "StaleVersionError")
 _CACHE = ("CacheConfig", "CacheStats", "HotRowCache")

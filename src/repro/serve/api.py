@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.affected import FusionConfig
 from repro.core.backend import (
     BatchStats,
     ChunkedBackend,
@@ -113,11 +114,23 @@ class EngineConfig:
     #: relative hysteresis band for policy mode switches (ISSUE 8): stay
     #: on the previous mode unless the best mode beats it by this margin
     policy_hysteresis: float = 0.0
+    #: online cost-weight calibration (ISSUE 9): blend measured per-mode
+    #: cost-per-unit EMAs into the static 2.0/1.5/1.0 weights.  Only
+    #: meaningful with ``policy="adaptive"``; the static model stays the
+    #: deterministic CI gate (default off).
+    policy_calibrate: bool = False
+    #: batch-window fusion (ISSUE 9): merge runs of consecutive batches
+    #: whose plans have disjoint affected frontiers/write sets into one
+    #: packed plan and one fused device step.  ``None`` (or
+    #: ``FusionConfig(enabled=False)`` / ``window < 2``) keeps the serial
+    #: per-batch loop, bit for bit.
+    fusion: Optional[FusionConfig] = None
 
     def resolved_policy(self):
         return make_policy(self.policy,
                            chunked_weight=self.policy_chunked_weight,
-                           hysteresis=self.policy_hysteresis)
+                           hysteresis=self.policy_hysteresis,
+                           calibrate=self.policy_calibrate)
 
     def resolved_staging(self) -> StagingConfig:
         if self.staging is not None:
@@ -305,7 +318,7 @@ def create_engine(backend: str, config: EngineConfig):
             f"unknown backend {backend!r}; expected one of {BACKENDS}")
     orch = StreamOrchestrator(sb, config.graph,
                               refresh_every=config.refresh_every,
-                              policy=policy)
+                              policy=policy, fusion=config.fusion)
     return _shell(cls, sb, orch)
 
 

@@ -152,6 +152,10 @@ class ServingFrontend:
         self.reads_served = 0
         self.reads_rejected = 0
         self.staleness_batches = 0
+        # fusion counter baseline (ISSUE 9): stats() reports the deltas this
+        # frontend's writes produced, not the orchestrator's lifetime totals
+        self._fusion0 = (orch.fusion_windows, orch.fused_batches,
+                         orch.fusion_fallbacks)
 
     # ------------------------------------------------------------------ #
     # read path
@@ -283,11 +287,79 @@ class ServingFrontend:
         self._batch_stats.append(bs)
         return bs
 
+    def apply_window(self, batches: Sequence[UpdateBatch]) -> List[BatchStats]:
+        """Serve due reads, then apply a fused *prefix* of ``batches``
+        through :meth:`StreamOrchestrator.apply_window` (ISSUE 9): the
+        orchestrator merges the maximal independent prefix into one device
+        dispatch; the frontend still records **one version per logical
+        batch**.  Pre-images are captured per constituent — in stream
+        order, against the strictly pre-window state — which is exact
+        because fused windows have pairwise-disjoint write sets (a row
+        batch j writes is untouched by batches 0..j-1, so its pre-window
+        value equals its post-batch-(j-1) value).  Returns the consumed
+        batches' stats; ``len(result)`` tells the caller how far the
+        stream advanced.  Falls back to plain serial single-batch behavior
+        (bitwise, version-for-version) when fusion is off or the head
+        batches overlap."""
+        batches = list(batches)
+        if not batches:
+            return []
+        self.serve_reads()
+        t0 = time.perf_counter()
+        captured: List[_UndoRecord] = []
+
+        def on_plan(plan) -> None:
+            # called once per constituent, before dispatch: version numbers
+            # are assigned in stream order on top of the current version
+            rows = np.asarray(self._orch.write_set(plan), np.int64)
+            captured.append(_UndoRecord(
+                version=self.version + 1 + len(captured), rows=rows,
+                vals=np.array(self._orch.backend.snapshot_rows(rows))))
+
+        out = self._orch.apply_window(batches, on_plan=on_plan)
+        orch = self._orch
+        ci = 0  # next captured pre-image (full-recompute batches skip one)
+        for j, bs in enumerate(out):
+            self.version += 1
+            # _batches_seen already advanced by len(out); reconstruct this
+            # constituent's post-batch count for the refresh-cadence check.
+            # Fused windows never span a refresh boundary (the orchestrator
+            # caps the window at it), so only the last constituent can land
+            # on the cadence.
+            seen = orch._batches_seen - (len(out) - 1 - j)
+            refreshed = (orch.refresh_every
+                         and seen % orch.refresh_every == 0)
+            if refreshed or bs.mode == "full":
+                self._undo.clear()
+                self._floor = self.version
+                if bs.mode != "full":
+                    ci += 1  # captured, then invalidated by the refresh
+            else:
+                self._undo.append(captured[ci])
+                ci += 1
+                while len(self._undo) > self.max_versions:
+                    self._undo.pop(0)
+                    self._floor += 1
+        self._wall_s += time.perf_counter() - t0
+        self._plan_s += sum(bs.plan_time_s for bs in out)
+        self._batch_stats.extend(out)
+        return out
+
     def run_stream(self, batches: Sequence[UpdateBatch]) -> StreamStats:
         """Apply a whole update stream, serving reads between batches and
-        draining the queue at the end."""
-        for b in batches:
-            self.apply_batch(b)
+        draining the queue at the end.  When the engine was built with
+        :class:`~repro.core.affected.FusionConfig`, consecutive independent
+        batches are fused into shared device dispatches (ISSUE 9) — the
+        version/consistency contract is unchanged: one version per logical
+        batch, snapshot reads bitwise-equal to the serial path."""
+        batches = list(batches)
+        i = 0
+        while i < len(batches):
+            if self._orch._fusion_active():
+                i += len(self.apply_window(batches[i:]))
+            else:
+                self.apply_batch(batches[i])
+                i += 1
         self.drain()
         return self.stats()
 
@@ -299,6 +371,7 @@ class ServingFrontend:
     def stats(self) -> StreamStats:
         """The run so far as the repo's single result type."""
         lat = np.asarray(self._latencies, np.float64)
+        orch = self._orch
         return StreamStats(
             batches=list(self._batch_stats),
             wall_s=self._wall_s,
@@ -308,4 +381,7 @@ class ServingFrontend:
             read_p50_s=float(np.percentile(lat, 50)) if lat.size else 0.0,
             read_p99_s=float(np.percentile(lat, 99)) if lat.size else 0.0,
             staleness_batches=self.staleness_batches,
+            fusion_windows=orch.fusion_windows - self._fusion0[0],
+            fused_batches=orch.fused_batches - self._fusion0[1],
+            fusion_fallbacks=orch.fusion_fallbacks - self._fusion0[2],
         )

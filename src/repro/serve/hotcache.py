@@ -90,11 +90,23 @@ class CacheConfig:
     layer); ``admission`` picks the priority model (``"freq_degree"`` —
     touch frequency × (1 + plan degree), the paper-motivated default — or
     ``"freq"`` — pure touch frequency); ``enabled=False`` keeps the
-    config inert (identical to passing no cache at all)."""
+    config inert (identical to passing no cache at all).
+
+    ``prewarm_rows`` (ISSUE 9) seeds every row space from the top-degree
+    rows of the base graph *before batch 0* instead of learning the hot
+    set during the first batches — the degree skew the paper's §V argument
+    rests on makes the static top of the degree distribution a strong
+    prior for the streamed hot set.  ``decay`` (ISSUE 9) is the per-batch
+    LFU aging factor: each batch every space's frequency counters are
+    multiplied by ``1 - decay`` at plan time, so a drifting hot set
+    (feature_churn regime) can evict stale hubs.  Both default off
+    (``0`` / ``0.0`` — behavior bit-for-bit identical to ISSUE 8)."""
 
     capacity_rows: int = 256
     admission: str = "freq_degree"
     enabled: bool = True
+    prewarm_rows: int = 0
+    decay: float = 0.0
 
     def __post_init__(self) -> None:
         if self.capacity_rows <= 0:
@@ -103,6 +115,11 @@ class CacheConfig:
         if self.admission not in ADMISSION_POLICIES:
             raise ValueError(f"unknown admission policy {self.admission!r}; "
                              f"expected one of {ADMISSION_POLICIES}")
+        if self.prewarm_rows < 0:
+            raise ValueError(f"prewarm_rows must be >= 0, got "
+                             f"{self.prewarm_rows}")
+        if not 0.0 <= self.decay < 1.0:
+            raise ValueError(f"decay must be in [0, 1), got {self.decay!r}")
 
 
 @dataclasses.dataclass
@@ -128,7 +145,10 @@ class _Space:
     def __init__(self, n_keys: int, capacity: int) -> None:
         self.slot_of = np.full(n_keys, -1, np.int32)
         self.row_of = np.full(capacity, -1, np.int64)
-        self.freq = np.zeros(n_keys, np.int64)
+        # float64 so LFU decay (CacheConfig.decay) can age counters in
+        # place; undecayed counters are small integers, exact in float64,
+        # so decay=0.0 keeps every priority bit-identical to the old int64
+        self.freq = np.zeros(n_keys, np.float64)
         self.degw = np.zeros(n_keys, np.float32)
         # grow-only slot table: pop() always yields the smallest free slot
         self.free = list(range(capacity - 1, -1, -1))
@@ -166,6 +186,19 @@ class HotRowCache:
     def _touch(self, sp: _Space, rows: np.ndarray, deg: np.ndarray) -> None:
         np.add.at(sp.freq, rows, 1)
         sp.degw[rows] = np.asarray(deg, np.float32)
+
+    def decay_tick(self) -> None:
+        """Age every space's frequency counters by ``1 - decay`` (ISSUE 9
+        LFU decay; the owning backend calls this once per batch at plan
+        time).  With the default ``decay=0.0`` this returns immediately
+        and every counter — and therefore every admission/eviction
+        decision — is bit-for-bit the undecayed behavior."""
+        d = self.config.decay
+        if d <= 0.0:
+            return
+        f = 1.0 - d
+        for sp in self._spaces.values():
+            sp.freq *= f
 
     def _admit(self, sp: _Space, cand_rows: np.ndarray) -> np.ndarray:
         """Deterministically admit candidate rows (unique, uncached).
@@ -250,6 +283,33 @@ class HotRowCache:
             self._admit(sp, np.unique(uncached))
         pos = np.flatnonzero(sp.slot_of[rows] >= 0).astype(np.int64)
         return pos, sp.slot_of[rows[pos]].astype(np.int32)
+
+    def prewarm(self, key: Tuple[str, int], n_keys: int, rows: np.ndarray,
+                deg: np.ndarray, values: Dict[str, np.ndarray]) -> None:
+        """Seed one row space before batch 0 (``CacheConfig.prewarm_rows``).
+
+        ``rows``/``deg`` are the base graph's top-degree rows (unique, any
+        order) with their degrees; ``values`` maps store names to arrays
+        aligned with ``rows`` holding those rows' *current* state, which
+        the owning backend gathers once at construction time.  Runs the
+        ordinary touch → admit pipeline, so prewarmed slots are
+        indistinguishable from learned ones (same priorities, same
+        deterministic eviction order), then fills the admitted slots'
+        device stores so batch 0 already hits."""
+        rows = np.asarray(rows, np.int64)
+        if not rows.size:
+            return
+        sp = self._space(key, n_keys)
+        self._touch(sp, rows, deg)
+        got = self._admit(sp, np.unique(rows))
+        if not got.size:
+            return
+        pos_of = {int(r): i for i, r in enumerate(rows)}
+        pos = np.array([pos_of[int(r)] for r in got], np.int64)
+        slots = sp.slot_of[got].astype(np.int32)
+        for name, vals in values.items():
+            self.update_store(key, name,
+                              slots, np.asarray(vals, np.float32)[pos])
 
     def invalidate(self, key: Tuple[str, int], rows: np.ndarray) -> None:
         """Value-independent invalidation of cached rows (feature scatters

@@ -1,0 +1,412 @@
+"""Batch-window fusion (ISSUE 9): the fused≡serial bitwise matrix, exact
+fusion counters, versioned snapshot reads across fused windows, and the
+hysteresis no-retrace guarantee.
+
+The contract under test: merging runs of consecutive batches with
+pairwise-disjoint plan footprints into ONE packed plan / ONE device
+dispatch is *bitwise* invisible — embeddings, per-layer state, and every
+frontend snapshot read match the unfused serial loop on every backend,
+with async staging on or off — while the dispatch count drops by exactly
+``fused_batches - fusion_windows``.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ExecutionPolicy, make_model
+from repro.core.affected import (
+    BucketHysteresis,
+    FusionConfig,
+    FusionWindow,
+    build_plan,
+    pack_plan,
+)
+from repro.graph.csr import CSRGraph
+from repro.graph.streaming import UpdateBatch
+from repro.serve import EngineConfig, ServingFrontend, StagingConfig, create_engine
+
+L_DIMS = [8, 8]  # two layers, d=8
+
+
+# ---------------------------------------------------------------------- #
+# deterministic stream construction: far-apart regions fuse, clustered
+# regions force serial fallback
+# ---------------------------------------------------------------------- #
+def _ring_graph(n: int) -> CSRGraph:
+    """Ring lattice (in-edges from i+1, i+2): footprints of updates in
+    regions ≥ ~10 rows apart are provably disjoint at L=2."""
+    src = np.concatenate([(np.arange(n) + 1) % n, (np.arange(n) + 2) % n])
+    dst = np.concatenate([np.arange(n), np.arange(n)]).astype(np.int64)
+    return CSRGraph.from_edges(n, src.astype(np.int64), dst)
+
+
+def _region_batch(n, base, rng, d=8, feats=True):
+    """One insert + optional feature update confined to rows [base, base+8)."""
+    ins_s = np.array([(base + 1) % n], np.int64)
+    ins_d = np.array([(base + 5) % n], np.int64)
+    fv = np.array([(base + 7) % n], np.int64) if feats else None
+    return UpdateBatch(
+        ins_src=ins_s, ins_dst=ins_d,
+        del_src=np.array([], np.int64), del_dst=np.array([], np.int64),
+        feat_vertices=fv,
+        feat_values=(rng.standard_normal((1, d)).astype(np.float32)
+                     if feats else None))
+
+
+def _mixed_stream(n=600, seed=0):
+    """20 batches: a fusable run (far-apart regions), a forced-overlap run
+    (all batches hammer one hub region), then a fusable run again."""
+    rng = np.random.default_rng(seed)
+    batches = []
+    for i in range(8):  # fusable: regions 60 rows apart
+        batches.append(_region_batch(n, (i * 60) % n, rng))
+    for i in range(4):  # forced overlap: everyone hammers rows ~[15, 27)
+        batches.append(_region_batch(n, 15 + i, rng))
+    for i in range(8):  # fusable again (offset to fresh regions)
+        batches.append(_region_batch(n, (i * 60 + 30) % n, rng))
+    return batches
+
+
+def _fusable_stream(n=600, seed=0, num=8):
+    rng = np.random.default_rng(seed)
+    return [_region_batch(n, (i * 45) % n, rng) for i in range(num)]
+
+
+def _engine(kind, model, g, x, params, fused, async_staging=True, **kw):
+    shards = {"num_shards": jax.device_count()} if "sharded" in kind else {}
+    return create_engine(kind, EngineConfig(
+        model=model, graph=g, x=x, params=params,
+        staging=StagingConfig(async_enabled=async_staging),
+        fusion=FusionConfig(window=4) if fused else None, **shards, **kw))
+
+
+def _state_of(eng):
+    emb = np.array(np.asarray(eng.embeddings))
+    try:
+        hs = [np.array(np.asarray(h)) for h in eng.h]
+    except AttributeError:  # device backend facade exposes h differently
+        hs = []
+    return emb, hs
+
+
+# ---------------------------------------------------------------------- #
+# the acceptance matrix: fused ≡ serial, bitwise, everywhere
+# ---------------------------------------------------------------------- #
+_CELLS = [(k, a, m)
+          for k in ("device", "offload", "sharded", "sharded_offload",
+                    "chunked")
+          # async staging exists only on the host-resident pair; other
+          # substrates ignore the flag, so one cell each suffices
+          for a in ((False, True) if "offload" in k else (True,))
+          for m in ("gcn", "gat")]
+
+
+@pytest.mark.parametrize("kind,async_staging,name", _CELLS)
+def test_fused_bitwise_equals_serial_matrix(kind, async_staging, name):
+    """20-batch mixed stream (forced-fusable + forced-overlapping
+    segments): the fused orchestrator must produce bitwise-identical
+    embeddings AND per-layer host state, fuse the independent runs, and
+    fall back serially on the overlapping ones."""
+    n = 600
+    g = _ring_graph(n)
+    x = np.random.default_rng(3).standard_normal((n, 8)).astype(np.float32)
+    model = make_model(name)
+    params = model.init_layers(jax.random.PRNGKey(0), L_DIMS)
+    batches = _mixed_stream(n, seed=7)
+    runs = {}
+    for fused in (False, True):
+        eng = _engine(kind, model, g, x, params, fused,
+                      async_staging=async_staging)
+        ss = eng._orch.apply_stream(batches)
+        runs[fused] = (_state_of(eng), ss)
+    (emb_s, hs_s), ss_s = runs[False]
+    (emb_f, hs_f), ss_f = runs[True]
+    np.testing.assert_array_equal(emb_s, emb_f)
+    for h0, h1 in zip(hs_s, hs_f):
+        np.testing.assert_array_equal(h0, h1)
+    # the serial loop never fuses; the fused loop must actually fuse the
+    # independent runs and fall back on the clustered one
+    assert (ss_s.fusion_windows, ss_s.fused_batches) == (0, 0)
+    assert ss_f.fusion_windows >= 4  # two fusable runs of 8, window=4
+    assert ss_f.fused_batches >= 16
+    assert ss_f.fusion_fallbacks > 0  # the clustered segment broke up
+    assert len(ss_f.batches) == len(batches)
+
+
+# ---------------------------------------------------------------------- #
+# counter exactness: the greedy reference predicts the loop's counters
+# ---------------------------------------------------------------------- #
+def _reference_counters(model, g, batches, window, L=2):
+    """Independent greedy simulation of the lookahead loop over serially
+    built plans: returns (windows, fused, fallbacks, dispatches)."""
+    fw = FusionWindow(FusionConfig(window=window))
+    pend = []
+    g_cur = g
+    for b in batches:
+        g_new = g_cur.apply_updates(b.ins_src, b.ins_dst, b.del_src,
+                                    b.del_dst, b.ins_weights, b.ins_etypes)
+        plan = build_plan(model, g_cur, g_new, b, L)
+        pend.append(FusionWindow.footprint(plan, b))
+        g_cur = g_new
+    windows = fused = fallbacks = dispatches = 0
+    i = 0
+    while i < len(pend):
+        k = fw.select_prefix(pend[i:i + window])
+        if k >= 2:
+            windows += 1
+            fused += k
+            dispatches += 1
+            i += k
+        else:
+            if len(pend) - i >= 2:
+                fallbacks += 1
+            dispatches += 1
+            i += 1
+    return windows, fused, fallbacks, dispatches
+
+
+def test_fusion_counters_exact_against_greedy_reference():
+    n = 600
+    g = _ring_graph(n)
+    x = np.random.default_rng(1).standard_normal((n, 8)).astype(np.float32)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(0), L_DIMS)
+    batches = _mixed_stream(n, seed=11)
+    exp_w, exp_f, exp_fb, exp_disp = _reference_counters(model, g, batches, 4)
+    eng = _engine("device", model, g, x, params, fused=True)
+    ss = eng._orch.apply_stream(batches)
+    assert ss.fusion_windows == exp_w
+    assert ss.fused_batches == exp_f
+    assert ss.fusion_fallbacks == exp_fb
+    # dispatch-count identity: every fused window saves (k - 1) dispatches
+    assert (len(batches) - (ss.fused_batches - ss.fusion_windows)
+            == exp_disp)
+    # per-constituent flags: each batch reports the width of the dispatch
+    # it rode in, and the window's dispatch time sits on its first member
+    widths = [b.fused_window for b in ss.batches]
+    assert sum(1 for w in widths if w == 1) == len(batches) - exp_f
+    assert sum(1.0 / w for w in widths) == pytest.approx(exp_disp)
+    j = 0
+    while j < len(widths):
+        if widths[j] > 1:
+            k = widths[j]
+            assert widths[j:j + k] == [k] * k
+            assert all(ss.batches[j + m].exec_time_s == 0.0
+                       for m in range(1, k))
+            j += k
+        else:
+            j += 1
+
+
+def test_fully_fusable_stream_exact_counters():
+    """8 far-apart batches, window 4 → exactly two 4-wide windows."""
+    n = 600
+    g = _ring_graph(n)
+    x = np.random.default_rng(2).standard_normal((n, 8)).astype(np.float32)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(0), L_DIMS)
+    eng = _engine("offload", model, g, x, params, fused=True)
+    ss = eng._orch.apply_stream(_fusable_stream(n, seed=4, num=8))
+    assert (ss.fusion_windows, ss.fused_batches, ss.fusion_fallbacks) \
+        == (2, 8, 0)
+    assert [b.fused_window for b in ss.batches] == [4] * 8
+
+
+def test_fusion_never_spans_refresh_boundary():
+    """refresh_every=3 with window=4: every window is capped at the
+    refresh cadence, so no fused constituent crosses a state rebuild —
+    and the result stays bitwise equal to the serial refreshing run."""
+    n = 600
+    g = _ring_graph(n)
+    x = np.random.default_rng(5).standard_normal((n, 8)).astype(np.float32)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(0), L_DIMS)
+    batches = _fusable_stream(n, seed=9, num=9)
+    runs = {}
+    for fused in (False, True):
+        eng = _engine("device", model, g, x, params, fused, refresh_every=3)
+        ss = eng._orch.apply_stream(batches)
+        runs[fused] = (np.array(np.asarray(eng.embeddings)), ss)
+    np.testing.assert_array_equal(runs[False][0], runs[True][0])
+    ss = runs[True][1]
+    assert all(b.fused_window <= 3 for b in ss.batches)
+    assert ss.fused_batches == 9  # 3-wide windows aligned to the cadence
+    assert ss.fusion_windows == 3
+
+
+def test_config_off_switches_are_inert():
+    """window=1 / enabled=False → the serial loop, counters all zero."""
+    n = 300
+    g = _ring_graph(n)
+    x = np.random.default_rng(6).standard_normal((n, 8)).astype(np.float32)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(0), L_DIMS)
+    batches = _fusable_stream(n, seed=3, num=4)
+    ref = None
+    for fusion in (None, FusionConfig(window=1),
+                   FusionConfig(window=4, enabled=False)):
+        eng = create_engine("device", EngineConfig(
+            model=model, graph=g, x=x, params=params, fusion=fusion))
+        ss = eng._orch.apply_stream(batches)
+        assert (ss.fusion_windows, ss.fused_batches,
+                ss.fusion_fallbacks) == (0, 0, 0)
+        emb = np.array(np.asarray(eng.embeddings))
+        if ref is None:
+            ref = emb
+        else:
+            np.testing.assert_array_equal(ref, emb)
+    with pytest.raises(ValueError, match="window"):
+        FusionConfig(window=0)
+
+
+def test_fusion_disabled_under_per_batch_force_schedule():
+    """A per-batch force_mode schedule is indexed by logical batch; the
+    orchestrator must take the serial loop (and still satisfy it)."""
+    n = 300
+    g = _ring_graph(n)
+    x = np.random.default_rng(8).standard_normal((n, 8)).astype(np.float32)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(0), L_DIMS)
+    batches = _fusable_stream(n, seed=2, num=4)
+    pol = ExecutionPolicy(force_mode=["incremental"] * 4)
+    eng = create_engine("device", EngineConfig(
+        model=model, graph=g, x=x, params=params, policy=pol,
+        fusion=FusionConfig(window=4)))
+    ss = eng._orch.apply_stream(batches)
+    assert (ss.fusion_windows, ss.fused_batches) == (0, 0)
+    with pytest.raises(ValueError, match="force_mode"):
+        pol2 = ExecutionPolicy(force_mode=["incremental"])
+        g2 = g.apply_updates(batches[0].ins_src, batches[0].ins_dst,
+                             batches[0].del_src, batches[0].del_dst)
+        pol2.decide_window(build_plan(model, g, g2, batches[0], 2))
+
+
+# ---------------------------------------------------------------------- #
+# frontend: one version per logical batch, snapshot reads stay bitwise
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("kind", ["device", "offload"])
+def test_frontend_snapshot_reads_across_fused_windows(kind):
+    """Every retained version remains bitwise-readable through fused
+    windows: the frontend records one undo record per *logical* batch
+    with pre-images captured against the pre-window state."""
+    n = 600
+    g = _ring_graph(n)
+    x = np.random.default_rng(4).standard_normal((n, 8)).astype(np.float32)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(0), L_DIMS)
+    batches = _mixed_stream(n, seed=13)
+    rows = np.arange(0, n, 13)
+
+    # serial per-version references
+    ref_eng = _engine(kind, model, g, x, params, fused=False)
+    refs = [np.array(ref_eng.snapshot_rows(rows))]
+    for b in batches:
+        ref_eng.apply_batch(b)
+        refs.append(np.array(ref_eng.snapshot_rows(rows)))
+
+    fr = ServingFrontend(_engine(kind, model, g, x, params, fused=True),
+                         max_pending_reads=512,
+                         max_versions=len(batches) + 1)
+    ss = fr.run_stream(batches)
+    assert fr.version == len(batches)
+    assert ss.fusion_windows >= 4 and ss.fused_batches >= 16
+    for v in range(len(batches) + 1):
+        np.testing.assert_array_equal(fr.read(rows, version=v), refs[v])
+
+
+def test_frontend_fused_respects_refresh_floor():
+    """Across a refresh the fused frontend drops undo history exactly like
+    the serial one: floors match, retained reads match, stale pins raise."""
+    from repro.serve import StaleVersionError
+
+    n = 600
+    g = _ring_graph(n)
+    x = np.random.default_rng(9).standard_normal((n, 8)).astype(np.float32)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(0), L_DIMS)
+    batches = _fusable_stream(n, seed=1, num=8)
+    rows = np.arange(0, n, 17)
+    frs = {}
+    for fused in (False, True):
+        fr = ServingFrontend(
+            _engine("offload", model, g, x, params, fused, refresh_every=4),
+            max_versions=len(batches) + 1)
+        fr.run_stream(batches)
+        frs[fused] = fr
+    assert frs[True].min_version == frs[False].min_version == 8
+    np.testing.assert_array_equal(frs[True].read(rows, version=8),
+                                  frs[False].read(rows, version=8))
+    with pytest.raises(StaleVersionError):
+        frs[True].read(rows, version=7)
+
+
+# ---------------------------------------------------------------------- #
+# hysteresis: fused/serial shape alternation must not retrace mid-stream
+# ---------------------------------------------------------------------- #
+def test_fused_shapes_flow_through_shared_hysteresis():
+    """Packing merged plans and single plans through one BucketHysteresis:
+    caps never shrink, and once the fused high-water mark is set, single
+    plans re-use already-seen layouts instead of oscillating."""
+    n = 600
+    g = _ring_graph(n)
+    model = make_model("gcn")
+    batches = _fusable_stream(n, seed=6, num=12)
+    plans = []
+    g_cur = g
+    for b in batches:
+        g_new = g_cur.apply_updates(b.ins_src, b.ins_dst, b.del_src,
+                                    b.del_dst, b.ins_weights, b.ins_etypes)
+        plans.append((build_plan(model, g_cur, g_new, b, 2), b))
+        g_cur = g_new
+    hwm = BucketHysteresis()
+    layouts = []
+    prev_caps = None
+
+    def pack(plan, batch):
+        nonlocal prev_caps
+        packed = pack_plan(plan, batch.feat_vertices, batch.feat_values,
+                           hwm=hwm)
+        if prev_caps is not None:
+            for caps, prev in zip(packed.layout.caps, prev_caps):
+                assert all(c >= p for c, p in zip(caps, prev)), "cap shrank"
+        prev_caps = packed.layout.caps
+        layouts.append(packed.layout)
+
+    # alternate: fused window of 4, then two singles, twice over
+    for lo in (0, 6):
+        quad = plans[lo:lo + 4]
+        merged_plan, merged_batch = FusionWindow.merge(
+            [p for p, _ in quad], [b for _, b in quad])
+        pack(merged_plan, merged_batch)
+        for p, b in plans[lo + 4:lo + 6]:
+            pack(p, b)
+    # second round introduces NO new layouts: the first fused window set
+    # the high-water mark for both shapes (no fused↔serial oscillation)
+    assert set(layouts[3:]) <= set(layouts[:3])
+
+
+def test_fused_stream_hwm_stabilizes_no_retrace():
+    """Engine-level no-retrace: over a periodic fusable stream the device
+    backend's capacity high-water marks stop growing after the first
+    period — every later dispatch reuses an existing packed layout (and
+    therefore an existing trace)."""
+    n = 600
+    g = _ring_graph(n)
+    x = np.random.default_rng(12).standard_normal((n, 8)).astype(np.float32)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(0), L_DIMS)
+    rng = np.random.default_rng(21)
+    stream = []
+    for rep in range(4):  # same shapes every period, fresh regions
+        stream += [_region_batch(n, (i * 60 + rep * 7) % n, rng)
+                   for i in range(4)]
+    eng = _engine("device", model, g, x, params, fused=True)
+    orch = eng._orch
+    orch.apply_stream(stream[:4])
+    caps_after_warmup = eng._backend.hwm.snapshot()
+    ss = orch.apply_stream(stream[4:])
+    assert ss.fused_batches == 12  # every later window fused
+    assert eng._backend.hwm.snapshot() == caps_after_warmup, \
+        "capacity HWM grew mid-stream → a retrace happened"

@@ -55,7 +55,111 @@ def test_cache_config_validation():
         CacheConfig(capacity_rows=0)
     with pytest.raises(ValueError, match="admission"):
         CacheConfig(admission="lru")
-    assert CacheConfig().enabled is True
+    with pytest.raises(ValueError, match="prewarm_rows"):
+        CacheConfig(prewarm_rows=-1)
+    with pytest.raises(ValueError, match="decay"):
+        CacheConfig(decay=1.0)
+    with pytest.raises(ValueError, match="decay"):
+        CacheConfig(decay=-0.1)
+    cfg = CacheConfig()
+    assert cfg.enabled is True
+    assert cfg.prewarm_rows == 0 and cfg.decay == 0.0
+
+
+def test_lfu_decay_lets_new_hot_rows_evict_stale_hubs():
+    """The ISSUE-9 bugfix: without decay, an early hub's frequency count
+    is unbeatable forever; with decay it ages below a newly hot row's."""
+    def run(decay, ticks):
+        cache = HotRowCache(CacheConfig(capacity_rows=1, decay=decay))
+        key, n = ("h", 0), 16
+        cache.plan_reads(key, n, np.array([5]), np.zeros(1))  # freq[5] = 1
+        cache.plan_reads(key, n, np.array([5]), np.zeros(1))  # freq[5] = 2
+        for _ in range(ticks):
+            cache.decay_tick()
+        cache.plan_reads(key, n, np.array([9]), np.zeros(1))  # freq[9] = 1
+        return cache
+    stale = run(decay=0.0, ticks=3)
+    assert stale.stats.evictions == 0  # 1 > 2 never holds: hub pinned
+    aged = run(decay=0.5, ticks=3)
+    assert aged.stats.evictions == 1  # freq[5] aged to 0.25 < 1
+    sp = aged._spaces[("h", 0)]
+    assert sp.slot_of[9] >= 0 and sp.slot_of[5] < 0
+    # decay=0.0 ticks are strict no-ops: small-integer counters stay exact
+    np.testing.assert_array_equal(stale._spaces[("h", 0)].freq[[5, 9]],
+                                  [2.0, 1.0])
+
+
+def test_prewarm_seeds_slots_and_serves_batch0_hits():
+    """prewarm() runs the ordinary touch→admit pipeline and fills the
+    admitted slots' stores, so the first plan_reads over those rows hits."""
+    cache = HotRowCache(CacheConfig(capacity_rows=4, prewarm_rows=4))
+    key, n = ("h", 0), 32
+    top = np.array([7, 3, 11, 20], np.int64)  # backend's top-degree rows
+    vals = np.arange(4 * 8, dtype=np.float32).reshape(4, 8)
+    cache.prewarm(key, n, top, np.array([9.0, 8.0, 7.0, 6.0]), {"h": vals})
+    assert cache.stats.admitted_rows == 4 and cache.stats.hit_rows == 0
+    sp = cache.plan_reads(key, n, np.array([3, 7, 19]), np.zeros(3))
+    np.testing.assert_array_equal(sp.miss_rows, [19])
+    assert cache.stats.hit_rows == 2
+    # the store holds the gathered pre-batch values at the assigned slots
+    st = np.asarray(cache.store(key, "h", (8,)))
+    space = cache._spaces[key]
+    np.testing.assert_array_equal(st[space.slot_of[7]], vals[0])
+    np.testing.assert_array_equal(st[space.slot_of[20]], vals[3])
+
+
+@pytest.mark.parametrize("kind", ["offload", "sharded_offload"])
+def test_prewarm_bitwise_equal_with_warmer_counters(kind):
+    """Engine-level prewarm (ISSUE 9): seeding the slot table from the
+    base graph's top-degree rows changes WHEN rows become resident, never
+    what the kernels compute — embeddings stay bitwise while batch-0
+    misses turn into hits."""
+    x, wl = _mk_stream(n=120, num_batches=10, seed=5)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(0), [8, 8])
+    shards = {"num_shards": jax.device_count()} if kind != "offload" else {}
+    runs = {}
+    for pw in (0, 48):
+        eng = create_engine(kind, _cfg(
+            model, wl, x, params,
+            cache=CacheConfig(capacity_rows=64, prewarm_rows=pw), **shards))
+        ss = eng.apply_stream(wl.batches)
+        runs[pw] = (eng, ss.as_dict())
+    cold, d0 = runs[0]
+    warm, d1 = runs[48]
+    np.testing.assert_array_equal(np.asarray(cold.embeddings),
+                                  np.asarray(warm.embeddings))
+    assert d1["cache_hit_rows"] > d0["cache_hit_rows"]
+    assert d1["cache_miss_rows"] < d0["cache_miss_rows"]
+    # prewarm is deterministic: an identical run reproduces the counters
+    again = create_engine(kind, _cfg(
+        model, wl, x, params,
+        cache=CacheConfig(capacity_rows=64, prewarm_rows=48), **shards))
+    d2 = again.apply_stream(wl.batches).as_dict()
+    for k in ("cache_hit_rows", "cache_miss_rows", "cache_evictions"):
+        assert d1[k] == d2[k]
+
+
+def test_decay_stays_bitwise_on_embeddings():
+    """LFU decay reshapes residency (counters move) but the cache stays
+    invisible to the math."""
+    x, wl = _mk_stream(n=120, num_batches=12, seed=5)
+    model = make_model("gcn")
+    params = model.init_layers(jax.random.PRNGKey(0), [8, 8])
+    runs = {}
+    for dc in (0.0, 0.5):
+        eng = create_engine("offload", _cfg(
+            model, wl, x, params,
+            cache=CacheConfig(capacity_rows=32, decay=dc)))
+        ss = eng.apply_stream(wl.batches)
+        runs[dc] = (np.asarray(eng.embeddings), ss.as_dict())
+    np.testing.assert_array_equal(runs[0.0][0], runs[0.5][0])
+    # decay=0.0 reproduces the default config's counters exactly
+    eng = create_engine("offload", _cfg(
+        model, wl, x, params, cache=CacheConfig(capacity_rows=32)))
+    d_default = eng.apply_stream(wl.batches).as_dict()
+    for k in ("cache_hit_rows", "cache_miss_rows", "cache_evictions"):
+        assert runs[0.0][1][k] == d_default[k]
 
 
 def test_split_residency_exclusion():
@@ -311,7 +415,8 @@ def test_stream_stats_keys_are_pinned_and_documented():
     and every key must appear in the as_dict docstring table."""
     d = StreamStats([], 0.0, 0.0).as_dict()
     assert tuple(d.keys()) == STREAM_STAT_KEYS
-    for key in ("cache_hit_rows", "cache_miss_rows", "cache_evictions"):
+    for key in ("cache_hit_rows", "cache_miss_rows", "cache_evictions",
+                "fusion_windows", "fused_batches", "fusion_fallbacks"):
         assert key in STREAM_STAT_KEYS
     doc = StreamStats.as_dict.__doc__
     for key in STREAM_STAT_KEYS:

@@ -390,6 +390,117 @@ def test_engine_config_policy_hysteresis_threading():
 # ---------------------------------------------------------------------- #
 # StreamStats accounting and the EngineConfig knob
 # ---------------------------------------------------------------------- #
+# online cost-weight calibration (ISSUE 9)
+# ---------------------------------------------------------------------- #
+def test_calibrate_validation_and_passthrough():
+    with pytest.raises(ValueError, match="calibrate_blend"):
+        ExecutionPolicy(calibrate=True, calibrate_blend=1.5)
+    with pytest.raises(ValueError, match="calibrate_alpha"):
+        ExecutionPolicy(calibrate=True, calibrate_alpha=0.0)
+    assert make_policy("adaptive", calibrate=True).calibrate is True
+    assert make_policy("adaptive").calibrate is False
+    # forced-mode policies never calibrate (they are the CI baselines)
+    assert make_policy("incremental", calibrate=True).calibrate is False
+
+
+def test_calibrate_off_is_strict_noop():
+    """The static decision surface must not move: observe() is a no-op and
+    effective_weights() returns the *same dict object* as the weights."""
+    model, wl, x, params = _setup("hub_burst")
+    pol = ExecutionPolicy()
+    for g_old, g_new, b in _graphs_along(wl):
+        d = pol.decide(build_plan(model, g_old, g_new, b, 2))
+        pol.observe(d, 12.34)
+    assert pol.effective_weights() is pol.weights
+    assert all(v is None for v in pol._ema.values())
+
+
+def test_calibrate_ema_update_math():
+    """observe() maintains wall-per-work-unit EMAs with the documented
+    update rule; effective_weights() blends with the ratio-preserving
+    rescale (one measured mode is a fixed point of the blend)."""
+    model, wl, x, params = _setup("hub_burst")
+    pol = ExecutionPolicy(calibrate=True, calibrate_alpha=0.25)
+    g_old, g_new, b = next(_graphs_along(wl))
+    d = pol.decide(build_plan(model, g_old, g_new, b, 2))
+    units = pol._units(d.estimate, d.mode)
+    pol.observe(d, 2.0)
+    assert pol._ema[d.mode] == pytest.approx(2.0 / units)
+    pol.observe(d, 4.0)
+    assert pol._ema[d.mode] == pytest.approx(0.75 * (2.0 / units)
+                                             + 0.25 * (4.0 / units))
+    # zero/negative walls and calibrate=False feeds are ignored
+    pol.observe(d, 0.0)
+    assert pol._ema[d.mode] == pytest.approx(0.75 * (2.0 / units)
+                                             + 0.25 * (4.0 / units))
+    # one measured mode: the rescale pins its blended weight to static
+    w = pol.effective_weights()
+    assert w is not pol.weights
+    assert w[d.mode] == pytest.approx(pol.weights[d.mode])
+
+
+def test_calibrate_two_modes_shift_ratios():
+    """With two measured modes the blend moves the *ratio* toward the
+    measured one while preserving the static magnitude scale."""
+    model, wl, x, params = _setup("hub_burst")
+    pol = ExecutionPolicy(calibrate=True, calibrate_blend=0.5)
+    g_old, g_new, b = next(_graphs_along(wl))
+    plan = build_plan(model, g_old, g_new, b, 2)
+    d = pol.decide(plan)
+    est = d.estimate
+    # synthesize: incremental measured 4x slower per unit than full
+    pol._ema["incremental"] = 4.0e-6
+    pol._ema["full"] = 1.0e-6
+    w = pol.effective_weights()
+    # measured ratio (4.0) exceeds the static 2.0/1.0: incremental's
+    # effective weight rises, full's falls, the mean over measured holds
+    assert w["incremental"] > pol.weights["incremental"]
+    assert w["full"] < pol.weights["full"]
+    total_static = pol.weights["incremental"] + pol.weights["full"]
+    assert w["incremental"] + w["full"] == pytest.approx(total_static)
+    assert w["chunked"] == pol.weights["chunked"]  # unmeasured: static
+    # and costs() prices through the blend
+    assert pol.costs(est)["incremental"] == pytest.approx(
+        w["incremental"] * pol._units(est, "incremental"))
+
+
+def test_engine_config_policy_calibrate_threading():
+    """EngineConfig.policy_calibrate reaches the resolved policy, the
+    orchestrator feeds measured walls back, and the run still completes
+    with sane accounting (decisions are hardware-dependent under
+    calibration, so no exactness is asserted — that is the point of
+    keeping the static model as the CI gate)."""
+    model, wl, x, params = _setup("hub_burst")
+    cfg = EngineConfig(model=model, graph=wl.base, x=x, params=params,
+                       policy="adaptive", policy_calibrate=True)
+    pol = cfg.resolved_policy()
+    assert pol.calibrate is True
+    eng = create_engine("offload", EngineConfig(
+        model=model, graph=wl.base, x=x, params=params, policy=pol))
+    ss = eng.apply_stream(wl.batches)
+    assert len(ss.batches) == len(wl.batches)
+    assert any(v is not None for v in pol._ema.values())
+
+
+def test_decide_window_records_only_accepted_windows():
+    """A declined fused window must not double-count: the serial fallback
+    re-decides each constituent through decide()."""
+    model, wl, x, params = _setup("hub_burst")
+    g_old, g_new, b = next(_graphs_along(wl))
+    plan = build_plan(model, g_old, g_new, b, 2)
+    # huge incremental weight → the window prices off-incremental
+    pol = ExecutionPolicy(incremental_weight=1e9)
+    d = pol.decide_window(plan)
+    assert d.mode != "incremental"
+    assert len(pol.history) == 0 and sum(pol.decisions.values()) == 0
+    # default weights on a small plan → incremental wins → recorded
+    pol2 = ExecutionPolicy()
+    d2 = pol2.decide_window(plan)
+    assert d2.mode == "incremental"
+    assert len(pol2.history) == 1 and pol2.decisions["incremental"] == 1
+
+
+# ---------------------------------------------------------------------- #
 def test_stream_stats_policy_keys_default_zero():
     """Without a policy every batch reports mode="incremental" and the
     policy accounting stays zero — pre-policy baselines keep passing."""
