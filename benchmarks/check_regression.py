@@ -145,6 +145,16 @@ SHARDED_SPECS = (
     MetricSpec(name="fig7/sharded/gcn/hybrid_cache_hit_rows", kind="exact"),
     MetricSpec(name="fig7/sharded/gcn/hybrid_cache_miss_rows", kind="exact"),
     MetricSpec(name="fig7/sharded/gcn/hybrid_cache_evictions", kind="exact"),
+    # per-consumer halo exchange (ISSUE 10): rows-sent under ppermute is
+    # the number of unique (owner, consumer, row) deliveries — a pure
+    # function of the plans, gated exactly (tolerance 0).  The ceiling
+    # row pins the global-frontier psum broadcast volume the exchange
+    # replaced; the emitting cell (fig7_response_time._sharded_comms_cell)
+    # additionally fails the CI step unless rows_sent is strictly below
+    # it with bitwise-equal embeddings.
+    MetricSpec(name="fig7/sharded/gcn/comms_halo_rows_sent", kind="exact"),
+    MetricSpec(name="fig7/sharded/gcn/comms_psum_ceiling_rows",
+               kind="exact"),
 )
 
 #: ISSUE-8 hot-row-cache expectations on the deterministic hub_burst smoke
@@ -157,6 +167,18 @@ SHARDED_SPECS = (
 CACHE_EXPECTED = {
     "smoke": {"hit_rows": 580, "miss_rows": 504, "evictions": 0},
     "sharded": {"hit_rows": 616, "miss_rows": 532, "evictions": 0},
+}
+
+#: ISSUE-10 per-consumer halo-exchange expectations on the deterministic
+#: sharded smoke stream (powerlaw n=300, 6 batches, the CI multi-device
+#: job's 8-way mesh), shared by the emitting cell
+#: (fig7_response_time._sharded_comms_cell) and the exact gates above.
+#: ``halo_rows_sent`` counts unique (owner, consumer, row) ppermute
+#: deliveries over the stream; ``psum_ceiling_rows`` is the legacy
+#: global-frontier broadcast volume (halo rows × S) the exchange
+#: replaced — both are pure functions of the Alg.-4 plans.
+COMMS_EXPECTED = {
+    "sharded": {"halo_rows_sent": 157, "psum_ceiling_rows": 584},
 }
 
 #: ISSUE-9 batch-window-fusion expectations on the deterministic fusable

@@ -313,8 +313,56 @@ def smoke_sharded(num_shards: int):
     if halo_per_batch > 64:
         failures.append(f"halo_rows_per_batch={halo_per_batch:.1f} exceeds 64")
     failures += _sharded_cache_cell(num_shards)
+    failures += _sharded_comms_cell(num_shards, model, params, wl, x)
     if failures:
         raise SystemExit("sharded smoke gate FAILED: " + "; ".join(failures))
+
+
+def _sharded_comms_cell(num_shards, model, params, wl, x):
+    """Per-consumer halo exchange (ISSUE 10): the ppermute send-recv
+    schedules vs the legacy global-frontier psum on the same deterministic
+    stream.  Emits the gated ``comms_halo_rows_sent`` (exact: unique
+    (owner, consumer, row) deliveries are a pure function of the plans)
+    and the psum broadcast volume as its pinned ceiling; fails the CI step
+    outright on any embedding divergence (the two modes are bitwise-equal
+    by construction) or if the per-consumer volume is not strictly below
+    the broadcast ceiling.  Returns failure strings for the caller's
+    SystemExit."""
+    import numpy as np
+
+    from benchmarks.check_regression import COMMS_EXPECTED
+    from repro.dist.sharding import CommsConfig
+    from repro.serve import EngineConfig, create_engine
+
+    runs = {}
+    for mode in ("psum", "ppermute"):
+        eng = create_engine("sharded", EngineConfig(
+            model=model, graph=wl.base, x=x, params=params,
+            num_shards=num_shards, comms=CommsConfig(halo=mode)))
+        ss = eng.apply_stream(wl.batches)
+        runs[mode] = (np.asarray(eng.embeddings), ss)
+    emb_p, ss_p = runs["psum"]
+    emb_q, ss_q = runs["ppermute"]
+    exp = COMMS_EXPECTED["sharded"]
+    emit("fig7/sharded/gcn/comms_halo_rows_sent",
+         float(ss_q.comms_halo_rows_sent),
+         f"expect_{exp['halo_rows_sent']}")
+    emit("fig7/sharded/gcn/comms_halo_bytes",
+         float(ss_q.comms_halo_bytes), f"S={num_shards}")
+    emit("fig7/sharded/gcn/comms_psum_ceiling_rows",
+         float(ss_p.comms_halo_rows_sent),
+         f"expect_{exp['psum_ceiling_rows']}")
+    failures = []
+    if not np.array_equal(emb_p, emb_q):
+        diff = float(np.abs(emb_p - emb_q).max())
+        failures.append(
+            f"ppermute-vs-psum max|diff|={diff:g} (expected 0)")
+    if not 0 < ss_q.comms_halo_rows_sent < ss_p.comms_halo_rows_sent:
+        failures.append(
+            f"comms_halo_rows_sent={ss_q.comms_halo_rows_sent} not "
+            f"strictly below the psum broadcast ceiling "
+            f"{ss_p.comms_halo_rows_sent}")
+    return failures
 
 
 def _sharded_cache_cell(num_shards: int):

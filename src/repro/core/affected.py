@@ -20,6 +20,7 @@ capacity slot, so they can never alias live data.
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import lru_cache
 from typing import Dict, List, Optional, Tuple
 
@@ -644,6 +645,12 @@ class ShardedLayout:
     caps: Tuple[Tuple[int, int, int, int, int, int, int], ...]
     # per-layer Pallas block-CSR schedule capacity (None → XLA segment-sum)
     pallas_ecaps: Optional[Tuple[int, ...]] = None
+    # halo exchange strategy: "psum" broadcasts the global frontier, or
+    # "ppermute" runs the per-consumer rotation-round send/recv schedules
+    # (a static trace key — each mode compiles its own fused step)
+    halo_mode: str = "psum"
+    # per-layer (owner, consumer)-pair capacity of the ppermute schedules
+    pair_caps: Optional[Tuple[int, ...]] = None
 
 
 @lru_cache(maxsize=None)
@@ -705,6 +712,14 @@ class ShardedPlan:
     pallas_sh: Optional[Tuple[Tuple[np.ndarray, np.ndarray, np.ndarray], ...]] = None
     # global ids of final-layer rows this plan may write (serving undo log)
     out_rows_final: Optional[np.ndarray] = None
+    # per-consumer halo schedules ("ppermute" mode): one
+    # (send_pos [S, S-1, pair_cap], recv_pos [S, S-1, pair_cap]) pair per
+    # layer — round k moves pair (owner o → consumer (o+k) mod S)
+    comms_sh: Optional[Tuple[Tuple[np.ndarray, np.ndarray], ...]] = None
+    # per-layer halo rows this plan moves between shards under its mode:
+    # ppermute → Σ per-pair remote deliveries; psum → halo_rows × S (the
+    # global-frontier broadcast volume the CI gate uses as the ceiling)
+    comms_rows: Optional[Tuple[int, ...]] = None
 
 
 def _owner_runs(owners: np.ndarray, n_shards: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -751,6 +766,8 @@ def shard_plan(
     hwm: Optional[BucketHysteresis] = None,
     pallas: bool = False,
     single_pass: bool = True,
+    halo_mode: str = "psum",
+    pair_hysteresis: float = 0.0,
 ) -> ShardedPlan:
     """Partition a :class:`BatchPlan` row-wise over ``n_shards`` and pack it
     into the sharded transfer format (see module section comment).
@@ -760,7 +777,12 @@ def shard_plan(
     O(E log E + S·caps) host time, flat in shard count.  ``False`` keeps the
     original per-shard re-scan (O(S·E)) as the equality reference.
     ``pallas=True`` additionally emits per-shard block-CSR schedules for the
-    Pallas delta scatter (one stacked triple per layer)."""
+    Pallas delta scatter (one stacked triple per layer).
+    ``halo_mode="ppermute"`` additionally emits the per-consumer rotation
+    send/recv schedules (:func:`_sharded_comms_schedules`); the resolved
+    mode lands on the layout as a static trace key.  ``pair_hysteresis``
+    pads each per-pair capacity ``(1 + pair_hysteresis)×`` above its raw
+    size before bucketing (burst headroom → fewer retraces)."""
     n = plan.deg_old.shape[0] - 1
     rows_per = shard_rows(n, n_shards)
     S = n_shards
@@ -835,6 +857,18 @@ def shard_plan(
         )
         layout = dataclasses.replace(layout, pallas_ecaps=pcaps)
 
+    comms_sh = None
+    if halo_mode == "ppermute":
+        comms_sh, pair_caps, comms_rows = _sharded_comms_schedules(
+            layout, layers, hwm, pair_hysteresis
+        )
+        layout = dataclasses.replace(
+            layout, halo_mode="ppermute", pair_caps=pair_caps)
+    else:
+        # broadcast volume: every shard receives every layer's full halo
+        comms_rows = tuple(
+            int(art["halo_rows"].shape[0]) * S for art in layers)
+
     return ShardedPlan(
         layout=layout,
         idx_sh=idx_sh,
@@ -849,6 +883,8 @@ def shard_plan(
         n_halo_rows=halo_total,
         pallas_sh=pallas_sh,
         out_rows_final=final_write_rows(plan),
+        comms_sh=comms_sh,
+        comms_rows=comms_rows,
     )
 
 
@@ -1074,6 +1110,70 @@ def _sharded_pallas_schedules(layout, idx_sl, msk_sl, idx_sh, msk_sh,
     return tuple(out), tuple(pcaps)
 
 
+def _remote_deliveries(art: Dict[str, np.ndarray], rows_per: int,
+                       n: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Unique (owner, consumer, row) halo deliveries of one layer: every
+    source row some consuming shard gathers but does not own, deduplicated
+    per consumer — the value-independent ground truth both the ppermute
+    schedules and the coverage tests are built from."""
+    es, fs = art["es"], art["fs"]
+    re_m = es // rows_per != art["d_own"]
+    rf_m = fs // rows_per != art["fe_own"]
+    src = np.concatenate([es[re_m], fs[rf_m]])
+    cons = np.concatenate([art["d_own"][re_m], art["fe_own"][rf_m]])
+    key = np.unique(cons.astype(np.int64) * (n + 1) + src)
+    cons_u, src_u = key // (n + 1), key % (n + 1)
+    return src_u // rows_per, cons_u, src_u
+
+
+def _sharded_comms_schedules(layout, layers, hwm: Optional[BucketHysteresis],
+                             pair_hysteresis: float):
+    """Per-consumer rotation send/recv schedules for the ppermute halo
+    exchange, one (send_pos, recv_pos) pair of ``[S, S-1, pair_cap]`` int32
+    tables per layer.
+
+    Round ``k`` (1-based) permutes shard ``j → (j+k) mod S``, so the pair
+    (owner o → consumer c) rides round ``(c - o) mod S``: ``send_pos[o,
+    k-1]`` holds the owner-local positions (pad → ``rows_per``, the block's
+    scratch row) and ``recv_pos[c, k-1]`` the consumer's halo-slot
+    positions (pad → ``halo_cap``, the recv buffer's dump row).  All shards
+    and rounds of a layer share one hysteresis-held pair capacity so the
+    stacked tables ship under the plan sharding without retracing."""
+    S, rows_per, n = layout.n_shards, layout.rows_per, layout.n
+    K = S - 1
+    out, pair_caps, rows_sent = [], [], []
+    for l, art in enumerate(layers):
+        halo_rows = art["halo_rows"]
+        halo_cap = layout.caps[l][5]
+        own_u, cons_u, src_u = _remote_deliveries(art, rows_per, n)
+        rows_sent.append(int(src_u.shape[0]))
+
+        order = np.lexsort((src_u, cons_u, own_u))
+        own_u, cons_u, src_u = own_u[order], cons_u[order], src_u[order]
+        pair_key = own_u * S + cons_u
+        starts = np.concatenate([
+            [0], np.flatnonzero(np.diff(pair_key)) + 1, [pair_key.size],
+        ]) if pair_key.size else np.zeros(1, np.int64)
+        raw_max = int(np.diff(starts).max()) if pair_key.size else 0
+        cap = _cap_of(hwm, (l, "pair"),
+                      int(math.ceil(raw_max * (1.0 + pair_hysteresis))))
+
+        send = np.full((S, K, cap), rows_per, np.int32)
+        recv = np.full((S, K, cap), halo_cap, np.int32)
+        for a, b in zip(starts[:-1], starts[1:]):
+            if b == a:
+                continue
+            o, c = int(own_u[a]), int(cons_u[a])
+            k = (c - o) % S
+            rows = src_u[a:b]
+            send[o, k - 1, : b - a] = (rows - o * rows_per).astype(np.int32)
+            recv[c, k - 1, : b - a] = np.searchsorted(
+                halo_rows, rows).astype(np.int32)
+        out.append((send, recv))
+        pair_caps.append(cap)
+    return tuple(out), tuple(pair_caps), tuple(rows_sent)
+
+
 def build_packed_plan(
     model: GNNModel,
     g_old: CSRGraph,
@@ -1228,6 +1328,15 @@ class HybridLayerPlan:
     idx_sh: np.ndarray  # int32 [S, idx_len]
     flt_sh: np.ndarray  # float32 [S, flt_len] (incl. compact deg tables)
     msk_sh: np.ndarray  # bool [S, msk_len]
+    # live need rows whose owner is another shard — the halo this layer
+    # moves between shards regardless of serving path (comms counters)
+    n_halo_remote: int = 0
+    # device-served new-view patch (halo_mode="ppermute"): flat [S·nh_cap]
+    # positions whose rows the *previous* layer just wrote, and the source
+    # index into its device-resident outputs (l=0: into the batch's feature
+    # rows) — these rows skip the staged h_new pipeline entirely
+    patch_pos: Optional[np.ndarray] = None
+    patch_src: Optional[np.ndarray] = None
 
     @property
     def nh_cap(self) -> int:
@@ -1243,19 +1352,50 @@ class HybridPlan:
     layers: List[HybridLayerPlan]
 
 
+def _match_positions(dst_keys: np.ndarray, src_rows: np.ndarray):
+    """Positions of ``dst_keys`` found in ``src_rows`` plus the matching
+    source indices — the same match ``_override_rows`` performs on the
+    host path (``src_rows`` unique), so a device-side patch built from
+    these tables is position-for-position identical."""
+    if src_rows.size == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    order = np.argsort(src_rows)
+    pos = np.searchsorted(src_rows[order], dst_keys)
+    pos = np.clip(pos, 0, src_rows.size - 1)
+    hit = src_rows[order][pos] == dst_keys
+    return (np.flatnonzero(hit).astype(np.int64),
+            order[pos[hit]].astype(np.int64))
+
+
 def hybrid_plan(
     plan: BatchPlan,
     n_shards: int,
     hwm: Optional[BucketHysteresis] = None,
+    feat_vertices: Optional[np.ndarray] = None,
+    halo_mode: str = "psum",
 ) -> HybridPlan:
     """Partition a :class:`BatchPlan` by destination-row owner and emit the
     per-shard compact staging tables (see section comment).  All scatters
     are owner-local by construction; the gather set (``need_h``) may span
-    other shards' rows — those are served from host blocks at staging time."""
+    other shards' rows — those are served from host blocks at staging time.
+
+    ``halo_mode="ppermute"`` additionally emits the device-served new-view
+    patch tables (``patch_pos``/``patch_src``): the rows of each layer's
+    gather set the previous layer just wrote are split out at plan time and
+    served from its still-device-resident outputs (l=0: from the batch's
+    feature values), so the staged ``h_new`` buffer — and its H2D copy —
+    disappears.  ``feat_vertices`` is the batch's feature-update row list
+    (the l=0 patch source); only consulted in ppermute mode."""
     n = plan.deg_old.shape[0] - 1
     rows_per = shard_rows(n, n_shards)
     S = n_shards
     out_layers: List[HybridLayerPlan] = []
+    device_patch = halo_mode == "ppermute"
+    if feat_vertices is not None and np.asarray(feat_vertices).size:
+        prev_keys = np.asarray(feat_vertices, np.int64)
+    else:
+        prev_keys = np.zeros(0, np.int64)
+    prev_live_pos: Optional[np.ndarray] = None
 
     for l, lp in enumerate(plan.layers):
         art = _live_owner_partition(lp, rows_per)
@@ -1370,11 +1510,26 @@ def hybrid_plan(
             msk_sh[s, dm["f_emask"].start : dm["f_emask"].start + nfe] = True
             msk_sh[s, dm["out_mask"].start : dm["out_mask"].start + no] = True
 
+        n_halo_remote = sum(
+            int((need_list[s] // rows_per != s).sum()) for s in range(S))
+
+        patch_pos = patch_src = None
+        if device_patch:
+            dst_keys = np.where(need_mask, need_h, -1).reshape(-1)
+            patch_pos, patch_src = _match_positions(dst_keys, prev_keys)
+            if l > 0:  # compose: index into live srows → flat ws position
+                patch_src = prev_live_pos[patch_src]
+            prev_keys = srows[srows_mask].astype(np.int64)
+            prev_live_pos = np.flatnonzero(
+                srows_mask.reshape(-1)).astype(np.int64)
+
         out_layers.append(HybridLayerPlan(
             layout=llayout,
             need_h=need_h, need_mask=need_mask,
             srows=srows, srows_mask=srows_mask,
             idx_sh=idx_sh, flt_sh=flt_sh, msk_sh=msk_sh,
+            n_halo_remote=n_halo_remote,
+            patch_pos=patch_pos, patch_src=patch_src,
         ))
 
     return HybridPlan(layers=out_layers)

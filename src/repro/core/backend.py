@@ -175,6 +175,13 @@ class StreamStats:
     decisions), CI-gated exactly on the hub_burst smoke cell.  All three
     stay zero for backends without a cache (or with ``enabled=False``).
 
+    Halo-exchange counters (ISSUE 10): ``comms_halo_rows_sent`` /
+    ``comms_halo_bytes`` mirror the sharded backends'
+    :class:`CommsStats` over the stream — plan-derived and deterministic
+    (under ``halo="ppermute"`` they count per-consumer deliveries; under
+    ``"psum"`` the global-frontier broadcast volume, the ceiling the CI
+    gate compares against).  Both stay zero for unsharded backends.
+
     ``StreamStats`` is the single result type for *every* entry point
     (``apply_stream``, the serving front-end, the bench cells);
     :meth:`as_dict` is the normalized scalar view the benchmark emitters
@@ -202,6 +209,9 @@ class StreamStats:
     fusion_windows: int = 0
     fused_batches: int = 0
     fusion_fallbacks: int = 0
+    # halo-exchange counters (ISSUE 10): plan-derived, deterministic
+    comms_halo_rows_sent: int = 0
+    comms_halo_bytes: int = 0
 
     @property
     def mean_batch_s(self) -> float:
@@ -240,6 +250,8 @@ class StreamStats:
         fusion_windows              fused multi-batch dispatches (D)
         fused_batches               batches absorbed into fused windows (D)
         fusion_fallbacks            windows broken up by overlap/policy (D)
+        comms_halo_rows_sent        halo rows moved between shards (D)
+        comms_halo_bytes            halo bytes moved between shards (D)
         policy_incremental_batches  batches decided incremental (D)
         policy_chunked_batches      batches decided chunked-subset (D)
         policy_full_batches         batches decided full recompute (D)
@@ -273,6 +285,11 @@ class StreamStats:
             "fusion_windows": self.fusion_windows,
             "fused_batches": self.fused_batches,
             "fusion_fallbacks": self.fusion_fallbacks,
+            # halo-exchange counters (ISSUE 10): plan-derived (never read
+            # from device), deterministic, gated exactly on the 8-shard
+            # smoke cell.  Zero for unsharded backends.
+            "comms_halo_rows_sent": self.comms_halo_rows_sent,
+            "comms_halo_bytes": self.comms_halo_bytes,
             # adaptive-execution-policy accounting (ISSUE 7): per-mode
             # decision counts and the cost model's raw edge-work, both
             # deterministic (CI-gated exactly in the adversarial suite).
@@ -295,6 +312,43 @@ class StreamStats:
 STREAM_STAT_KEYS: Tuple[str, ...] = tuple(
     StreamStats([], 0.0, 0.0).as_dict().keys()
 )
+
+
+@dataclasses.dataclass(frozen=True)
+class CommsStats:
+    """Cumulative halo-exchange volume of a sharded backend (ISSUE 10).
+
+    Plan-derived — computed from the value-independent per-consumer
+    delivery sets, never measured off the device — so the counters are
+    bit-stable and CI-gateable.  ``halo_rows_sent`` counts (row, consumer)
+    deliveries: under ``halo="ppermute"`` each halo row is counted once
+    per shard that actually gathers it; under ``"psum"`` once per shard
+    on the mesh (the broadcast ceiling).  ``halo_bytes`` weights each
+    delivery by the rows' staged payload (old+new views where both
+    cross)."""
+
+    halo_rows_sent: int = 0
+    halo_bytes: int = 0
+
+
+def _resolve_backend_comms(comms, use_pallas_delta: Optional[bool],
+                           name: str):
+    """Canonicalize a sharded backend's comms knobs: the typed
+    :class:`~repro.dist.sharding.CommsConfig` is the documented surface;
+    the loose ``use_pallas_delta=`` kwarg survives as a deprecated alias
+    that folds into it (None — the default — means "not passed")."""
+    from repro.dist.sharding import CommsConfig
+
+    if use_pallas_delta is not None:
+        warnings.warn(
+            f"{name}(use_pallas_delta=...) is a deprecated alias; pass "
+            f"comms=CommsConfig(use_pallas_delta=...) (or create the "
+            f"engine with create_engine and EngineConfig.comms) instead",
+            DeprecationWarning, stacklevel=3)
+        if comms is None:
+            return CommsConfig(use_pallas_delta=use_pallas_delta)
+        return dataclasses.replace(comms, use_pallas_delta=use_pallas_delta)
+    return comms if comms is not None else CommsConfig()
 
 
 # ====================================================================== #
@@ -345,6 +399,11 @@ class StateBackend(abc.ABC):
         """Snapshot of the backend's device hot-row-cache counters (None
         when the substrate has no :class:`repro.serve.hotcache.HotRowCache`
         attached)."""
+        return None
+
+    def comms_snapshot(self) -> Optional[CommsStats]:
+        """Snapshot of the backend's halo-exchange counters (None for
+        unsharded substrates — no inter-shard traffic exists)."""
         return None
 
     # ------------------------------------------------------------------ #
@@ -732,6 +791,7 @@ class StreamOrchestrator:
         prefetch_hits = 0  # batches whose plan was built behind execution
         staging0 = self.backend.staging_snapshot()
         cache0 = self.backend.cache_snapshot()
+        comms0 = self.backend.comms_snapshot()
 
         tp = time.perf_counter()
         g_new = self._apply_graph(batches[0])
@@ -796,6 +856,10 @@ class StreamOrchestrator:
             ss.cache_hit_rows = c1.hit_rows - cache0.hit_rows
             ss.cache_miss_rows = c1.miss_rows - cache0.miss_rows
             ss.cache_evictions = c1.evictions - cache0.evictions
+        if comms0 is not None:
+            m1 = self.backend.comms_snapshot()
+            ss.comms_halo_rows_sent = m1.halo_rows_sent - comms0.halo_rows_sent
+            ss.comms_halo_bytes = m1.halo_bytes - comms0.halo_bytes
         return ss
 
     # ------------------------------------------------------------------ #
@@ -880,6 +944,7 @@ class StreamOrchestrator:
                    self.fusion_fallbacks)
         staging0 = self.backend.staging_snapshot()
         cache0 = self.backend.cache_snapshot()
+        comms0 = self.backend.comms_snapshot()
 
         pending: List[_PendingPlan] = []
         nxt = 0  # next batch index to plan
@@ -987,6 +1052,10 @@ class StreamOrchestrator:
             ss.cache_hit_rows = c1.hit_rows - cache0.hit_rows
             ss.cache_miss_rows = c1.miss_rows - cache0.miss_rows
             ss.cache_evictions = c1.evictions - cache0.evictions
+        if comms0 is not None:
+            m1 = self.backend.comms_snapshot()
+            ss.comms_halo_rows_sent = m1.halo_rows_sent - comms0.halo_rows_sent
+            ss.comms_halo_bytes = m1.halo_bytes - comms0.halo_bytes
         return ss
 
     def apply_window(self, batches: Sequence[UpdateBatch],
@@ -2074,8 +2143,15 @@ class ShardBackend(_StreamMeshMixin, StateBackend):
     ``repro.dist`` mesh as stacked ``[S, rows_per+1, ·]`` arrays; each
     batch's plan is partitioned per shard at plan time
     (:func:`repro.core.affected.shard_plan`) and runs as one donated,
-    shard_map'd L-layer step (:func:`repro.core.incremental.sharded_step_fn`)
-    with one frontier-bounded ``psum`` per layer."""
+    shard_map'd L-layer step (:func:`repro.core.incremental.sharded_step_fn`).
+
+    The per-layer halo exchange is governed by
+    :class:`~repro.dist.sharding.CommsConfig` (ISSUE 10): ``halo="psum"``
+    broadcasts the global frontier (per-device bytes scale with the global
+    frontier); ``"ppermute"`` — the ``"auto"`` default on any multi-shard
+    mesh — runs the plan-time per-consumer rotation schedules, so each
+    shard's traffic scales with its own halo.  Both modes are bitwise-equal
+    (pinned by tests/test_comms.py)."""
 
     def __init__(
         self,
@@ -2086,19 +2162,27 @@ class ShardBackend(_StreamMeshMixin, StateBackend):
         mesh=None,
         num_shards: Optional[int] = None,
         shcfg=None,
-        use_pallas_delta: bool = False,
+        comms=None,
+        use_pallas_delta: Optional[bool] = None,
     ):
         self.model = model
         self.L = len(list(params))
         self.n = graph.n
-        self.use_pallas_delta = use_pallas_delta
+        self.comms = _resolve_backend_comms(comms, use_pallas_delta,
+                                            "ShardBackend")
+        self.use_pallas_delta = self.comms.use_pallas_delta
         self._init_stream_mesh(graph, mesh, num_shards, shcfg)
+        # "auto" collapses once per backend: the resolved mode is a static
+        # trace key, so it must not flip batch to batch
+        self.halo_mode = self.comms.resolve_halo(self.S)
         self._params_host = list(params)
         # step inputs must all live on the mesh: replicate params once
         self.params = jax.device_put(tuple(params), self._rep_sh)
         self._step = sharded_step_fn(model, self.mesh, self.axis)
         self.hwm = BucketHysteresis()
         self.halo_rows_total = 0
+        self._comms_rows_sent = 0
+        self._comms_bytes = 0
         self._x_host = np.asarray(x, np.float32)
         self._init_state(graph)
 
@@ -2205,13 +2289,20 @@ class ShardBackend(_StreamMeshMixin, StateBackend):
         plan = (base_plan if base_plan is not None
                 else build_plan(self.model, g_old, g_new, batch, self.L))
         return shard_plan(plan, self.S, batch.feat_vertices, batch.feat_values,
-                          hwm=self.hwm, pallas=self.use_pallas_delta)
+                          hwm=self.hwm, pallas=self.use_pallas_delta,
+                          halo_mode=self.halo_mode,
+                          pair_hysteresis=self.comms.pair_capacity_hysteresis)
+
+    def comms_snapshot(self) -> CommsStats:
+        return CommsStats(halo_rows_sent=self._comms_rows_sent,
+                          halo_bytes=self._comms_bytes)
 
     def dispatch(self, sp: ShardedPlan) -> None:
         """One sharded device_put (each device gets only its plan slice),
         one shard_map'd fused-step dispatch."""
-        idx_sh, flt_sh, msk_sh, pallas_sh = jax.device_put(
-            (sp.idx_sh, sp.flt_sh, sp.msk_sh, sp.pallas_sh or ()), self._plan_sh
+        idx_sh, flt_sh, msk_sh, pallas_sh, comms_sh = jax.device_put(
+            (sp.idx_sh, sp.flt_sh, sp.msk_sh, sp.pallas_sh or (),
+             sp.comms_sh or ()), self._plan_sh
         )
         fv = sp.feat_vals if sp.feat_vals is not None else np.zeros(
             (0, self._x_host.shape[1]), np.float32
@@ -2224,10 +2315,16 @@ class ShardBackend(_StreamMeshMixin, StateBackend):
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable"
             )
+            # plan-derived halo traffic: each delivered row carries its
+            # old+new previous-layer views (the concatenated halo payload)
+            for l, rows_l in enumerate(sp.comms_rows or ()):
+                self._comms_rows_sent += rows_l
+                self._comms_bytes += rows_l * 2 * int(self._h[l].shape[-1]) * 4
             hs, as_, ncts = self._step(
                 sp.layout, self.params,
                 tuple(self._h), tuple(self._a), tuple(self._nct),
                 idx_sh, flt_sh, msk_sh, idx_rep, msk_rep, feat_vals, pallas_sh,
+                comms_sh,
             )
         self._h = list(hs)
         self._a = list(as_)
@@ -2274,6 +2371,17 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
     affected rows.  Device residency is therefore O(per-shard affected
     subgraph), never O(V): the persistent state never touches HBM.
 
+    Under ``CommsConfig(halo="ppermute")`` (the ``"auto"`` default on any
+    multi-shard mesh) the uncached path additionally takes the
+    **device-served fast path** (ISSUE 10): the rows of each layer's
+    gather set that the previous layer just wrote are split out at plan
+    time (``HybridLayerPlan.patch_pos``/``patch_src``) and patched on
+    device from its still-resident outputs, so the staged ``h_new``
+    buffer — a host-derived copy of ``h_old`` outside those rows — never
+    stages at all.  Bitwise-equal to the staged path (the pristine-gather
+    contract holds because halo rows are never written by the previous
+    layer's owner-local scatter); pinned by tests/test_comms.py.
+
     The device step is one shard_map'd compact layer over the stacked
     staging buffers (:func:`repro.core.incremental.hybrid_layer_step_fn`),
     L dispatches per batch.  Host staging (the per-shard gathers and the
@@ -2297,12 +2405,16 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
         async_staging: bool = True,
         cache: Optional[HotRowCache] = None,
         staging_depth: int = 2,
+        comms=None,
     ):
         self.model = model
         self.params = list(params)
         self.L = len(self.params)
         self.n = graph.n
+        self.comms = _resolve_backend_comms(comms, None,
+                                            "ShardedOffloadBackend")
         self._init_stream_mesh(graph, mesh, num_shards, shcfg)
+        self.halo_mode = self.comms.resolve_halo(self.S)
         self._params_dev = jax.device_put(tuple(params), self._rep_sh)
         self._step = hybrid_layer_step_fn(model, self.mesh, self.axis)
         self.hwm = BucketHysteresis()
@@ -2320,6 +2432,10 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
         # peak bytes simultaneously staged on the mesh for one layer step —
         # the backend's entire HBM footprint (state is host-resident)
         self.peak_device_bytes = 0
+        # plan-derived halo traffic (ISSUE 10): rows a shard gathers but
+        # does not own, crossing through the exchange medium
+        self._comms_rows_sent = 0
+        self._comms_bytes = 0
         self._init_state(graph, np.asarray(x, np.float32))
         self._prewarm_cache(graph)
 
@@ -2420,11 +2536,17 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
              base_plan: Optional[BatchPlan] = None) -> _HybridPrep:
         plan = (base_plan if base_plan is not None
                 else build_plan(self.model, g_old, g_new, batch, self.L))
-        hp = hybrid_plan(plan, self.S, hwm=self.hwm)
+        hp = hybrid_plan(plan, self.S, hwm=self.hwm,
+                         feat_vertices=batch.feat_vertices,
+                         halo_mode=self.halo_mode)
         cache_ops = (self._plan_cache(plan, batch, hp.layers)
                      if self._cache is not None else None)
         return _HybridPrep(plan=plan, batch=batch, layers=hp.layers,
                            cache_ops=cache_ops)
+
+    def comms_snapshot(self) -> CommsStats:
+        return CommsStats(halo_rows_sent=self._comms_rows_sent,
+                          halo_bytes=self._comms_bytes)
 
     def _plan_cache(self, plan: BatchPlan, batch: UpdateBatch,
                     layers: List[HybridLayerPlan]) -> List[_CacheLayerOps]:
@@ -2502,14 +2624,27 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
                 partial(self._scatter_feats, prev_rows, prev_new),
                 nbytes=int(prev_new.nbytes), tag="feat")
 
-        # cached path: the previous layer's stacked outputs stay resident
-        # so the new-view patch happens on device (flat [S·cap] positions)
+        # plan-derived halo traffic: every live need row with a remote
+        # owner crosses the exchange medium once (legacy mode twice — the
+        # staged h_new copy ships the same remote rows again)
+        h_new_copies = 1 if self.halo_mode == "ppermute" else 2
+        for l, tr in enumerate(prep.layers):
+            self._comms_rows_sent += tr.n_halo_remote * h_new_copies
+            self._comms_bytes += (tr.n_halo_remote
+                                  * int(self.h[l].shape[2]) * 4 * h_new_copies)
+
+        # cached / device-served paths: the previous layer's stacked
+        # outputs stay resident so the new-view patch happens on device
+        # (flat [S·cap] positions)
         prev_dev = jnp.asarray(prev_new) if prev_rows.size else None
         final = None
         for l, tr in enumerate(prep.layers):
             staged = pipe.wait_gather(tickets[l])
             if ops is None:
-                outs = self._layer_exec(l, tr, staged, prev_rows, prev_new)
+                outs = self._layer_exec(l, tr, staged, prev_rows, prev_new,
+                                        prev_dev)
+                if self.halo_mode == "ppermute":
+                    prev_dev = outs[2].reshape(self.S * tr.ns_cap, -1)
             else:
                 outs = self._layer_exec_cached(l, tr, staged, ops[l], prev_dev)
                 prev_dev = outs[2].reshape(self.S * tr.ns_cap, -1)
@@ -2537,7 +2672,18 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
         gathers fill the double-buffered staging sets with one ``np.take``
         each.  With the hot-row cache enabled only the plan's cold misses
         stage (flat row lists; every miss is a live position, and the
-        assembled workspace's dead positions are zero by construction)."""
+        assembled workspace's dead positions are zero by construction).
+
+        In device-served halo mode (``halo_mode != "psum"``) the host
+        ``h_new`` copy is skipped entirely: the previous layer's stacked
+        outputs stay device-resident and :meth:`_layer_exec` patches the
+        new view from them, so the staging pipeline never ships the same
+        bytes twice.  In legacy psum mode the copy is still staged, but
+        keyed ``"_h_new"`` so the staging accountant counts only bytes
+        actually read from host state — the copy derives byte-for-byte
+        from the ``h_old`` gather in the same job (the old double-count
+        inflated ``staged_bytes`` whenever a halo row was needed by two
+        consecutive layers)."""
         if cops is not None:
             d_in = self.h[l].shape[2]
             nh_m, ns_m = cops.h_miss_src.shape[0], cops.s_miss_src.shape[0]
@@ -2564,8 +2710,11 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
                 tr.need_h.reshape(-1), axis=0, out=h_old)
         h_old = h_old.reshape(S, nh_cap, d_in)
         h_old[~live_h] = 0.0
-        h_new = bufs.take("h_new", S * nh_cap, (d_in,)).reshape(S, nh_cap, d_in)
-        np.copyto(h_new, h_old)
+        h_new = None
+        if self.halo_mode == "psum":
+            h_new = bufs.take("h_new", S * nh_cap,
+                              (d_in,)).reshape(S, nh_cap, d_in)
+            np.copyto(h_new, h_old)
 
         def gather_state(name, blocks):
             d = blocks.shape[2]
@@ -2576,27 +2725,71 @@ class ShardedOffloadBackend(_StreamMeshMixin, _DeferredWritebackMixin, StateBack
             rows[~live_s] = 0.0
             return rows
 
-        return {"h_old": h_old, "h_new": h_new,
-                "a": gather_state("a", self.a[l]),
-                "nct": gather_state("nct", self.nct[l]),
-                "h_cur": gather_state("h_cur", self.h[l + 1])}
+        out = {"h_old": h_old,
+               "a": gather_state("a", self.a[l]),
+               "nct": gather_state("nct", self.nct[l]),
+               "h_cur": gather_state("h_cur", self.h[l + 1])}
+        if h_new is not None:
+            out["_h_new"] = h_new
+        return out
 
     def _layer_exec(self, l: int, tr: HybridLayerPlan, staged,
-                    prev_rows: np.ndarray, prev_new: np.ndarray):
-        """Patch the staged new-view rows, ship one sharded device_put
-        (each device receives only its slice), one shard_map'd compact
-        layer step."""
+                    prev_rows: np.ndarray, prev_new: np.ndarray,
+                    prev_dev=None):
+        """Patch the new-view rows, ship one sharded device_put (each
+        device receives only its slice), one shard_map'd compact layer
+        step.
+
+        Device-served fast path (``halo_mode != "psum"``): the staged
+        dict carries no ``_h_new`` buffer.  The old view is shipped once
+        and the new view is built on device by scattering the previous
+        layer's resident stacked outputs into the plan-time
+        ``patch_pos``/``patch_src`` positions — halo rows are pristine
+        by the gather contract (the previous layer's local scatter never
+        writes remote-owned rows), so the unpatched positions already
+        hold the correct old=new values."""
         S, nh_cap = self.S, tr.nh_cap
         live_h, live_s = tr.need_mask, tr.srows_mask
-        h_old_rows, h_new_rows = staged["h_old"], staged["h_new"]
+        h_old_rows = staged["h_old"]
+        a_rows, nct_rows, h_cur_rows = staged["a"], staged["nct"], staged["h_cur"]
+        nh_live = live_h.sum(axis=1)
+        ns_live = live_s.sum(axis=1)
+
+        if self.halo_mode != "psum":
+            with self._acc_lock:
+                self.transfers.rows_up += int(nh_live.sum() + 3 * ns_live.sum())
+                self.transfers.bytes_up += (h_old_rows.nbytes + a_rows.nbytes
+                                            + nct_rows.nbytes + h_cur_rows.nbytes)
+                self.per_shard_rows += nh_live + 3 * ns_live
+            dev = jax.device_put(
+                (h_old_rows, a_rows, nct_rows, h_cur_rows,
+                 tr.idx_sh, tr.flt_sh, tr.msk_sh),
+                self._plan_sh,
+            )
+            (h_old_d, a_d, nct_d, h_cur_d, idx_d, flt_d, msk_d) = dev
+            d_in = h_old_rows.shape[2]
+            h_old_flat = h_old_d.reshape(S * nh_cap, d_in)
+            if tr.patch_pos is not None and tr.patch_pos.size and prev_dev is not None:
+                h_new_flat = h_old_flat.at[tr.patch_pos].set(
+                    prev_dev[tr.patch_src])
+            else:
+                h_new_flat = h_old_flat
+            h_new_d = jax.device_put(h_new_flat.reshape(S, nh_cap, d_in),
+                                     self._plan_sh)
+            self.peak_device_bytes = max(
+                self.peak_device_bytes,
+                sum(int(d.nbytes) for d in dev) + int(h_new_d.nbytes),
+            )
+            return self._step(tr.layout, self._params_dev[l],
+                              h_old_d, h_new_d, a_d, nct_d, h_cur_d,
+                              idx_d, flt_d, msk_d)
+
+        h_new_rows = staged["_h_new"]
         flat_new = h_new_rows.reshape(S * nh_cap, -1)
         _override_rows(flat_new, np.where(live_h, tr.need_h, -1).reshape(-1),
                        prev_rows, prev_new)
         h_new_rows = flat_new.reshape(S, nh_cap, -1)
-        a_rows, nct_rows, h_cur_rows = staged["a"], staged["nct"], staged["h_cur"]
 
-        nh_live = live_h.sum(axis=1)
-        ns_live = live_s.sum(axis=1)
         with self._acc_lock:
             self.transfers.rows_up += int(2 * nh_live.sum() + 3 * ns_live.sum())
             self.transfers.bytes_up += (2 * h_new_rows.nbytes + a_rows.nbytes

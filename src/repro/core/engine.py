@@ -66,13 +66,18 @@ class RTECEngine:
         policy=None,
     ):
         # deferred import: repro.serve.api imports this module at load time
+        from repro.dist.sharding import CommsConfig
         from repro.serve.api import EngineConfig, _alias_deprecated, create_engine
 
         _alias_deprecated("RTECEngine")
+        # fold the loose kwarg into the typed comms config directly: the
+        # alias warning above already covers the deprecation, so the
+        # config path itself must stay silent
         eng = create_engine("device", EngineConfig(
             model=model, graph=graph, x=jnp.asarray(x), params=params,
             store_h=store_h, refresh_every=refresh_every, fused=fused,
-            use_pallas_delta=use_pallas_delta, policy=policy))
+            comms=CommsConfig(use_pallas_delta=use_pallas_delta),
+            policy=policy))
         self._backend, self._orch = eng._backend, eng._orch
 
     # ------------------------------------------------------------------ #

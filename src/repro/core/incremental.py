@@ -54,6 +54,7 @@ from repro.core.affected import (
 )
 from repro.core.full import edge_messages, subset_layer
 from repro.core.operators import GNNModel, Params
+from repro.dist.sharding import rotation_perm
 
 
 def with_scratch(x: jax.Array) -> jax.Array:
@@ -320,11 +321,17 @@ def sharded_step_fn(model: GNNModel, mesh, axis: str):
     State lives as stacked ``[S, rows_per + 1, ·]`` blocks (one scratch row
     per shard, donated).  Per layer each shard
 
-      1. serves its slice of the replicated frontier row list out of its
-         local previous-layer block and ``lax.psum``s the ``[halo_cap, 2·d]``
-         buffer — the only collective, bounded to frontier rows (remote
-         sources; the dest-independent halo-skip keeps destinations out of
-         it entirely for unconstrained models);
+      1. materializes its ``[halo_cap, 2·d]`` frontier buffer — under
+         ``halo_mode="psum"`` by serving its slice of the replicated
+         frontier row list out of its local previous-layer block and
+         ``lax.psum``-ing (per-device bytes scale with the *global*
+         frontier); under ``halo_mode="ppermute"`` by ``S−1`` rotation
+         rounds of ``lax.ppermute`` over the plan-time per-consumer
+         send/recv schedules (``ShardedPlan.comms_sh``), so each shard
+         sends/receives only the halo rows its consumers actually gather —
+         bitwise-equal to the psum path because psum over the one-hot
+         ownership partition is a select-broadcast of the owner's exact
+         bytes, and positions a shard never gathers may stay zero;
       2. concatenates ``[halo | local]`` into the workspace the plan's
          remapped indices address and runs the unmodified
          :func:`_layer_body` — all scatters are owner-local by construction
@@ -348,18 +355,22 @@ def sharded_step_fn(model: GNNModel, mesh, axis: str):
         msk_rep: jax.Array,  # bool  [feat_cap] replicated
         feat_vals: jax.Array,  # [feat_cap, d0] replicated ([0, d0] if unused)
         pallas_sh=(),  # per-layer stacked (perm, dloc, brows) triples, or ()
+        comms_sh=(),  # per-layer (send_pos, recv_pos) [S, S-1, pair_cap], or ()
     ):
         idx_sl, flt_sl, msk_sl, halo_sl, _ = sharded_layout_slices(slayout)
         rows_per = slayout.rows_per
+        S = slayout.n_shards
         use_pallas = slayout.pallas_ecaps is not None
+        use_ppermute = slayout.halo_mode == "ppermute"
 
         def local(prm, h_bl, a_bl, nct_bl, idx_s, flt_s, msk_s, idx_r, msk_r,
-                  fvals, pal):
+                  fvals, pal, comms):
             h_bl = [h[0] for h in h_bl]  # shard-local views [rows_per+1, ·]
             a_bl = [a[0] for a in a_bl]
             nct_bl = [c[0] for c in nct_bl]
             idx_s, flt_s, msk_s = idx_s[0], flt_s[0], msk_s[0]
             pal = tuple(tuple(x[0] for x in tr) for tr in pal)
+            comms = tuple((sp_[0], rp_[0]) for sp_, rp_ in comms)
             lo = lax.axis_index(axis) * rows_per
 
             h0_old = h_bl[0]
@@ -377,12 +388,32 @@ def sharded_step_fn(model: GNNModel, mesh, axis: str):
             as_, ncts = [], []
             for l in range(len(slayout.caps)):
                 # ---- halo exchange: frontier source rows only ----
-                halo_rows = idx_r[halo_sl[l]]  # global ids, pad → -1
-                own = (halo_rows >= lo) & (halo_rows < lo + rows_per)
-                pos = jnp.where(own, halo_rows - lo, rows_per)
-                cat = jnp.concatenate([h_prev_old[pos], h_prev_new[pos]], axis=1)
-                halo = lax.psum(jnp.where(own[:, None], cat, 0.0), axis)
                 d_prev = h_prev_old.shape[1]
+                halo_cap = slayout.caps[l][5]
+                if use_ppermute and S > 1:
+                    # per-consumer rotation rounds: round k moves pair
+                    # (owner j → consumer (j+k) mod S); send pads gather
+                    # the scratch row, recv pads land in the dump row
+                    # (index halo_cap, sliced off).  Positions no consumer
+                    # receives stay zero — this shard never gathers them.
+                    send_pos, recv_pos = comms[l]
+                    buf = jnp.zeros((halo_cap + 1, 2 * d_prev),
+                                    h_prev_old.dtype)
+                    for k in range(1, S):
+                        perm = rotation_perm(S, k)
+                        sp_ = send_pos[k - 1]
+                        cat = jnp.concatenate(
+                            [h_prev_old[sp_], h_prev_new[sp_]], axis=1)
+                        rec = lax.ppermute(cat, axis, perm)
+                        buf = buf.at[recv_pos[k - 1]].set(rec)
+                    halo = buf[:halo_cap]
+                else:
+                    halo_rows = idx_r[halo_sl[l]]  # global ids, pad → -1
+                    own = (halo_rows >= lo) & (halo_rows < lo + rows_per)
+                    pos = jnp.where(own, halo_rows - lo, rows_per)
+                    cat = jnp.concatenate(
+                        [h_prev_old[pos], h_prev_new[pos]], axis=1)
+                    halo = lax.psum(jnp.where(own[:, None], cat, 0.0), axis)
                 ws_old = jnp.concatenate([halo[:, :d_prev], h_prev_old], axis=0)
                 ws_new = jnp.concatenate([halo[:, d_prev:], h_prev_new], axis=0)
 
@@ -420,12 +451,12 @@ def sharded_step_fn(model: GNNModel, mesh, axis: str):
         fn = shard_map(
             local,
             mesh=mesh,
-            in_specs=(rep, sh, sh, sh, sh, sh, sh, rep, rep, rep, sh),
+            in_specs=(rep, sh, sh, sh, sh, sh, sh, rep, rep, rep, sh, sh),
             out_specs=(sh, sh, sh),
             check_rep=False,
         )
         return fn(params, h_blocks, a_blocks, nct_blocks, idx_sh, flt_sh, msk_sh,
-                  idx_rep, msk_rep, feat_vals, pallas_sh)
+                  idx_rep, msk_rep, feat_vals, pallas_sh, comms_sh)
 
     return step
 

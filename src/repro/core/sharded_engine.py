@@ -15,10 +15,17 @@ incremental workflow runs as one donated, shard_map'd L-layer step per batch
 * **Owner-local scatters** — records are partitioned by destination-row
   owner, so every state scatter is local; only previous-layer *source*
   embeddings cross shards.
-* **Frontier-bounded collective** — one ``psum`` of the per-layer halo
-  buffer (remote source rows only); the dest-independent halo-skip
-  (EXPERIMENTS.md §Perf) keeps destination embeddings out of it entirely
-  for unconstrained models.
+* **Collective-minimal halo exchange** — governed by the typed
+  :class:`~repro.dist.sharding.CommsConfig` (ISSUE 10).  ``"ppermute"``
+  (the multi-shard default under ``"auto"``) moves each halo row from its
+  owner to exactly the consumers whose frontier references it, via
+  plan-time ``lax.ppermute`` send/recv schedules padded to
+  hysteresis-bucketed per-pair capacities; ``"psum"`` keeps the legacy
+  one-collective broadcast of the per-layer halo buffer.  Both are
+  bitwise-equal; the dest-independent halo-skip (EXPERIMENTS.md §Perf)
+  keeps destination embeddings out of either path for unconstrained
+  models, and ``StreamStats.comms_halo_rows_sent`` /
+  ``comms_halo_bytes`` count the traffic.
 * **Plan/execute overlap + hysteresis** — :meth:`apply_stream` plans (and
   partitions) batch t+1 on the host while the devices run batch t, and
   per-field high-water-mark buckets (:class:`BucketHysteresis`) keep the
@@ -67,13 +74,18 @@ class ShardedRTECEngine:
         policy=None,
     ):
         # deferred import: repro.serve.api imports this module at load time
+        from repro.dist.sharding import CommsConfig
         from repro.serve.api import EngineConfig, _alias_deprecated, create_engine
 
         _alias_deprecated("ShardedRTECEngine")
+        # fold the loose kwarg into the typed comms config directly: the
+        # alias warning above already covers the deprecation, so the
+        # config path itself must stay silent
         eng = create_engine("sharded", EngineConfig(
             model=model, graph=graph, x=x, params=params, mesh=mesh,
             num_shards=num_shards, shcfg=shcfg, refresh_every=refresh_every,
-            use_pallas_delta=use_pallas_delta, policy=policy))
+            comms=CommsConfig(use_pallas_delta=use_pallas_delta),
+            policy=policy))
         self._backend, self._orch = eng._backend, eng._orch
 
     # ------------------------------------------------------------------ #

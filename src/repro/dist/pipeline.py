@@ -19,6 +19,8 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.dist.sharding import rotation_perm
+
 
 def sequential_reference(block: Callable[[Any, jax.Array], jax.Array],
                          params, x: jax.Array) -> jax.Array:
@@ -76,7 +78,7 @@ def pipeline_apply(
     def run(local_params, xs_all):
         idx = lax.axis_index(stage_axis)
         stage_params = jax.tree.map(lambda a: a[0], local_params)
-        fwd = [(i, (i + 1) % num_stages) for i in range(num_stages)]
+        fwd = rotation_perm(num_stages)  # stage -> stage+1 each tick
 
         def tick(t, carry):
             state, out_buf = carry

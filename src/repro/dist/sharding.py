@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Dict, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
@@ -66,6 +66,72 @@ class ShardingConfig:
             # data axes (the sharded RTEC engine's [S, rows_per+1, ·] blocks)
             "graph_rows": dp,
         }
+
+
+#: halo exchange strategies for the row-sharded streaming backends
+_HALO_MODES = ("psum", "ppermute", "auto")
+
+
+@dataclasses.dataclass(frozen=True)
+class CommsConfig:
+    """Halo-exchange strategy for the row-sharded streaming backends.
+
+    ``halo`` — how each layer's frontier halo moves between shards:
+
+    * ``"psum"``     — the legacy global broadcast: every shard contributes
+      its owned halo rows to one ``lax.psum``, so per-device bytes scale
+      with the *global* frontier.
+    * ``"ppermute"`` — plan-time per-consumer partitioning: rotation-round
+      ``lax.ppermute`` schedules deliver each halo row only to the shards
+      that reference it, so traffic scales with each shard's own halo.
+      On the hybrid host-resident backend this also enables the
+      device-served fast path (co-hosted halo rows skip host staging).
+    * ``"auto"``     — resolved once at backend construction: ``ppermute``
+      when the mesh has more than one shard, else ``psum`` (single-shard
+      meshes have no remote halo, so the schedules would be empty).
+
+    ``pair_capacity_hysteresis`` — extra headroom multiplier applied to the
+    per-(owner, consumer) pair capacities before hysteresis bucketing, e.g.
+    ``0.5`` pads each pair table 1.5× above its high-water mark so bursty
+    streams retrace less often.  ``0.0`` (default) buckets the raw sizes.
+
+    ``use_pallas_delta`` — route the sharded delta-scatter through the
+    Pallas kernels (folded in from the old loose ``use_pallas_delta=``
+    constructor kwarg; the kwarg survives as a deprecated alias).
+    """
+
+    halo: str = "auto"
+    pair_capacity_hysteresis: float = 0.0
+    use_pallas_delta: bool = False
+
+    def __post_init__(self):
+        if self.halo not in _HALO_MODES:
+            raise ValueError(
+                f"CommsConfig.halo must be one of {_HALO_MODES}, "
+                f"got {self.halo!r}")
+        if self.pair_capacity_hysteresis < 0:
+            raise ValueError(
+                "CommsConfig.pair_capacity_hysteresis must be >= 0, "
+                f"got {self.pair_capacity_hysteresis!r}")
+
+    def resolve_halo(self, num_shards: int) -> str:
+        """Collapse ``"auto"`` for a concrete mesh size (done once at
+        backend construction so the resolved mode is a static trace key)."""
+        if self.halo != "auto":
+            return self.halo
+        return "ppermute" if num_shards > 1 else "psum"
+
+
+def rotation_perm(num_shards: int, k: int = 1) -> List[Tuple[int, int]]:
+    """(source, destination) pairs for a rotate-by-``k`` ``lax.ppermute``.
+
+    One full exchange over ``S`` shards is ``S - 1`` rotation rounds
+    (``k = 1 .. S-1``); the pair owner→consumer ``(o, c)`` rides round
+    ``(c - o) mod S``.  The GPipe pipeline (:mod:`repro.dist.pipeline`)
+    is the ``k = 1`` special case, the per-consumer halo exchange
+    (:func:`repro.core.affected.shard_plan` with ``halo="ppermute"``)
+    uses all ``S - 1`` rounds."""
+    return [(j, (j + k) % num_shards) for j in range(num_shards)]
 
 
 def _as_tuple(v: MeshAxes) -> Tuple[str, ...]:

@@ -9,10 +9,13 @@ interface over many models):
 * :class:`EngineConfig` — a single dataclass naming every construction
   knob any backend understands (model/params/graph/features, the device
   flags, the typed :class:`~repro.serve.staging.StagingConfig` /
-  :class:`~repro.serve.hotcache.CacheConfig` sub-configs for the
-  host-resident backends, the mesh/shard knobs, the chunk knobs, the
-  execution-policy spec).  Knobs a backend does not consume are simply
-  ignored by it, so one config can drive a backend sweep.
+  :class:`~repro.serve.hotcache.CacheConfig` /
+  :class:`~repro.dist.sharding.CommsConfig` sub-configs, the mesh/shard
+  knobs, the chunk knobs, the execution-policy spec).  Knobs a backend
+  does not consume are simply ignored by it, so one config can drive a
+  backend sweep.  Loose knobs that predate the typed sub-configs
+  (``use_pallas_delta``) survive as deprecated aliases that fold into
+  them with a warning.
 * :func:`create_engine` — ``create_engine(backend, config)`` for
   ``backend`` in :data:`BACKENDS`.  **This is the only documented
   constructor**: it owns the canonical backend + orchestrator assembly
@@ -53,6 +56,7 @@ from repro.core.engine import RTECEngine
 from repro.core.operators import GNNModel, Params
 from repro.core.policy import DEFAULT_CHUNKED_WEIGHT, make_policy
 from repro.core.sharded_engine import ShardedRTECEngine
+from repro.dist.sharding import CommsConfig
 from repro.graph.csr import CSRGraph
 from repro.graph.streaming import UpdateBatch
 from repro.serve.hotcache import CacheConfig, HotRowCache
@@ -87,7 +91,15 @@ class EngineConfig:
     # device backend
     store_h: bool = True
     fused: bool = True
+    #: deprecated — use ``comms=CommsConfig(use_pallas_delta=True)``.
+    #: Kept as a routing alias: ``resolved_comms()`` folds it in (with a
+    #: DeprecationWarning when set) so old configs stay bitwise-equal.
     use_pallas_delta: bool = False
+    #: typed communication config (ISSUE 10): halo-exchange mode for the
+    #: sharded backends ("psum" | "ppermute" | "auto"), the per-pair
+    #: capacity hysteresis for the ppermute schedules, and the Pallas
+    #: delta-aggregation kernel toggle folded in from the old loose knob.
+    comms: Optional[CommsConfig] = None
     # host-resident backends: staging pipeline + device hot-row cache.
     # `staging=None` resolves to StagingConfig(async_enabled=async_staging)
     # (the legacy flag keeps working); an explicit StagingConfig wins.
@@ -143,6 +155,21 @@ class EngineConfig:
         if self.cache is None or not self.cache.enabled:
             return None
         return HotRowCache(self.cache)
+
+    def resolved_comms(self) -> CommsConfig:
+        """The typed :class:`~repro.dist.sharding.CommsConfig` this config
+        resolves to.  An explicit ``comms`` wins; otherwise the legacy
+        ``use_pallas_delta`` flag is folded into a default config (with a
+        DeprecationWarning only when it was actually set — untouched
+        configs stay warning-free)."""
+        if self.comms is not None:
+            return self.comms
+        if self.use_pallas_delta:
+            warnings.warn(
+                "EngineConfig(use_pallas_delta=...) is deprecated; pass "
+                "comms=CommsConfig(use_pallas_delta=True) instead",
+                DeprecationWarning, stacklevel=3)
+        return CommsConfig(use_pallas_delta=self.use_pallas_delta)
 
     def resolved_params(self) -> Sequence[Params]:
         if self.params is not None:
@@ -278,11 +305,12 @@ def create_engine(backend: str, config: EngineConfig):
     params = config.resolved_params()
     policy = config.resolved_policy()
     staging = config.resolved_staging()
+    comms = config.resolved_comms()
     if backend == "device":
         sb = DeviceBackend(
             config.model, params, config.graph, jnp.asarray(config.x),
             store_h=config.store_h, fused=config.fused,
-            use_pallas_delta=config.use_pallas_delta,
+            use_pallas_delta=comms.use_pallas_delta,
         )
         cls = RTECEngine
     elif backend == "offload":
@@ -296,7 +324,7 @@ def create_engine(backend: str, config: EngineConfig):
         sb = ShardBackend(
             config.model, params, config.graph, config.x, mesh=config.mesh,
             num_shards=config.num_shards, shcfg=config.shcfg,
-            use_pallas_delta=config.use_pallas_delta,
+            comms=comms,
         )
         cls = ShardedRTECEngine
     elif backend == "sharded_offload":
@@ -305,6 +333,7 @@ def create_engine(backend: str, config: EngineConfig):
             num_shards=config.num_shards, shcfg=config.shcfg,
             async_staging=staging.async_enabled,
             cache=config.resolved_cache(), staging_depth=staging.depth,
+            comms=comms,
         )
         cls = ShardedOffloadRTECEngine
     elif backend == "chunked":

@@ -20,7 +20,12 @@ Thin facades over the residency-backend architecture
   residency.  Each shard keeps only its own row block host-resident and
   stages a compact per-layer ``[halo | local]`` workspace to its device, so
   HBM footprint scales with the per-shard affected subgraph rather than V —
-  the full NeutronRT GPU-CPU co-processing story at mesh scale.
+  the full NeutronRT GPU-CPU co-processing story at mesh scale.  Under the
+  typed :class:`~repro.dist.sharding.CommsConfig` (ISSUE 10, multi-shard
+  default ``halo="auto"`` → ``"ppermute"``) the new-view workspace is
+  served from the previous layer's device-resident outputs instead of a
+  second host-staged copy, halving the halo bytes that cross the staging
+  pipeline (``StreamStats.comms_halo_rows_sent`` / ``comms_halo_bytes``).
 
 Both engines stage host↔device traffic through an asynchronous
 double-buffered :class:`~repro.serve.staging.HostStagingPipeline` (ISSUE

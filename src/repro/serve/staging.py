@@ -349,10 +349,20 @@ def _worker_loop(pipe_ref: "weakref.ref[HostStagingPipeline]",
 
 
 def _iter_arrays(obj):
+    """Yield the staged ndarrays of a gather payload for byte accounting.
+
+    Dict entries whose key starts with ``"_"`` are *derived* buffers —
+    copies a gather job builds from bytes it already staged (e.g. the
+    hybrid backend's host ``_h_new`` view, a byte-for-byte copy of the
+    ``h_old`` gather).  Counting them would double-charge
+    ``staged_bytes`` for every row staged twice across consecutive
+    layers, so they are skipped."""
     if isinstance(obj, np.ndarray):
         yield obj
     elif isinstance(obj, dict):
-        for v in obj.values():
+        for k, v in obj.items():
+            if isinstance(k, str) and k.startswith("_"):
+                continue
             yield from _iter_arrays(v)
     elif isinstance(obj, (tuple, list)):
         for v in obj:
